@@ -1,0 +1,49 @@
+"""BLAS/LAPACK substrate micro-benchmarks (CPU wall time + derived Gflop/s)
+and the codesign schedule comparison the paper's section 4 predicts."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import blas, lapack
+from repro.core.codesign import optimal_accumulators
+
+
+def _timeit(f, *args, reps=5):
+    f(*args)                                    # compile
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(emit):
+    rng = np.random.default_rng(0)
+    n = 512
+    a = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
+    t = _timeit(jax.jit(blas.dgemm), a, b)
+    emit(f"blas,dgemm,{n}", t * 1e6, "us_per_call")
+    emit(f"blas,dgemm,{n}", 2 * n ** 3 / t / 1e9, "gflops")
+
+    x = jnp.asarray(rng.normal(size=1 << 20).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=1 << 20).astype(np.float32))
+    for sched in ("tree", "sequential", "strided"):
+        f = jax.jit(lambda u, v, s=sched: blas.ddot(u, v, schedule=s,
+                                                    accumulators=optimal_accumulators(1 << 20)))
+        t = _timeit(f, x, y, reps=3)
+        emit(f"blas,ddot_{sched},1M", t * 1e6, "us_per_call")
+
+    m = jnp.asarray(rng.normal(size=(192, 192)).astype(np.float32))
+    for name, f in (("geqrf", jax.jit(lambda z: lapack.geqrf(z, block=32))),
+                    ("getrf", jax.jit(lambda z: lapack.getrf(z, block=32)))):
+        t = _timeit(f, m, reps=3)
+        emit(f"lapack,{name},192", t * 1e3, "ms_per_call")
+    s = m @ m.T + 192 * jnp.eye(192)
+    t = _timeit(jax.jit(lambda z: lapack.potrf(z, block=32)), s, reps=3)
+    emit("lapack,potrf,192", t * 1e3, "ms_per_call")

@@ -1,0 +1,45 @@
+"""Per-architecture op-class census (the paper's section 4 applied to the
+model zoo): hazard ratios + optimal pipe depths per assigned arch, derived
+mechanically from reduced-config train-step jaxprs."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core import jaxpr_census as jc
+from repro.launch.train import reduce_config
+from repro.models import model_zoo as zoo
+
+
+def run(emit):
+    for arch in registry.ARCHS:
+        cfg = reduce_config(registry.get_config(arch), layers=2, d_model=64,
+                            vocab=128, heads=4)
+        cfg = dataclasses.replace(cfg, dtype="float32")
+        params = jax.eval_shape(lambda k: zoo.init(k, cfg),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        batch = {"tokens": jax.ShapeDtypeStruct((2, 32), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((2, 16, cfg.d_model),
+                                                   jnp.float32)
+        if cfg.family == "vlm":
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (2, cfg.num_prefix_tokens, cfg.d_model), jnp.float32)
+
+        def loss(p, bt):
+            logits, aux = zoo.forward(p, bt, cfg)
+            return jnp.sum(logits.astype(jnp.float32)) + aux
+
+        c = jc.census_of(lambda p, bt: jax.grad(
+            lambda pp: loss(pp, bt))(p), params, batch, name=arch)
+        prof = c.to_profile()
+        depths = prof.optimal_depths()
+        for k in ("mul", "add", "div", "sqrt"):
+            if prof.pipes[k].n_i > 0:
+                emit(f"census,{arch},{k}",
+                     prof.pipes[k].n_h / prof.pipes[k].n_i, "hazard_ratio")
+                emit(f"census,{arch},{k}", depths[k], "p_opt")
+        emit(f"census,{arch}", c.flops, "train_flops")

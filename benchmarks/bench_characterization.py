@@ -1,0 +1,29 @@
+"""Paper section 4 (figs 6-8, 10): BLAS/LAPACK characterization table."""
+from __future__ import annotations
+
+from repro.core import characterization as ch
+from repro.core.pipeline_model import OP_CLASSES
+
+
+def run(emit):
+    table = ch.characterization_table(n=100)
+    for routine, row in table.items():
+        for k in OP_CLASSES:
+            r = row[f"NH/NI_{k}"]
+            p = row[f"popt_{k}"]
+            if r or p == p:  # emit present pipes
+                emit(f"char,{routine},{k}", r, "hazard_ratio")
+                emit(f"char,{routine},{k}", p, "p_opt")
+    # fig 6/7: 1000-element inner product, adder pipe optimum per gamma
+    for gamma in (0.2, 0.4, 0.6, 0.8):
+        prof = ch.characterize_ddot(1000, schedule="tree")
+        pp = prof.pipes["add"].replace(gamma=gamma)
+        from repro.core.pipeline_model import p_opt_int
+        emit(f"fig6,gamma={gamma}", p_opt_int(pp), "adder_p_opt")
+    # fig 10: QR sqrt pipe optimum vs hazard ratio
+    for ratio in (0.01, 0.1, 0.2, 0.4, 0.6, 0.8):
+        prof = ch.characterize_dgeqrf(100)
+        pp = prof.pipes["sqrt"]
+        pp = pp.replace(n_h=ratio * pp.n_i)
+        from repro.core.pipeline_model import p_opt_int
+        emit(f"fig10,ratio={ratio}", p_opt_int(pp), "sqrt_p_opt")

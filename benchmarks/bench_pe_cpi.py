@@ -1,0 +1,43 @@
+"""Paper figs 12-13: simulated CPI/TPI vs pipeline depths on the PE.
+
+Fig 12: matrix multiplication, QR, LU with varying adder+multiplier depth.
+Fig 13: QR, LU with varying sqrt+divider depth.
+Matrix size is reduced from the paper's 100x100 (multi-million-instruction
+streams) to 48x48 by default to keep the benchmark minutes-scale on one CPU
+core; pass n=100 for the faithful size.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import isa, pe
+
+
+def run(emit, n: int = 48):
+    depths = [2, 4, 6, 8, 12, 16, 24]
+    streams = {
+        "dgemm": isa.compile_dgemm(n, n, n, unroll=4),
+        "dgeqrf": isa.compile_dgeqrf(n),
+        "dgetrf": isa.compile_dgetrf(n),
+    }
+    for name, stream in streams.items():
+        emit(f"fig12,{name}", stream.n_instructions, "instructions")
+        res = pe.sweep_joint(stream, ["add", "mul"], depths)
+        for r in res:
+            emit(f"fig12,{name},p={r.depths['add']}", r.cpi, "cpi")
+            emit(f"fig12,{name},p={r.depths['add']}", r.tpi, "tpi")
+        best = min(res, key=lambda r: r.tpi)
+        emit(f"fig12,{name}", best.depths["add"], "best_depth_tpi")
+    for name in ("dgeqrf", "dgetrf"):
+        res = pe.sweep_joint(streams[name], ["sqrt", "div"], depths)
+        for r in res:
+            emit(f"fig13,{name},p={r.depths['sqrt']}", r.cpi, "cpi")
+            emit(f"fig13,{name},p={r.depths['sqrt']}", r.tpi, "tpi")
+        best = min(res, key=lambda r: r.tpi)
+        emit(f"fig13,{name}", best.depths["sqrt"], "best_depth_tpi")
+    # enhanced PE (DOT4) vs LAP-PE (FMAC) cycle comparison on GEMM
+    d4 = isa.compile_dgemm(n, n, n, unroll=4, dot4=True)
+    base = {"mul": 5, "add": 4}
+    emit("sec5,dot4_gemm", pe.simulate(d4, base).cycles, "cycles")
+    emit("sec5,scalar_gemm", pe.simulate(streams["dgemm"], base).cycles,
+         "cycles")

@@ -1,0 +1,35 @@
+"""Roofline table reader: aggregates results/dryrun/*.json into the
+EXPERIMENTS.md section-Roofline rows (terms, dominant, useful-flop ratio)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def rows():
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run(emit):
+    rs = rows()
+    if not rs:
+        emit("roofline,missing", 0, f"no dry-run results in {RESULTS}")
+        return
+    for r in rs:
+        tag = f"roofline,{r['arch']},{r['shape']},{r['mesh']}"
+        emit(tag, r["compute_s"] * 1e3, "compute_ms")
+        emit(tag, r["memory_s"] * 1e3, "memory_ms")
+        emit(tag, r["collective_s"] * 1e3, "collective_ms")
+        emit(tag, r["roofline_fraction"], "roofline_fraction")
+        emit(tag, r["useful_flop_ratio"], "useful_flop_ratio")
+        emit(tag, r["bytes_per_device"] / 2 ** 30, "gib_per_device")
+        emit(tag, 1.0 if r["dominant"] == "compute" else
+             (2.0 if r["dominant"] == "memory" else 3.0),
+             f"dominant={r['dominant']}")

@@ -1,0 +1,26 @@
+"""Paper Tables 1-2: synthesis model, efficiency ratios, abstract claims."""
+from __future__ import annotations
+
+from repro.core import synthesis as syn
+
+
+def run(emit):
+    derived = syn.derive_table2()
+    for speed, row in sorted(derived.items(), reverse=True):
+        for k, v in row.items():
+            emit(f"table2,{speed}GHz,{k}", v, "derived")
+    pub = syn.TABLE2_PUBLISHED
+    for speed, (lm, lw, pm, pw) in pub.items():
+        emit(f"table2pub,{speed}GHz,pe_gflops_w", pw, "published")
+    ratios = syn.efficiency_ratios()
+    for metric, per_speed in ratios.items():
+        for speed, r in sorted(per_speed.items(), reverse=True):
+            emit(f"ratio,{metric},{speed}GHz", r, "pe_over_lappe")
+    checks = syn.check_table2()
+    emit("table2,check", max(checks["checked"].values()), "max_rel_err")
+    for k, v in checks["discrepant"].items():
+        emit(f"table2,paper_inconsistency,{k}", v, "rel_err_vs_table1")
+    for design in ("lap-pe", "pe"):
+        for f in (0.2, 0.95, 1.81):
+            emit(f"energy,{design},{f}GHz",
+                 syn.energy_per_flop_pj(design, f), "pJ_per_flop")

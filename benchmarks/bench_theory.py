@@ -1,0 +1,25 @@
+"""Paper figs 2-4: theoretical TPI curves. Emits CSV rows + derived optima."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import pipeline_model as pm
+
+
+def run(emit):
+    # Fig 2: TPI vs workload size
+    for (p, r), (grid, vals) in pm.figure2_curves().items():
+        sat = float(vals[-1])
+        emit(f"fig2,p={p},ratio={r}", sat, "saturated_tpi")
+    # Fig 3: TPI vs depth, varying hazard ratio
+    for r, (grid, vals) in pm.figure3_curves().items():
+        i = int(np.argmin(np.asarray(vals)))
+        emit(f"fig3,ratio={r}", float(grid[i]), "argmin_depth")
+    # Fig 4: TPI vs depth, varying gamma
+    for g, (grid, vals) in pm.figure4_curves().items():
+        i = int(np.argmin(np.asarray(vals)))
+        emit(f"fig4,gamma={g}", float(grid[i]), "argmin_depth")
+    # closed-form optima for the paper's remark sweep
+    for ratio in (0.001, 0.01, 0.1, 0.8):
+        popt = float(pm.p_opt(n_i=1e6, n_h=ratio * 1e6, gamma=0.5))
+        emit(f"eq3,ratio={ratio}", popt, "p_opt")

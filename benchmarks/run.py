@@ -1,0 +1,58 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only name] [--fast]``
+Prints ``name,value,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("theory", "benchmarks.bench_theory"),                # figs 2-4
+    ("characterization", "benchmarks.bench_characterization"),  # figs 6-10
+    ("pe_cpi", "benchmarks.bench_pe_cpi"),                # figs 12-13
+    ("synthesis", "benchmarks.bench_synthesis"),          # tables 1-2
+    ("blas", "benchmarks.bench_blas"),                    # substrate perf
+    ("census", "benchmarks.bench_census"),                # section 4 on zoo
+    ("roofline", "benchmarks.bench_roofline"),            # dry-run reader
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slow PE stream sweeps")
+    args = ap.parse_args()
+
+    def emit(name, value, unit):
+        print(f"{name},{value},{unit}", flush=True)
+
+    failures = []
+    for name, modpath in MODULES:
+        if args.only and name != args.only:
+            continue
+        if args.fast and name in ("pe_cpi", "census"):
+            continue
+        mod = __import__(modpath, fromlist=["run"])
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            if name == "pe_cpi":
+                mod.run(emit, n=32 if args.fast else 48)
+            else:
+                mod.run(emit)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

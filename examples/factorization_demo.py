@@ -1,0 +1,52 @@
+"""LAPACK-on-JAX demo: blocked QR / LU / Cholesky + solver accuracy, with
+the panel/trailing split the paper's section 4.2 characterizes, and the
+jaxpr census run over the factorizations themselves (closing the loop:
+workload -> census -> optimal pipe depths, on the real implementation).
+
+  PYTHONPATH=src python examples/factorization_demo.py [n]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import lapack
+from repro.core import jaxpr_census as jc
+
+n = int(sys.argv[1]) if len(sys.argv) > 1 else 96
+rng = np.random.default_rng(0)
+a = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
+
+print(f"=== blocked QR ({n}x{n}) ===")
+q, r = lapack.qr.qr(a, block=32)
+print(f"  ||QR - A||_max = {float(jnp.max(jnp.abs(q @ r - a))):.2e}")
+print(f"  ||Q'Q - I||_max = {float(jnp.max(jnp.abs(q.T @ q - jnp.eye(n)))):.2e}")
+
+print(f"=== blocked LU w/ partial pivoting ===")
+packed, piv = lapack.getrf(a, block=32)
+rec = lapack.lu_reconstruct(packed, piv)
+print(f"  ||PtLU - A||_max = {float(jnp.max(jnp.abs(rec - a))):.2e}")
+
+print(f"=== blocked Cholesky ===")
+s = a @ a.T + n * jnp.eye(n)
+c = lapack.potrf(s, block=32)
+print(f"  ||LL' - S||_max = {float(jnp.max(jnp.abs(c @ c.T - s))):.2e}")
+
+print(f"=== solve (LU) + least squares (QR) ===")
+b = jnp.asarray(rng.normal(size=n).astype(np.float32))
+x = lapack.gesv(a, b)
+print(f"  ||Ax - b||_max = {float(jnp.max(jnp.abs(a @ x - b))):.2e}")
+
+print("=== section-4 census of the real DGEQRF implementation ===")
+cen = jc.census_of(lambda m: lapack.qr.geqrf(m, block=32), a, name="dgeqrf")
+print(jc.report(cen))
+print("-> the sqrt pipe is fully serial (hazard ratio 1.0) while the "
+      "GEMM-dominated mul/add volume dwarfs the O(n^2) div stream - the "
+      "paper's fig. 9/10 structure, measured on the framework's own "
+      "factorization. (The program-order hazard proxy under-detects the "
+      "div chain; the ISA-stream census in benchmarks/bench_pe_cpi.py "
+      "carries the exact dependences.)")

@@ -1,0 +1,16 @@
+"""Batched serving demo: prefill + decode with KV caches over a request
+queue, on a reduced config of an assigned architecture.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch hymba-1.5b
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2-130m --requests 8
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main()

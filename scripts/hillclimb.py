@@ -1,0 +1,50 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb driver: lower one cell under variant configurations and
+print the three roofline terms per variant (EXPERIMENTS.md §Perf).
+
+PYTHONPATH=src python scripts/hillclimb.py <arch> <shape> <variant.json>...
+where variant.json is e.g. '{"name":"dots","overrides":{"remat_policy":"dots"}}'
+Results append to results/hillclimb/<arch>__<shape>__<name>.json.
+"""
+import json
+import sys
+
+from repro.launch import dryrun
+from repro.launch.mesh import make_production_mesh
+from repro.core import roofline as rl
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    variants = [json.loads(v) for v in sys.argv[3:]] or [
+        {"name": "baseline"}]
+    mesh = make_production_mesh(multi_pod=False)
+    os.makedirs("results/hillclimb", exist_ok=True)
+    for v in variants:
+        name = v.get("name", "variant")
+        path = f"results/hillclimb/{arch}__{shape}__{name}.json"
+        if os.path.exists(path):
+            print(f"CACHED {name}")
+            with open(path) as f:
+                d = json.load(f)
+        else:
+            print(f"LOWER {arch} x {shape} [{name}] ...", flush=True)
+            kw = dict(v)
+            kw.pop("name", None)
+            compiled, row = dryrun.lower_cell(arch, shape, mesh, **kw)
+            d = row.to_dict()
+            with open(path, "w") as f:
+                json.dump(d, f, indent=1)
+            import gzip
+            with gzip.open(path.replace(".json", ".hlo.gz"), "wt") as f:
+                f.write(compiled.as_text())
+        print(f"  [{name:24s}] compute={d['compute_s']*1e3:9.2f}ms "
+              f"memory={d['memory_s']*1e3:9.2f}ms "
+              f"coll={d['collective_s']*1e3:9.2f}ms dom={d['dominant']:10s} "
+              f"frac={d['roofline_fraction']:.4f} "
+              f"useful={d['useful_flop_ratio']:.3f} "
+              f"GiB/dev={d['bytes_per_device']/2**30:.2f}", flush=True)
+
+if __name__ == "__main__":
+    main()

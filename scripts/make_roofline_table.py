@@ -1,0 +1,62 @@
+"""Render the EXPERIMENTS.md roofline table from results/dryrun/*.json.
+
+PYTHONPATH=src python scripts/make_roofline_table.py [results/dryrun]
+"""
+import glob
+import json
+import os
+import sys
+
+from repro.core.roofline import Roofline, advice, load_json  # noqa: E402
+
+V5E_HBM = 16 * 2 ** 30
+
+
+def rows(d):
+    out = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt(rs, mesh):
+    sel = [r for r in rs if r["mesh"] == mesh]
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful ratio | roofline frac | GiB/dev | fits v5e |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(sel, key=lambda r: (r["arch"], r["shape"])):
+        gib = r["bytes_per_device"] / 2 ** 30
+        fits = "yes" if r["bytes_per_device"] <= V5E_HBM else "**NO**"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['model_flops']:.3e} | "
+            f"{r['useful_flop_ratio']:.3f} | {r['roofline_fraction']:.3f} | "
+            f"{gib:.2f} | {fits} |")
+    return "\n".join(lines)
+
+
+def advice_lines(rs, mesh):
+    sel = [r for r in rs if r["mesh"] == mesh]
+    out = []
+    for r in sorted(sel, key=lambda x: (x["arch"], x["shape"])):
+        ro = Roofline(**{k: r[k] for k in
+                         ("arch", "shape", "mesh", "chips", "hlo_flops",
+                          "hlo_bytes", "coll_bytes", "coll_breakdown",
+                          "model_flops", "bytes_per_device", "extra")})
+        out.append(f"* **{r['arch']} × {r['shape']}** — {advice(ro)}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    rs = rows(d)
+    print("### Single-pod (16×16 = 256 chips) — baseline, every defined cell\n")
+    print(fmt(rs, "data16xmodel16"))
+    print("\n### Multi-pod (2×16×16 = 512 chips)\n")
+    print(fmt(rs, "pod2xdata16xmodel16"))
+    print("\n### Per-cell bottleneck advice (single-pod)\n")
+    print(advice_lines(rs, "data16xmodel16"))

@@ -1,0 +1,47 @@
+"""Re-derive roofline rows from the saved .hlo.gz artifacts (no recompile).
+
+PYTHONPATH=src python scripts/reanalyze.py results/dryrun
+"""
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.core import hlo_cost
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    for jpath in sorted(glob.glob(os.path.join(d, "*.json"))):
+        hpath = jpath.replace(".json", ".hlo.gz")
+        if not os.path.exists(hpath):
+            continue
+        with open(jpath) as f:
+            row = json.load(f)
+        with gzip.open(hpath, "rt") as f:
+            hlo = f.read()
+        c = hlo_cost.analyze(hlo)
+        row["hlo_flops"] = c.flops
+        row["hlo_bytes"] = c.bytes_fused       # TPU-fusion traffic model
+        row.setdefault("extra", {})["bytes_unfused"] = c.bytes
+        row["coll_breakdown"] = {k: int(v) for k, v in c.coll.items()}
+        row["coll_bytes"] = float(c.collective_bytes)
+        # recompute derived fields
+        from repro.core.roofline import Roofline
+        r = Roofline(**{k: row[k] for k in
+                        ("arch", "shape", "mesh", "chips", "hlo_flops",
+                         "hlo_bytes", "coll_bytes", "coll_breakdown",
+                         "model_flops", "bytes_per_device", "extra")})
+        row.update(compute_s=r.compute_s, memory_s=r.memory_s,
+                   collective_s=r.collective_s, dominant=r.dominant,
+                   useful_flop_ratio=r.useful_flop_ratio,
+                   roofline_fraction=r.roofline_fraction,
+                   step_time_s=r.step_time_s)
+        with open(jpath, "w") as f:
+            json.dump(row, f, indent=1)
+        print(f"reanalyzed {os.path.basename(jpath)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Level-1 BLAS in JAX (the paper's section-4.1 workloads).
+
+dtype-generic (the 'd' prefix is kept for LAPACK fidelity). ``ddot`` exposes
+the *schedule* knob the paper's analysis is about: tree / sequential /
+strided-U reductions produce identical values (up to FP reassociation) with
+very different dependence structure; the strided form with U =
+``codesign.optimal_accumulators`` is the TPU-codesign schedule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ddot(x: jnp.ndarray, y: jnp.ndarray, schedule: str = "tree",
+         accumulators: int = 8) -> jnp.ndarray:
+    """Inner product with an explicit reduction schedule.
+
+    * 'tree'       - jnp.sum (XLA's tree reduce)
+    * 'sequential' - a single running sum (the fully serial hazard chain)
+    * 'strided'    - U parallel partial sums + small combine (the paper's
+                     depth-p pipeline realized as software ILP)
+    """
+    prods = x * y
+    if schedule == "tree":
+        return jnp.sum(prods)
+    if schedule == "sequential":
+        return lax.scan(lambda c, v: (c + v, None), jnp.zeros((), x.dtype),
+                        prods)[0]
+    if schedule == "strided":
+        u = max(1, int(accumulators))
+        n = prods.shape[0]
+        pad = (-n) % u
+        p = jnp.pad(prods, (0, pad)).reshape(-1, u)
+        # each column is one accumulator chain; final tree over U partials
+        partials = lax.scan(lambda c, row: (c + row, None),
+                            jnp.zeros((u,), x.dtype), p)[0]
+        return jnp.sum(partials)
+    raise ValueError(schedule)
+
+
+def daxpy(alpha, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """y <- alpha*x + y."""
+    return alpha * x + y
+
+
+def dscal(alpha, x: jnp.ndarray) -> jnp.ndarray:
+    return alpha * x
+
+
+def dnrm2(x: jnp.ndarray) -> jnp.ndarray:
+    """Euclidean norm with overflow-safe scaling (reference-BLAS style)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax, 1.0)
+    return scale * jnp.sqrt(jnp.sum((x / scale) ** 2))
+
+
+def dasum(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(jnp.abs(x))
+
+
+def idamax(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(jnp.abs(x))
+
+
+def drot(x, y, c, s):
+    """Givens rotation applied to a vector pair."""
+    return c * x + s * y, c * y - s * x

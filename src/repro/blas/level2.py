@@ -1,0 +1,43 @@
+"""Level-2 BLAS in JAX."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def dgemv(a: jnp.ndarray, x: jnp.ndarray, beta=0.0, y=None,
+          alpha=1.0, trans: bool = False) -> jnp.ndarray:
+    """y <- alpha*op(A) x + beta*y."""
+    ax = (a.T if trans else a) @ x
+    out = alpha * ax
+    if y is not None:
+        out = out + beta * y
+    return out
+
+
+def dger(alpha, x: jnp.ndarray, y: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """A <- alpha * x y^T + A (rank-1 update)."""
+    return a + alpha * jnp.outer(x, y)
+
+
+def dtrsv(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
+          unit_diag: bool = False) -> jnp.ndarray:
+    """Solve op(T) x = b for triangular T via a row-sequential scan.
+
+    The sequential dependence (x_i needs all earlier x_j) is the paper's
+    divider-pipe hazard chain: one divide per row, each waiting on the
+    previous row's substitution.
+    """
+    n = a.shape[0]
+    order = jnp.arange(n) if lower else jnp.arange(n - 1, -1, -1)
+    diag = jnp.diagonal(a)
+    strict = a - jnp.diag(diag)
+
+    def body(x, i):
+        s = b[i] - strict[i] @ x
+        xi = s if unit_diag else s / diag[i]
+        return x.at[i].set(xi), None
+
+    x0 = jnp.zeros_like(b)
+    x, _ = lax.scan(body, x0, order)
+    return x

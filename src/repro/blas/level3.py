@@ -1,0 +1,87 @@
+"""Level-3 BLAS in JAX, with Pallas-kernel dispatch for the GEMM hot spot.
+
+``dgemm`` is the routine the whole paper orbits (every LAPACK trailing update
+lowers to it); ``use_kernel=True`` routes through the Pallas MXU kernel whose
+tiling comes from :func:`repro.core.codesign.plan_gemm`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def dgemm(a: jnp.ndarray, b: jnp.ndarray, c: Optional[jnp.ndarray] = None,
+          alpha=1.0, beta=0.0, use_kernel: bool = False,
+          interpret: bool = True) -> jnp.ndarray:
+    """C <- alpha * A B + beta * C."""
+    if use_kernel:
+        from repro.kernels import ops  # local import: kernels are optional
+        ab = ops.gemm(a, b, interpret=interpret)
+    else:
+        ab = a @ b
+    out = alpha * ab
+    if c is not None:
+        out = out + beta * c
+    return out
+
+
+def dsyrk(a: jnp.ndarray, c: Optional[jnp.ndarray] = None, alpha=1.0,
+          beta=0.0, lower: bool = True) -> jnp.ndarray:
+    """C <- alpha A A^T + beta C, triangular part referenced."""
+    full = alpha * (a @ a.T)
+    if c is not None:
+        full = full + beta * c
+    n = full.shape[0]
+    i, j = jnp.mgrid[0:n, 0:n]
+    mask = (i >= j) if lower else (i <= j)
+    return jnp.where(mask, full, full.T)
+
+
+def dtrsm(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
+          unit_diag: bool = False, left: bool = True,
+          block: int = 64) -> jnp.ndarray:
+    """Solve op(T) X = B (left=True) or X op(T) = B, T triangular, blocked.
+
+    Diagonal blocks use the sequential substitution scan (the serial divider
+    chain); off-diagonal updates are GEMMs - the paper's panel/trailing
+    structure in miniature.
+    """
+    if not left:
+        # X T = B  <=>  T^T X^T = B^T
+        return dtrsm(a.T, b.T, lower=not lower, unit_diag=unit_diag,
+                     left=True, block=block).T
+    n = a.shape[0]
+    if n <= block:
+        return _trsm_unblocked(a, b, lower=lower, unit_diag=unit_diag)
+    blocks = list(range(0, n, block))
+    x = jnp.zeros_like(b)
+    order = blocks if lower else blocks[::-1]
+    for i0 in order:
+        i1 = min(i0 + block, n)
+        rhs = b[i0:i1]
+        if lower and i0 > 0:
+            rhs = rhs - a[i0:i1, :i0] @ x[:i0]
+        elif not lower and i1 < n:
+            rhs = rhs - a[i0:i1, i1:] @ x[i1:]
+        xi = _trsm_unblocked(a[i0:i1, i0:i1], rhs, lower=lower,
+                             unit_diag=unit_diag)
+        x = x.at[i0:i1].set(xi)
+    return x
+
+
+def _trsm_unblocked(a: jnp.ndarray, b: jnp.ndarray, lower: bool,
+                    unit_diag: bool) -> jnp.ndarray:
+    n = a.shape[0]
+    order = jnp.arange(n) if lower else jnp.arange(n - 1, -1, -1)
+    diag = jnp.diagonal(a)
+    strict = a - jnp.diag(diag)
+
+    def body(x, i):
+        s = b[i] - strict[i] @ x
+        xi = s if unit_diag else s / diag[i]
+        return x.at[i].set(xi), None
+
+    x, _ = lax.scan(body, jnp.zeros_like(b), order)
+    return x

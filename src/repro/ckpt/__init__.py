@@ -1,0 +1,2 @@
+from repro.ckpt import checkpoint
+from repro.ckpt.manager import CheckpointManager

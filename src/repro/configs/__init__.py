@@ -1,0 +1,2 @@
+from repro.configs.registry import (ARCHS, SHAPES, all_cells, cell_supported,
+                                    get_config, input_specs)

@@ -1,0 +1,19 @@
+"""repro.core - the paper's contribution.
+
+Analytical pipeline-depth model (eqs 1-7), BLAS/LAPACK workload
+characterization, the configurable-depth PE simulator, the synthesis model
+(Tables 1-2), and the TPU codesign adaptation.
+"""
+from repro.core import characterization, codesign, isa, jaxpr_census, pe
+from repro.core import pipeline_model, roofline, synthesis
+from repro.core.characterization import (WorkloadProfile, characterize_ddot,
+                                         characterize_dgemm,
+                                         characterize_dgemv,
+                                         characterize_dgeqrf,
+                                         characterize_dgetrf,
+                                         characterize_dpotrf)
+from repro.core.codesign import (optimal_accumulators, plan_attention,
+                                 plan_gemm, plan_ssd)
+from repro.core.jaxpr_census import census_of
+from repro.core.pipeline_model import PipeParams, p_opt, p_opt_int, tpi
+from repro.core.roofline import Roofline, collective_bytes, from_compiled

@@ -1,0 +1,240 @@
+"""TPU adaptation of the paper's codesign methodology.
+
+The paper picks RTL pipeline register counts from a workload model. On TPU
+the hardware pipelines are fixed, but the *same equation* governs three
+software-visible micro-architectural knobs, and this module sets them
+analytically (DESIGN.md section 2 maps each one):
+
+1. **Accumulator count U** for reduction loops. A dependent FP-add chain on
+   the VPU exposes the add latency L exactly like an under-filled pipeline;
+   U parallel partial sums fill the latency window like p pipeline slots.
+   The cost of a length-n reduction with U accumulators is
+
+       t(U) = n * max(1, L/U) + L * ceil(log2 U) + c_o * U
+
+   (steady-state issue, final combine tree, bookkeeping/register overhead) -
+   eq. 2's three terms with p -> U, t_p -> L, t_o -> c_o; the unconstrained
+   minimum sits at U ~ L, the paper's p_opt once hazards saturate.
+
+2. **Pallas block shapes.** The HBM->VMEM grid pipeline is a software
+   pipeline: its "depth" is the grid length, its "latch overhead" the
+   per-step DMA setup. Fig. 2's saturation (small workloads never amortize
+   pipeline fill) becomes: choose blocks so the grid has enough steps to
+   reach steady state, subject to VMEM capacity and MXU alignment.
+
+3. **Collective schedule depth** (number of microbatch chunks overlapping
+   compute with reduce-scatter) - same fill/overhead trade-off; used by
+   train/grad.py.
+
+Hardware constants target TPU v5e and are recorded here as assumptions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+# ----------------------------- TPU v5e constants ---------------------------
+PEAK_BF16_FLOPS = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (task constants)
+VMEM_BYTES = 96 * 2 ** 20         # usable VMEM budget we plan against
+MXU = 128                         # systolic array edge
+SUBLANE = 8                       # VPU sublanes (fp32)
+LANE = 128                        # VPU lanes
+VPU_ADD_LATENCY = 6               # cycles, dependent-add chain (assumption)
+VREG_BUDGET = 64                  # architectural vector registers
+ACC_OVERHEAD = 0.75               # c_o: issue slots of bookkeeping per extra
+                                  # accumulator (loop counters, final moves)
+
+
+def reduction_cost(n: float, u: int, latency: float = VPU_ADD_LATENCY,
+                   overhead: float = ACC_OVERHEAD) -> float:
+    """Issue-slot cost of reducing n elements with u parallel accumulators."""
+    u = max(1, int(u))
+    steady = n * max(1.0, latency / u)
+    combine = latency * math.ceil(math.log2(u)) if u > 1 else 0.0
+    return steady + combine + overhead * u
+
+
+def optimal_accumulators(n: float, latency: float = VPU_ADD_LATENCY,
+                         overhead: float = ACC_OVERHEAD,
+                         max_u: int = VREG_BUDGET // 2,
+                         power_of_two: bool = True) -> int:
+    """U minimizing :func:`reduction_cost` - the eq.-3 analogue on TPU.
+
+    For large n the optimum is U ~ latency (fill the add pipe); for tiny n
+    the combine tree + overhead terms pull it back - same shape as the
+    paper's fig. 3 curves.
+    """
+    candidates = range(1, max_u + 1)
+    if power_of_two:
+        candidates = [1 << k for k in range(0, max_u.bit_length()) if (1 << k) <= max_u]
+    best = min(candidates, key=lambda u: reduction_cost(n, u, latency, overhead))
+    return int(best)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _round_down_pow2(x: int) -> int:
+    return 1 << max(x.bit_length() - 1, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    """Pallas GEMM tiling picked by the model."""
+
+    bm: int
+    bn: int
+    bk: int
+    accumulators: int             # U for the k-loop partials
+    grid: Tuple[int, int, int]
+    vmem_bytes: int
+    arithmetic_intensity: float   # flops / HBM byte at this tiling
+
+    @property
+    def compute_bound(self) -> bool:
+        return self.arithmetic_intensity >= PEAK_BF16_FLOPS / HBM_BW
+
+
+def plan_gemm(m: int, n: int, k: int, dtype_bytes: int = 2,
+              vmem_budget: int = VMEM_BYTES,
+              min_grid_steps: int = 4) -> GemmPlan:
+    """Choose (bm, bn, bk) for C[m,n] += A[m,k] B[k,n] on the MXU.
+
+    Policy (each clause is one paper concept):
+      * MXU alignment: all block dims multiples of 128 (clamped to the
+        padded problem) - systolic-array full-tile occupancy.
+      * VMEM capacity: A-, B-blocks double-buffered + fp32 accumulator block
+        must fit the budget - the RF/LM capacity constraint of the PE/APE.
+      * Grid length >= min_grid_steps so the HBM->VMEM software pipeline
+        reaches steady state (fig. 2 saturation).
+      * Maximize bm*bn (arithmetic intensity ~ harmonic mean of block dims),
+        then bk.
+    """
+    pm, pn, pk = (_round_up(max(d, 1), MXU) for d in (m, n, k))
+    best: Optional[GemmPlan] = None
+    cands = [128, 256, 512, 1024]
+    for bm in cands:
+        if bm > pm and bm != MXU:
+            continue
+        for bn in cands:
+            if bn > pn and bn != MXU:
+                continue
+            for bk in (512, 1024, 2048, 256, 128):
+                if bk > pk and bk != MXU:
+                    continue
+                bm_, bn_, bk_ = min(bm, pm), min(bn, pn), min(bk, pk)
+                # double-buffered A and B blocks + fp32 C accumulator
+                vmem = 2 * (bm_ * bk_ + bk_ * bn_) * dtype_bytes + bm_ * bn_ * 4
+                if vmem > vmem_budget:
+                    continue
+                # grid covers the block-padded problem (kernel pads inputs
+                # to block multiples, not just MXU multiples)
+                grid = (-(-m // bm_), -(-n // bn_), -(-k // bk_))
+                steps = grid[0] * grid[1] * grid[2]
+                if steps < min_grid_steps and (bm_, bn_, bk_) != (MXU, MXU, MXU):
+                    continue
+                ai = (2 * bm_ * bn_ * bk_) / ((bm_ * bk_ + bk_ * bn_) * dtype_bytes
+                                              + bm_ * bn_ * dtype_bytes / max(grid[2], 1))
+                cand = GemmPlan(bm_, bn_, bk_,
+                                optimal_accumulators(bk_ // MXU, max_u=8),
+                                grid, vmem, ai)
+                key = (cand.arithmetic_intensity, bk_)
+                if best is None or key > (best.arithmetic_intensity, best.bk):
+                    best = cand
+    if best is None:  # degenerate tiny problem: single MXU tile
+        bm_, bn_, bk_ = min(MXU, pm), min(MXU, pn), min(MXU, pk)
+        vmem = 2 * (bm_ * bk_ + bk_ * bn_) * dtype_bytes + bm_ * bn_ * 4
+        ai = (2 * bm_ * bn_ * bk_) / ((bm_ * bk_ + bk_ * bn_ + bm_ * bn_) * dtype_bytes)
+        best = GemmPlan(bm_, bn_, bk_, 1,
+                        (-(-m // bm_), -(-n // bn_), -(-k // bk_)), vmem, ai)
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionPlan:
+    """Flash-attention tiling: KV blocks stream through VMEM; the online
+    softmax running (m, l, o) triple is the dependent accumulator chain."""
+
+    block_q: int
+    block_k: int
+    grid_kv: int
+    vmem_bytes: int
+
+
+def plan_attention(seq_q: int, seq_k: int, head_dim: int,
+                   dtype_bytes: int = 2,
+                   vmem_budget: int = VMEM_BYTES) -> AttentionPlan:
+    """KV/Q block sizes for the streaming-softmax kernel.
+
+    The online-softmax rescale is a serial dependence per KV block (the
+    paper's hazard): larger block_k amortizes it (fewer rescales) at the
+    cost of VMEM; block_q adds independent rows (free ILP, like dgemv's
+    independent inner products).
+    """
+    hd = _round_up(head_dim, LANE)
+    block_q = min(_round_up(min(seq_q, 512), SUBLANE), _round_up(seq_q, SUBLANE))
+    block_k = 1024
+    while block_k > 128:
+        # q, k, v blocks (double-buffered k/v) + scores + fp32 o/m/l
+        vmem = (block_q * hd * dtype_bytes + 2 * 2 * block_k * hd * dtype_bytes
+                + block_q * block_k * 4 + block_q * (hd + 2) * 4)
+        if vmem <= vmem_budget:
+            break
+        block_k //= 2
+    block_k = min(block_k, _round_up(seq_k, LANE))
+    vmem = (block_q * hd * dtype_bytes + 2 * 2 * block_k * hd * dtype_bytes
+            + block_q * block_k * 4 + block_q * (hd + 2) * 4)
+    return AttentionPlan(block_q, block_k, -(-seq_k // block_k), vmem)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDPlan:
+    """Mamba-2 SSD chunking: the cross-chunk state recurrence is the serial
+    hazard chain; chunk size trades recurrence steps against the quadratic
+    within-chunk term - the same busy/non-busy split as eq. 1."""
+
+    chunk: int
+    n_chunks: int
+    vmem_bytes: int
+
+
+def plan_ssd(seq: int, heads: int, head_dim: int, state: int,
+             dtype_bytes: int = 2, vmem_budget: int = VMEM_BYTES) -> SSDPlan:
+    """Chunk length for the SSD scan.
+
+    Within-chunk cost ~ c^2 * d (quadratic, parallel); cross-chunk cost is a
+    serial chain of length seq/c with latency ~ state update. Minimizing
+    c^2*d*(seq/c) + (seq/c)*L gives c* ~ sqrt-ish; we clamp to VMEM and
+    hardware alignment, defaulting to the canonical 256 where it fits.
+    """
+    best_c = 256
+    for c in (256, 128, 64):
+        vmem = (c * head_dim * dtype_bytes * 3 + c * c * 4
+                + head_dim * state * 4 + c * state * dtype_bytes * 2)
+        if vmem <= vmem_budget and c <= max(seq, 64):
+            best_c = c
+            break
+    best_c = min(best_c, max(_round_up(seq, SUBLANE), SUBLANE))
+    vmem = (best_c * head_dim * dtype_bytes * 3 + best_c * best_c * 4
+            + head_dim * state * 4 + best_c * state * dtype_bytes * 2)
+    return SSDPlan(best_c, -(-seq // best_c), vmem)
+
+
+def characterize_and_plan(profile) -> Dict[str, object]:
+    """End-to-end: a WorkloadProfile -> TPU kernel knobs.
+
+    The paper's p_opt for the adder pipe becomes the accumulator count; the
+    mul pipe's hazard-freedom means the MXU side has no knob (it is always
+    saturable, the 'flat curve' of section 4.1).
+    """
+    add = profile.pipes.get("add")
+    n = float(add.n_i) if add else 0.0
+    return {
+        "accumulators": optimal_accumulators(max(n, 1.0)),
+        "hazard_ratios": profile.hazard_ratios(),
+        "popt": profile.popt_closed_form(),
+    }

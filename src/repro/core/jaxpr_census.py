@@ -1,0 +1,228 @@
+"""Op-class census of arbitrary jitted functions - the paper's section 4,
+made mechanical.
+
+The paper characterizes ddot/dgemv/dgemm/DGEQRF/DGETRF by hand-counting the
+instructions and dependency hazards per floating-point class {mul, add, sqrt,
+div}. For the model zoo we cannot hand-count 94-layer MoE training steps, so
+this module derives the same parameters from the *jaxpr* of any function:
+
+  * ``N_iI``  - elementwise op counts per class (dot_general/conv unrolled
+    into their mul+add volumes, reductions into adds),
+  * ``N_iH``  - a program-order dependence proxy: elements of an operand
+    produced by the *immediately preceding* equation stall an in-order pipe
+    (back-to-back dependence), plus loop-carried scan dependences which are
+    serial by construction,
+  * ``gamma_i`` - exposure fractions, defaulted per class from the paper's
+    section-4 fits (mul 0.5 / add 0.5 / div 0.8 / sqrt 0.9) since jaxprs
+    carry no timing,
+  * critical path - longest equation chain (unit weight), the DAG depth the
+    paper reads off fig. 5.
+
+The census converts to a :class:`repro.core.characterization.WorkloadProfile`
+so the whole paper pipeline (eq. 7 depths, codesign knobs) applies to every
+architecture in the zoo. Transcendentals (exp/tanh/erf/log), which BLAS and
+LAPACK lack but softmax/GeLU introduce, are counted in an ``exp`` class and
+mapped onto the paper's divider pipe (iterative, long-latency unit) - an
+extension recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+from repro.core.characterization import T_O, T_P, WorkloadProfile
+from repro.core.pipeline_model import PipeParams
+
+CLASSES = ("mul", "add", "div", "sqrt", "exp")
+DEFAULT_GAMMA = {"mul": 0.5, "add": 0.5, "div": 0.8, "sqrt": 0.9, "exp": 0.8}
+
+_ELEMWISE = {
+    "mul": "mul",
+    "add": "add", "sub": "add", "max": "add", "min": "add", "neg": "add",
+    "add_any": "add",
+    "div": "div", "rem": "div",
+    "sqrt": "sqrt", "rsqrt": "sqrt",
+    "exp": "exp", "log": "exp", "tanh": "exp", "logistic": "exp",
+    "erf": "exp", "exp2": "exp", "log1p": "exp", "expm1": "exp",
+    "pow": "exp", "cos": "exp", "sin": "exp",
+}
+_REDUCES = {"reduce_sum": "add", "reduce_max": "add", "reduce_min": "add",
+            "argmax": "add", "argmin": "add", "cumsum": "add",
+            "cumlogsumexp": "exp", "reduce_prod": "mul", "cummax": "add"}
+
+
+def _size(aval) -> float:
+    try:
+        return float(np.prod(aval.shape)) if aval.shape else 1.0
+    except Exception:
+        return 1.0
+
+
+def _dot_general_flops(eqn) -> float:
+    """mul count of a dot_general = prod(batch)*prod(lhs free)*prod(rhs free)*prod(contract)."""
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    batch = math.prod(lhs.shape[d] for d in lb) if lb else 1
+    contract = math.prod(lhs.shape[d] for d in lc) if lc else 1
+    lfree = math.prod(lhs.shape[d] for d in range(len(lhs.shape)) if d not in set(lc) | set(lb))
+    rfree = math.prod(rhs.shape[d] for d in range(len(rhs.shape)) if d not in set(rc) | set(rb))
+    return float(batch * lfree * rfree * contract)
+
+
+@dataclasses.dataclass
+class Census:
+    """Accumulated per-class counts for one traced function."""
+
+    name: str
+    n_i: Dict[str, float]
+    n_h: Dict[str, float]
+    critical_path: float
+    flops: float
+    n_eqns: int
+
+    def hazard_ratios(self) -> Dict[str, float]:
+        return {k: (self.n_h[k] / self.n_i[k] if self.n_i[k] else 0.0)
+                for k in CLASSES}
+
+    def to_profile(self, gamma: Dict[str, float] | None = None) -> WorkloadProfile:
+        """Fold the census into the paper's four-pipe parameter space
+        (``exp`` rides the divider pipe: both are long-latency iterative)."""
+        g = dict(DEFAULT_GAMMA, **(gamma or {}))
+        ni = dict(self.n_i)
+        nh = dict(self.n_h)
+        ni["div"] = ni["div"] + ni.pop("exp")
+        nh["div"] = nh["div"] + nh.pop("exp")
+        pipes = {
+            k: PipeParams(n_i=ni[k], n_h=nh[k], gamma=g[k], t_p=T_P[k], t_o=T_O)
+            for k in ("mul", "add", "div", "sqrt")
+        }
+        return WorkloadProfile(self.name, pipes, flops=self.flops,
+                               critical_path=self.critical_path)
+
+
+def _walk(jaxpr, acc: Census, mult: float, depth_in: Dict[Any, float]) -> float:
+    """Accumulate counts over one (sub)jaxpr; returns the jaxpr's DAG depth."""
+    depth: Dict[Any, float] = dict(depth_in)
+
+    def var_depth(v) -> float:
+        if isinstance(v, jcore.Literal):
+            return 0.0
+        return depth.get(v, 0.0)
+
+    prev_outs: set = set()
+    max_depth = 0.0
+    for eqn in jaxpr.eqns:
+        pname = eqn.primitive.name
+        out_sz = sum(_size(ov.aval) for ov in eqn.outvars)
+        in_depth = max([var_depth(v) for v in eqn.invars], default=0.0)
+        cls = None
+        count = 0.0
+        if pname == "dot_general":
+            muls = _dot_general_flops(eqn) * mult
+            acc.n_i["mul"] += muls
+            acc.n_i["add"] += muls          # one accumulate per product
+            acc.flops += 2 * muls
+            # MXU-style: the k-reduction is a hardware tree; residual hazards
+            # are per output element (one chain join each).
+            acc.n_h["add"] += sum(_size(ov.aval) for ov in eqn.outvars) * mult
+            cls = "mul"
+        elif pname in ("conv_general_dilated",):
+            # treat like a dot over the patch volume
+            out = eqn.outvars[0].aval
+            rhs = eqn.invars[1].aval
+            patch = math.prod(rhs.shape[:-1]) if rhs.shape else 1
+            muls = _size(out) * patch * mult
+            acc.n_i["mul"] += muls
+            acc.n_i["add"] += muls
+            acc.flops += 2 * muls
+            cls = "mul"
+        elif pname in _ELEMWISE:
+            cls = _ELEMWISE[pname]
+            count = out_sz * mult
+            acc.n_i[cls] += count
+            acc.flops += count
+        elif pname in _REDUCES:
+            cls = _REDUCES[pname]
+            in_sz = _size(eqn.invars[0].aval)
+            count = max(in_sz - out_sz, out_sz) * mult
+            acc.n_i[cls] += count
+            acc.flops += count
+            # a reduction is a dependence tree: log2(fan-in) serial levels.
+            fan = max(in_sz / max(out_sz, 1.0), 2.0)
+            acc.n_h[cls] += out_sz * math.log2(fan) * mult
+        elif pname == "integer_pow":
+            cls = "mul"
+            count = out_sz * mult * max(abs(eqn.params.get("y", 2)) - 1, 1)
+            acc.n_i[cls] += count
+            acc.flops += count
+        elif pname in ("scan", "while"):
+            inner = eqn.params.get("jaxpr")
+            length = eqn.params.get("length", 1) if pname == "scan" else 8
+            if inner is not None:
+                sub = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+                body_depth = _walk(sub, acc, mult * length, {})
+                # loop-carried dependences are serial across iterations:
+                n_carry = eqn.params.get("num_carry", 0)
+                carry_sz = sum(_size(v.aval) for v in eqn.invars[:n_carry]) if n_carry else 0.0
+                acc.n_h["add"] += carry_sz * max(length - 1, 0) * mult
+                in_depth += body_depth * length
+        elif pname in ("pjit", "custom_jvp_call", "custom_vjp_call",
+                       "custom_vjp_call_jaxpr", "remat", "remat2",
+                       "checkpoint", "closed_call", "core_call",
+                       "custom_partitioning"):
+            inner = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                     or eqn.params.get("fun_jaxpr"))
+            if inner is not None:
+                sub = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+                in_depth += _walk(sub, acc, mult, {})
+        elif pname == "cond":
+            branches = eqn.params.get("branches", ())
+            if branches:
+                ds = [_walk(b.jaxpr if hasattr(b, "jaxpr") else b, acc,
+                            mult / len(branches), {}) for b in branches]
+                in_depth += max(ds, default=0.0)
+        # back-to-back dependence proxy: operand produced by previous eqn.
+        if cls is not None:
+            if any((not isinstance(v, jcore.Literal)) and v in prev_outs
+                   for v in eqn.invars):
+                acc.n_h[cls] += min(out_sz, 1.0) * mult if count == 0 else count
+        d = in_depth + 1.0
+        for ov in eqn.outvars:
+            depth[ov] = d
+        max_depth = max(max_depth, d)
+        prev_outs = set(ov for ov in eqn.outvars)
+        acc.n_eqns += 1
+    return max_depth
+
+
+def census_of(fn: Callable, *args, name: str | None = None, **kwargs) -> Census:
+    """Trace ``fn`` (abstractly - ShapeDtypeStructs fine) and census it."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    acc = Census(name or getattr(fn, "__name__", "fn"),
+                 {k: 0.0 for k in CLASSES}, {k: 0.0 for k in CLASSES},
+                 0.0, 0.0, 0)
+    acc.critical_path = _walk(closed.jaxpr, acc, 1.0, {})
+    # hazards can't exceed instructions in any class
+    for k in CLASSES:
+        acc.n_h[k] = min(acc.n_h[k], acc.n_i[k])
+    return acc
+
+
+def report(census: Census) -> str:
+    prof = census.to_profile()
+    lines = [f"census[{census.name}]: eqns={census.n_eqns} flops={census.flops:.3e} "
+             f"critical_path={census.critical_path:.0f}"]
+    depths = prof.optimal_depths()
+    for k in CLASSES:
+        if census.n_i[k] <= 0:
+            continue
+        ratio = census.n_h[k] / census.n_i[k]
+        pk = "div" if k == "exp" else k
+        lines.append(f"  {k:>4}: N_I={census.n_i[k]:.3e} N_H/N_I={ratio:.4f} "
+                     f"p_opt={depths.get(pk, float('nan'))}")
+    return "\n".join(lines)

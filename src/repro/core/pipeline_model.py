@@ -1,0 +1,174 @@
+"""The paper's analytical pipeline model (section 3, equations 1-7).
+
+Implements the Hartstein-Puzak-derived time-per-instruction (TPI) model the
+paper builds on, extended per the paper to one pipe per floating-point
+operation class (multiply / add / sqrt / divide), and the closed-form optimal
+pipeline depth.
+
+Notation (paper eq. 2):
+
+    T / N_I = (t_o + gamma * N_H * t_p / N_I)      # depth-independent
+            + (t_p / p)                            # ~ 1/p  (busy time)
+            + (gamma * N_H * t_o * p / N_I)        # ~ p    (hazard penalty)
+
+    p_opt^2 = N_I * t_p / (gamma * N_H * t_o)      # eq. 3
+
+All functions are pure jnp and differentiable, so curves (figures 2-4, 6-8,
+10) are produced by vmapping over parameter grids, and p_opt can also be
+recovered by autodiff as a cross-check (see tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+# The paper's four floating-point instruction classes, K = {M, A, S, D}.
+OP_CLASSES = ("mul", "add", "sqrt", "div")
+
+
+@dataclasses.dataclass(frozen=True)
+class PipeParams:
+    """Parameters of one pipe (one FP operation class) in the model.
+
+    Attributes:
+      n_i:   N_iI, number of instructions issued to this pipe.
+      n_h:   N_iH, number of (dependency) hazards seen by this pipe.
+      gamma: mean fraction of the total pipe delay exposed per hazard
+             (paper: gamma = (1/N_H) * sum beta_h).
+      t_p:   total latch-free logic delay of the unit (seconds or FO4s --
+             the model only needs t_p/t_o consistent).
+      t_o:   per-stage latch overhead for the technology node.
+    """
+
+    n_i: float
+    n_h: float
+    gamma: float
+    t_p: float = 1.0
+    t_o: float = 0.05
+
+    def replace(self, **kw) -> "PipeParams":
+        return dataclasses.replace(self, **kw)
+
+
+def tpi(p, *, n_i, n_h, gamma, t_p=1.0, t_o=0.05):
+    """Time-per-instruction of one pipe at depth ``p`` (paper eq. 2).
+
+    Vectorized: every argument may be an array; standard broadcasting applies.
+    ``n_h == 0`` (the paper's ddot multiplier pipe, gamma -> inf irrelevant)
+    degrades gracefully to the hazard-free ``t_o + t_p / p`` curve.
+    """
+    p = jnp.asarray(p, dtype=jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+    hazard_rate = jnp.where(n_i > 0, n_h / jnp.maximum(n_i, 1), 0.0)
+    fixed = t_o + gamma * hazard_rate * t_p
+    busy = t_p / p
+    penalty = gamma * hazard_rate * t_o * p
+    return fixed + busy + penalty
+
+
+def tpi_pipe(p, params: PipeParams):
+    return tpi(p, n_i=params.n_i, n_h=params.n_h, gamma=params.gamma,
+               t_p=params.t_p, t_o=params.t_o)
+
+
+def total_time(p, params: PipeParams):
+    """Total pipe time T = TPI * N_I (paper eq. 1 split into busy/non-busy)."""
+    return tpi_pipe(p, params) * params.n_i
+
+
+def p_opt(*, n_i, n_h, gamma, t_p=1.0, t_o=0.05):
+    """Closed-form optimal pipeline depth (paper eq. 3 / eq. 7).
+
+    p_opt^2 = N_I * t_p / (gamma * N_H * t_o).
+
+    For hazard-free streams (N_H == 0) the model's optimum is unbounded; we
+    return +inf there (the paper: "for multiplier, [the] theoretical curve
+    ... becomes a flat horizontal line as we increase the pipeline depth").
+    """
+    n_h = jnp.asarray(n_h, dtype=jnp.float32)
+    denom = gamma * n_h * t_o
+    return jnp.where(denom > 0, jnp.sqrt(jnp.asarray(n_i, jnp.float32) * t_p / jnp.maximum(denom, 1e-30)), jnp.inf)
+
+
+def p_opt_pipe(params: PipeParams):
+    return p_opt(n_i=params.n_i, n_h=params.n_h, gamma=params.gamma,
+                 t_p=params.t_p, t_o=params.t_o)
+
+
+def p_opt_int(params: PipeParams, p_min: int = 1, p_max: int = 64) -> int:
+    """Best integer depth in [p_min, p_max] by direct evaluation of eq. 2.
+
+    The paper notes the curve is 'fairly flat around optimum'; for hardware
+    you need an integer, and for hazard-free pipes the deepest allowed depth
+    is returned (monotone improvement).
+    """
+    grid = jnp.arange(p_min, p_max + 1)
+    vals = tpi_pipe(grid, params)
+    return int(grid[int(jnp.argmin(vals))])
+
+
+def tpi_multi(depths: Mapping[str, float], pipes: Mapping[str, PipeParams]):
+    """Aggregate TPI over the four-pipe model (paper eq. 6).
+
+    TPI = sum_i T_i / N_I  with T_i the pipe-i total time. (The paper writes
+    sum_i T_i/N_iI; summing pipe times against the global instruction count
+    gives the machine-level time per instruction, which is what figures 12-13
+    plot as CPI once divided by the cycle time. We expose both.)
+    """
+    n_total = sum(float(p.n_i) for p in pipes.values())
+    total = 0.0
+    for name, pp in pipes.items():
+        if pp.n_i <= 0:
+            continue
+        total = total + total_time(depths[name], pp)
+    return total / max(n_total, 1.0)
+
+
+def throughput(depths: Mapping[str, float], pipes: Mapping[str, PipeParams]):
+    """Stall-free throughput G = sum_i 1/T_i of the k-pipe machine ([10])."""
+    g = 0.0
+    for name, pp in pipes.items():
+        stage_time = pp.t_p / depths[name] + pp.t_o
+        g = g + 1.0 / stage_time
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Figure generators (used by benchmarks + tests; each returns plain arrays)
+# ---------------------------------------------------------------------------
+
+def figure2_curves(p_values=(2, 4, 6, 8),
+                   hazard_ratios=(0.1, 0.01, 0.001),
+                   n_i_grid=None):
+    """Fig. 2 - TPI vs workload size for fixed depths/hazard ratios.
+
+    Returns dict[(p, ratio)] -> (n_i_grid, tpi array). TPI saturates with
+    workload size; deeper pipes saturate to lower TPI (higher frequency).
+    """
+    if n_i_grid is None:
+        n_i_grid = jnp.logspace(2, 7, 64)
+    out = {}
+    for p in p_values:
+        for r in hazard_ratios:
+            out[(p, r)] = (n_i_grid, tpi(p, n_i=n_i_grid, n_h=r * n_i_grid, gamma=0.5))
+    return out
+
+
+def figure3_curves(hazard_ratios=(0.1, 0.01, 0.001, 0.2, 0.4, 0.6, 0.8),
+                   p_grid=None, n_i=1e6):
+    """Fig. 3 - TPI vs pipeline depth for varying hazard ratios."""
+    if p_grid is None:
+        p_grid = jnp.arange(1, 41)
+    return {r: (p_grid, tpi(p_grid, n_i=n_i, n_h=r * n_i, gamma=0.5))
+            for r in hazard_ratios}
+
+
+def figure4_curves(gammas=(0.1, 0.2, 0.4, 0.6, 0.8), p_grid=None,
+                   n_i=1e6, hazard_ratio=0.01):
+    """Fig. 4 - TPI vs pipeline depth for varying gamma."""
+    if p_grid is None:
+        p_grid = jnp.arange(1, 41)
+    return {g: (p_grid, tpi(p_grid, n_i=n_i, n_h=hazard_ratio * n_i, gamma=g))
+            for g in gammas}

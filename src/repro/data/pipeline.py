@@ -1,0 +1,104 @@
+"""Synthetic, deterministic, shardable data pipeline.
+
+Every (step, global position) maps to tokens through a counter-based hash
+(SplitMix64), so any host can materialize exactly its shard of the global
+batch with no coordination - the property a real multi-pod input pipeline
+needs, demonstrated here with ``jax.make_array_from_callback``.
+
+The stream is not uniform noise: tokens follow a periodic Markov-ish pattern
+(mixture of a linear-congruential walk and rare resets) so a language model
+trained on it has signal to fit - integration tests assert the loss drops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.frontends import frontend_tokens
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    x = (x + np.uint64(0x9E3779B97F4A7C15)).astype(np.uint64)
+    z = x
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    pattern_period: int = 97          # learnable structure scale
+
+
+class SyntheticDataset:
+    """Deterministic token stream: ``tokens(step)[b, t]`` is a pure function
+    of (seed, step, b, t)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def tokens_slice(self, step: int, b0: int, b1: int,
+                     t0: int = 0, t1: Optional[int] = None) -> np.ndarray:
+        """Materialize rows [b0, b1) x cols [t0, t1) of the step's batch."""
+        c = self.cfg
+        t1 = c.seq_len if t1 is None else t1
+        bs = np.arange(b0, b1, dtype=np.uint64)[:, None]
+        ts = np.arange(t0, t1, dtype=np.uint64)[None, :]
+        base = (np.uint64(c.seed) * np.uint64(0x100000001B3)
+                + np.uint64(step) * np.uint64(0x1000193))
+        # slowly-varying walk + hash noise: predictable next-token structure
+        walk = (bs * np.uint64(31) + ts * np.uint64(7)) % np.uint64(c.pattern_period)
+        noise = _splitmix64(base + bs * np.uint64(65537) + ts)
+        mix = np.where((noise % np.uint64(13)) == 0, noise >> np.uint64(32), walk)
+        return (mix % np.uint64(c.vocab)).astype(np.int32)
+
+    def local_batch(self, step: int) -> np.ndarray:
+        return self.tokens_slice(step, 0, self.cfg.global_batch)
+
+    def global_batch(self, step: int, sharding) -> jax.Array:
+        """Build the globally-sharded batch array: each device's shard is
+        generated independently from the counter hash."""
+        c = self.cfg
+        shape = (c.global_batch, c.seq_len)
+
+        def cb(index):
+            rows, cols = index
+            b0 = rows.start or 0
+            b1 = rows.stop if rows.stop is not None else c.global_batch
+            t0 = cols.start or 0
+            t1 = cols.stop if cols.stop is not None else c.seq_len
+            return self.tokens_slice(step, b0, b1, t0, t1)
+
+        return jax.make_array_from_callback(shape, sharding, cb)
+
+
+def make_batch(cfg: ModelConfig, data: DataConfig, step: int,
+               sharding=None, accum: int = 1):
+    """Assemble the model-facing batch dict (host-local arrays if no
+    sharding given). Frontend families get synthetic embeddings."""
+    ds = SyntheticDataset(data)
+    if sharding is None:
+        toks = jnp.asarray(ds.local_batch(step))
+    else:
+        toks = ds.global_batch(step, sharding)
+    batch = {"tokens": toks}
+    nf = frontend_tokens(cfg)
+    if nf:
+        key = jax.random.fold_in(jax.random.PRNGKey(data.seed), step)
+        emb = (0.02 * jax.random.normal(
+            key, (data.global_batch, nf, cfg.d_model))).astype(jnp.bfloat16)
+        batch["frames" if cfg.frontend == "audio" else "patches"] = emb
+    if accum > 1:
+        b = data.global_batch // accum
+        batch = jax.tree.map(
+            lambda t: t.reshape(accum, b, *t.shape[1:]), batch)
+    return batch

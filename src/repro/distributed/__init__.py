@@ -1,0 +1,1 @@
+from repro.distributed import collectives, elastic, pipeline_parallel, sharding

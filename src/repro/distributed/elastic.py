@@ -1,0 +1,39 @@
+"""Elastic re-scaling: move a train state between meshes of different size.
+
+A checkpoint written on one mesh restores onto any other (more pods, fewer
+pods, different DP x TP split): checkpoints store full logical arrays
+(ckpt.checkpoint), and this module re-derives the sharding rules on the new
+mesh and re-places every leaf. The data pipeline is counter-based, so the
+token stream is identical across re-shardings - resume is bitwise-consistent
+modulo reduction order (tests/test_ckpt.py asserts loss-trajectory
+continuity).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.ckpt import checkpoint
+from repro.distributed import sharding as sh
+
+
+def reshard_state(state, new_mesh: Mesh, fsdp: bool = True):
+    """Re-place an in-memory train state onto ``new_mesh``."""
+    specs = sh.state_specs(state, new_mesh, fsdp=fsdp)
+    shardings = sh.to_shardings(specs, new_mesh)
+    return jax.tree.map(jax.device_put, state, shardings)
+
+
+def elastic_restore(directory: str, like, new_mesh: Mesh,
+                    step: Optional[int] = None, fsdp: bool = True):
+    """Restore the latest (or given) checkpoint onto a new mesh.
+
+    ``like``: abstract state (from jax.eval_shape of init) defining the
+    structure; returns (state, step).
+    """
+    specs = sh.state_specs(like, new_mesh, fsdp=fsdp)
+    shardings = sh.to_shardings(specs, new_mesh)
+    return checkpoint.restore(directory, like, step=step,
+                              shardings=shardings)

@@ -1,0 +1,222 @@
+"""Sharding rules: parameter PartitionSpecs, activation constraints, inputs.
+
+Scheme (DP x TP, ZeRO-3 on top - DESIGN.md section 5):
+  * batch over ("pod", "data") - DP across pods and the data axis,
+  * Megatron TP over "model": column-parallel in-projections
+    (wq/wk/wv/w_in/w_gate/in_proj), row-parallel out-projections
+    (wo/w_out/out_proj); vocab-sharded embedding + head; MoE experts sharded
+    over "model" in E (expert parallelism),
+  * FSDP/ZeRO: every remaining unsharded large dim additionally sharded over
+    the data axes; XLA all-gathers per layer inside the scan,
+  * activations constrained at block boundaries (residual stream),
+  * optimizer moments inherit the parameter specs (fp32) or shard their
+    quantized block dim (8-bit).
+
+Dims that do not divide the axis stay replicated - the rules degrade, never
+fail, so one rule set serves every (arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    s = _axsize(mesh, axes)
+    return s > 1 and dim % s == 0
+
+
+# (path regex, spec builder over trailing dims). Leading stacked-layer dims
+# (blocks/...) are handled by the caller. Builders may return None entries.
+_COL = ("wq", "wk", "wv", "w_in", "w_gate", "in_proj", "router")
+_ROW = ("wo", "w_out", "out_proj")
+
+
+def _rule_for(path: str, shape, mesh: Mesh):
+    """TP spec over the *trailing* dims of a (possibly layer-stacked) leaf."""
+    name = path.split("/")[-1]
+    nd = len(shape)
+    if name == "table":                                   # embedding (V, d)
+        return ["model" if _fits(shape[0], mesh, "model") else None, None]
+    if name == "head" or path.endswith("head"):           # (d, V)
+        return [None, "model" if _fits(shape[1], mesh, "model") else None]
+    if name in ("w_in", "w_gate", "w_out") and nd == 3:   # MoE (E, ., .)
+        return ["model" if _fits(shape[0], mesh, "model") else None,
+                None, None]
+    if name in _COL and nd == 2:
+        return [None, "model" if _fits(shape[1], mesh, "model") else None]
+    if name in _ROW and nd == 2:
+        return ["model" if _fits(shape[0], mesh, "model") else None, None]
+    if name == "frontend_proj":
+        return [None, "model" if _fits(shape[1], mesh, "model") else None]
+    return [None] * nd
+
+
+_STACKED = re.compile(r"^(blocks|enc_blocks|dec_blocks)(/|$)")
+
+
+def param_spec(path: str, leaf, mesh: Mesh, fsdp: bool = True) -> P:
+    shape = tuple(leaf.shape)
+    stacked = bool(_STACKED.match(path)) and len(shape) >= 1
+    trailing = shape[1:] if stacked else shape
+    spec = _rule_for(path, trailing, mesh)
+    if fsdp:
+        dp = batch_axes(mesh)
+        if dp:
+            # ZeRO: shard the largest still-replicated trailing dim over DP
+            order = sorted(range(len(trailing)),
+                           key=lambda i: -trailing[i])
+            for i in order:
+                if spec[i] is None and _fits(trailing[i], mesh, dp):
+                    spec[i] = dp
+                    break
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def params_specs(params, mesh: Mesh, fsdp: bool = True):
+    """Pytree of PartitionSpec matching ``params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(_key(p) for p in path)
+        specs.append(param_spec(pstr, leaf, mesh, fsdp=fsdp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _key(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def state_specs(state, mesh: Mesh, fsdp: bool = True):
+    """Specs for the full train state: params + AdamW moments + step.
+
+    fp32 moments mirror their parameter's spec; 8-bit moments shard the
+    quantized block dim over the data axes when divisible.
+    """
+    pspecs = params_specs(state["params"], mesh, fsdp=fsdp)
+
+    def moment_spec(m, ps):
+        if isinstance(m, tuple) and hasattr(m, "_fields"):   # _Moment(q, scale)
+            dp = batch_axes(mesh)
+            qdim = m.q.shape[0]
+            qs = P(dp if dp and _fits(qdim, mesh, dp) else None, None)
+            return type(m)(qs, P(None, None))
+        return ps
+
+    mspecs = jax.tree.map(moment_spec, state["opt"]["m"], pspecs,
+                          is_leaf=lambda x: isinstance(x, tuple) and hasattr(x, "_fields"))
+    vspecs = jax.tree.map(moment_spec, state["opt"]["v"], pspecs,
+                          is_leaf=lambda x: isinstance(x, tuple) and hasattr(x, "_fields"))
+    return {"params": pspecs,
+            "opt": {"step": P(), "m": mspecs, "v": vspecs}}
+
+
+def to_shardings(specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def make_shard_fn(mesh: Mesh, model_axis_residual: bool = False):
+    """Activation-constraint hook for the models' ``shard_fn(x, name)``.
+
+    'residual' (B, S, d): batch over DP axes; optionally d over "model"
+    (saves boundary activation memory for the huge-d archs - a hillclimb
+    lever measured in EXPERIMENTS.md).
+    """
+    dp = batch_axes(mesh)
+
+    def shard_fn(x, name):
+        if name != "residual" or x.ndim < 2:
+            return x
+        b = x.shape[0]
+        spec_b = dp if dp and b % _axsize(mesh, dp) == 0 else None
+        d = x.shape[-1]
+        spec_d = ("model" if model_axis_residual
+                  and _fits(d, mesh, "model") else None)
+        spec = [spec_b] + [None] * (x.ndim - 2) + [spec_d]
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+
+    return shard_fn
+
+
+def batch_specs(batch_shapes, mesh: Mesh, accum: int = 1):
+    """Input specs: tokens (B, S) or (accum, B/accum, S) -> batch over DP."""
+    dp = batch_axes(mesh)
+
+    def spec_of(shape):
+        nd = len(shape)
+        bdim = 1 if accum > 1 else 0
+        b = shape[bdim]
+        sb = dp if dp and b % _axsize(mesh, dp) == 0 else None
+        spec = [None] * nd
+        spec[bdim] = sb
+        return P(*spec)
+
+    return jax.tree.map(lambda s: spec_of(s.shape), batch_shapes)
+
+
+def cache_specs(caches, mesh: Mesh, seq_shard: bool = True):
+    """KV-cache shardings for decode: batch over DP; the *sequence* dim over
+    "model" (flash-decoding / sequence parallelism) when divisible - this is
+    what fits a 1.5 TB mistral-large cache on a pod. SSM states shard heads
+    over "model" when divisible."""
+    dp = batch_axes(mesh)
+
+    # base (unstacked) rank per cache leaf name; a leading layer-stack dim
+    # may or may not be present, so offset = nd - base_rank.
+    base_rank = {"k": 4, "v": 4, "cross_k": 4, "cross_v": 4,
+                 "state": 4, "conv": 3}
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape
+        name = _key(path[-1]) if path else ""
+        nd = len(shape)
+        spec = [None] * nd
+        br = base_rank.get(name)
+        if br is None or nd < br:
+            return P(*spec)
+        off = nd - br                                    # 0 or 1 (stacked)
+        bdim = off
+        if dp and shape[bdim] % _axsize(mesh, dp) == 0:
+            spec[bdim] = dp
+        if name in ("k", "v", "cross_k", "cross_v"):
+            sdim = off + 1                               # (B, S, H, hd)
+            if seq_shard and _fits(shape[sdim], mesh, "model"):
+                spec[sdim] = "model"
+        if name == "state":                              # (B, H, P, N)
+            hdim = off + 1
+            if _fits(shape[hdim], mesh, "model"):
+                spec[hdim] = "model"
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(p, l) for p, l in flat])

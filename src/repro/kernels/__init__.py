@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+gemm (MXU DOT4 generalization), dotp (codesigned level-1 reduce),
+flash_attention (streaming softmax), ssd_scan (Mamba-2 chunked scan).
+Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatching API.
+"""
+from repro.kernels import ops, ref

@@ -1,0 +1,250 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are sweep-tested
+against (tests/test_kernels_*.py). They are also the implementations the
+distributed model path uses on this CPU container (kernels are per-shard
+drop-ins on real TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def dotp(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, scale: float | None = None,
+              q_offset: int = 0, window: int | None = None) -> jnp.ndarray:
+    """Multi-head attention oracle.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) with Hq a multiple of Hkv (GQA).
+    ``q_offset``: absolute position of q[0] (decode: Sk - Sq).
+    ``window``: sliding-window size (None = full).
+    Returns (B, Hq, Sq, D) in q.dtype; softmax in fp32.
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32).reshape(b, hkv, group, sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    sk = k.shape[2]
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # rows that are fully masked produce NaN; zero them (can't happen for
+    # causal decode, defensive for window edges)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def blocked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True, scale: float | None = None,
+                      q_offset: int = 0, window: int | None = None,
+                      block_k: int = 1024) -> jnp.ndarray:
+    """Streaming-softmax attention in pure jnp (lax.scan over KV blocks).
+
+    Same semantics as :func:`attention` but O(Sq * block_k) live memory
+    instead of O(Sq * Sk): this is the partitionable flash path the SPMD
+    lowering uses (pallas_call cannot be auto-partitioned by XLA; on real
+    TPU the Pallas kernel drops in per-shard under shard_map). The KV-block
+    scan body is checkpointed so the backward pass recomputes block scores
+    instead of saving them - flash semantics under autodiff.
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    nb = -(-sk // block_k)
+    pad = nb * block_k - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = jnp.moveaxis(k.reshape(b, hkv, nb, block_k, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hkv, nb, block_k, d), 2, 0)
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, sq, d) * scale
+    qpos = jnp.arange(sq) + q_offset
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kc, vc, i = blk
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kc.astype(jnp.float32))
+        kpos = i * block_k + jnp.arange(block_k)
+        mask = kpos[None, :] < sk
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vc.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, hkv, g, sq), -1e30, jnp.float32),
+            jnp.zeros((b, hkv, g, sq), jnp.float32),
+            jnp.zeros((b, hkv, g, sq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False), init,
+        (kb, vb, jnp.arange(nb)))
+    safe = jnp.where(l > 0, l, 1.0)
+    out = (acc / safe[..., None]).reshape(b, hq, sq, d)
+    return out.astype(q.dtype)
+
+
+def banded_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     window: int, scale: float | None = None,
+                     q_offset: int = 0) -> jnp.ndarray:
+    """Causal sliding-window attention in O(S * 2w) instead of O(S^2).
+
+    Block the sequence into window-sized tiles; a query in tile i can only
+    attend keys in tiles i-1 and i (positions differ by < window <= tile).
+    Exact - verified against the masked full-attention oracle. This is the
+    hymba-prefill hillclimb: at S=32k, w=1k it removes 15/16 of the
+    attention flops and the whole S x S traffic.
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert sq == sk and q_offset == 0, "banded path is for full-seq prefill"
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    w = window
+    pad = (-sq) % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    sp = sq + pad
+    nb = sp // w
+    qb = q.reshape(b, hkv, g, nb, w, d).astype(jnp.float32) * scale
+    kb = k.reshape(b, hkv, nb, w, d).astype(jnp.float32)
+    vb = v.reshape(b, hkv, nb, w, d).astype(jnp.float32)
+    # previous tile (zeros before tile 0)
+    kprev = jnp.pad(kb, ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))[:, :, :nb]
+    vprev = jnp.pad(vb, ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))[:, :, :nb]
+    kcat = jnp.concatenate([kprev, kb], axis=3)          # (b,hkv,nb,2w,d)
+    vcat = jnp.concatenate([vprev, vb], axis=3)
+    s = jnp.einsum("bhgnqd,bhnkd->bhgnqk", qb, kcat)     # (b,hkv,g,nb,w,2w)
+    qpos = jnp.arange(w)[:, None] + w                    # within [w, 2w)
+    kpos = jnp.arange(2 * w)[None, :]
+    mask = (qpos >= kpos) & (qpos - kpos < w)
+    first = jnp.arange(2 * w)[None, :] >= w              # tile 0: no prev
+    m0 = mask & first
+    tile_idx = jnp.arange(nb)
+    full_mask = jnp.where(tile_idx[:, None, None] == 0, m0[None], mask[None])
+    s = jnp.where(full_mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgnqk,bhnkd->bhgnqd", p, vcat)
+    o = o.reshape(b, hq, sp, d)[:, :, :sq]
+    return o.astype(q.dtype)
+
+
+def ssd(x: jnp.ndarray, a_log: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
+        state: jnp.ndarray | None = None, return_state: bool = False):
+    """Mamba-2 SSD oracle: the exact O(L) recurrence.
+
+    x:     (batch, L, H, P)   inputs (already gated/dt-scaled)
+    a_log: (batch, L, H)      log decay per step (<= 0)
+    B:     (batch, L, H, N)   input projection (already per-head)
+    C:     (batch, L, H, N)   output projection (already per-head)
+    state: (batch, H, P, N)   optional initial state
+
+    h_t = exp(a_log_t) * h_{t-1} + x_t outer B_t;   y_t = h_t @ C_t
+    Returns y (batch, L, H, P) [and final state if requested].
+    """
+    bsz, L, H, P = x.shape
+    N = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    af = a_log.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    h0 = (jnp.zeros((bsz, H, P, N), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+
+    def step(h, t):
+        a_t = jnp.exp(af[:, t])[..., None, None]          # (b,H,1,1)
+        upd = jnp.einsum("bhp,bhn->bhpn", xf[:, t], Bf[:, t])
+        h = a_t * h + upd
+        y = jnp.einsum("bhpn,bhn->bhp", h, Cf[:, t])
+        return h, y
+
+    hT, ys = jax.lax.scan(step, h0, jnp.arange(L))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)            # (b,L,H,P)
+    if return_state:
+        return y, hT.astype(jnp.float32)
+    return y
+
+
+def ssd_chunked(x, a_log, B, C, chunk: int = 64, state=None,
+                return_state: bool = False):
+    """Chunked SSD (the algorithm the Pallas kernel implements): quadratic
+    within-chunk attention-like term + cross-chunk state recurrence.
+    Mathematically identical to :func:`ssd`."""
+    bsz, L, H, P = x.shape
+    N = B.shape[-1]
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nch = Lp // chunk
+
+    def to_chunks(t):  # (b, L, H, ...) -> (nch, b, H, chunk, ...)
+        t = t.reshape(bsz, nch, chunk, *t.shape[2:])
+        return jnp.moveaxis(jnp.moveaxis(t, 3, 2), 1, 0).astype(jnp.float32)
+
+    xc, ac = to_chunks(x), to_chunks(a_log)
+    Bc, Cc = to_chunks(B), to_chunks(C)
+    h0 = (jnp.zeros((bsz, H, P, N), jnp.float32) if state is None
+          else state.astype(jnp.float32))
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(h, inp):
+        xk, ak, Bk, Ck = inp                               # (b,H,c,...)
+        cum = jnp.cumsum(ak, axis=-1)                      # (b,H,c)
+        seg = jnp.exp(cum)                                 # state decay at t
+        # mask BEFORE exp: exp of the (positive) upper-triangle differences
+        # overflows and poisons the backward pass with inf * 0 = NaN
+        diff = cum[..., :, None] - cum[..., None, :]
+        Lmat = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+        scores = jnp.einsum("bhtn,bhsn->bhts", Ck, Bk) * Lmat
+        y = jnp.einsum("bhts,bhsp->bhtp", scores, xk)
+        y = y + jnp.einsum("bhtn,bhpn->bhtp", Ck * seg[..., None], h)
+        dout = jnp.exp(cum[..., -1:] - cum)                # (b,H,c)
+        h = (jnp.exp(cum[..., -1])[..., None, None] * h
+             + jnp.einsum("bhsp,bhsn->bhpn", xk, Bk * dout[..., None]))
+        return h, y
+
+    hT, ys = jax.lax.scan(chunk_step, h0, (xc, ac, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 2).reshape(bsz, H, Lp, P)
+    y = jnp.moveaxis(y, 1, 2)[:, :L].astype(x.dtype)
+    if return_state:
+        return y, hT
+    return y
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,5 @@
+from repro.lapack import cholesky, lu, qr, solve
+from repro.lapack.cholesky import potrf, potrf_unblocked
+from repro.lapack.lu import getrf, getrf_unblocked, lu_reconstruct
+from repro.lapack.qr import geqrf, geqrf_unblocked, q_from_geqrf
+from repro.lapack.solve import gesv, lstsq_qr

@@ -1,0 +1,46 @@
+"""DPOTRF - Cholesky factorization (lower), unblocked and blocked."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.blas.level3 import dtrsm
+
+
+def potrf_unblocked(a: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular Cholesky; the serial sqrt-then-div chain per column
+    is the paper's dpotrf hazard profile."""
+    n = a.shape[0]
+    rows = jnp.arange(n)
+
+    def body(k, A):
+        d = jnp.sqrt(A[k, k])
+        col = jnp.where(rows > k, A[:, k] / d, 0.0)
+        A = A.at[k, k].set(d)
+        A = A.at[:, k].set(jnp.where(rows > k, col, A[:, k]))
+        # trailing rank-1 update on the lower triangle
+        upd = jnp.outer(col, col)
+        mask = (rows[:, None] > k) & (rows[None, :] > k)
+        return A - jnp.where(mask, upd, 0.0)
+
+    A = lax.fori_loop(0, n, body, a)
+    return jnp.tril(A)
+
+
+def potrf(a: jnp.ndarray, block: int = 32) -> jnp.ndarray:
+    """Blocked: POTRF(diag) + TRSM(panel) + SYRK(trailing)."""
+    n = a.shape[0]
+    if n <= block:
+        return potrf_unblocked(a)
+    for j0 in range(0, n, block):
+        nb = min(block, n - j0)
+        a = a.at[j0:j0 + nb, j0:j0 + nb].set(
+            potrf_unblocked(a[j0:j0 + nb, j0:j0 + nb]))
+        if j0 + nb < n:
+            l11 = a[j0:j0 + nb, j0:j0 + nb]
+            # L21 = A21 L11^{-T}
+            l21 = dtrsm(l11, a[j0 + nb:, j0:j0 + nb].T, lower=True,
+                        unit_diag=False, left=True).T
+            a = a.at[j0 + nb:, j0:j0 + nb].set(l21)
+            a = a.at[j0 + nb:, j0 + nb:].add(-(l21 @ l21.T))
+    return jnp.tril(a)

@@ -1,0 +1,108 @@
+"""DGETRF - LU with partial pivoting, unblocked and blocked, in JAX.
+
+Section-4.2 workload #2: the column-scaling divisions are the serial divider
+stream ("the occurrence of division ... is similar to the square root/divider
+in the QR factorization"); the trailing update is DGEMM.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.blas.level3 import dtrsm
+
+
+def getrf_unblocked(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (packed LU, piv) - piv[k] is the row swapped into k (LAPACK
+    ipiv, 0-based)."""
+    n = a.shape[0]
+    rows = jnp.arange(n)
+
+    def body(k, carry):
+        A, piv = carry
+        col = jnp.where(rows >= k, jnp.abs(A[:, k]), -jnp.inf)
+        p = jnp.argmax(col)
+        piv = piv.at[k].set(p)
+        rk, rp = A[k], A[p]
+        A = A.at[k].set(rp).at[p].set(rk)
+        pivval = A[k, k]
+        safe = jnp.where(jnp.abs(pivval) > 0, pivval, 1.0)
+        l = jnp.where(rows > k, A[:, k] / safe, 0.0)
+        A = A.at[:, k].set(jnp.where(rows > k, l, A[:, k]))
+        urow = jnp.where(jnp.arange(A.shape[1]) > k, A[k], 0.0)
+        A = A - jnp.outer(l, urow)
+        return A, piv
+
+    A, piv = lax.fori_loop(0, min(a.shape), body,
+                           (a, jnp.zeros((min(a.shape),), jnp.int32)))
+    return A, piv
+
+
+def getrf(a: jnp.ndarray, block: int = 32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blocked right-looking LU with partial pivoting."""
+    n, nc = a.shape
+    kmax = min(n, nc)
+    if kmax <= block:
+        return getrf_unblocked(a)
+    pivs = []
+    rows = jnp.arange(n)
+    for j0 in range(0, kmax, block):
+        nb = min(block, kmax - j0)
+        # panel factorization over full remaining height, swaps applied to
+        # the whole width (LAPACK's laswp).
+        def pbody(kk, carry):
+            A, piv = carry
+            k = j0 + kk
+            col = jnp.where(rows >= k, jnp.abs(A[:, k]), -jnp.inf)
+            p = jnp.argmax(col)
+            piv = piv.at[kk].set(p)
+            rk, rp = A[k], A[p]
+            A = A.at[k].set(rp).at[p].set(rk)
+            pivval = A[k, k]
+            safe = jnp.where(jnp.abs(pivval) > 0, pivval, 1.0)
+            l = jnp.where(rows > k, A[:, k] / safe, 0.0)
+            A = A.at[:, k].set(jnp.where(rows > k, l, A[:, k]))
+            # rank-1 update restricted to the panel's remaining columns
+            urow = jnp.where((jnp.arange(nc) > k) & (jnp.arange(nc) < j0 + nb),
+                             A[k], 0.0)
+            A = A - jnp.outer(l, urow)
+            return A, piv
+
+        a, piv = lax.fori_loop(0, nb, pbody,
+                               (a, jnp.zeros((nb,), jnp.int32)))
+        pivs.append(piv)
+        if j0 + nb < nc:
+            # U12 = L11^{-1} A12 ; A22 -= L21 U12  (trsm + GEMM)
+            l11 = a[j0:j0 + nb, j0:j0 + nb]
+            u12 = dtrsm(l11, a[j0:j0 + nb, j0 + nb:], lower=True,
+                        unit_diag=True, left=True)
+            a = a.at[j0:j0 + nb, j0 + nb:].set(u12)
+            a = a.at[j0 + nb:, j0 + nb:].add(
+                -a[j0 + nb:, j0:j0 + nb] @ u12)
+    return a, jnp.concatenate(pivs)
+
+
+def apply_ipiv(b: jnp.ndarray, piv: jnp.ndarray) -> jnp.ndarray:
+    """Apply the pivot sequence (forward) to rows of b: b <- P b."""
+    def body(k, x):
+        p = piv[k]
+        rk, rp = x[k], x[p]
+        return x.at[k].set(rp).at[p].set(rk)
+    return lax.fori_loop(0, piv.shape[0], body, b)
+
+
+def lu_reconstruct(packed: jnp.ndarray, piv: jnp.ndarray) -> jnp.ndarray:
+    """P^T L U - for testing: should equal the input matrix."""
+    n = packed.shape[0]
+    l = jnp.tril(packed, -1) + jnp.eye(n, dtype=packed.dtype)
+    u = jnp.triu(packed)
+    lu = l @ u
+    # invert the pivot sequence (apply swaps in reverse)
+    def body(i, x):
+        k = piv.shape[0] - 1 - i
+        p = piv[k]
+        rk, rp = x[k], x[p]
+        return x.at[k].set(rp).at[p].set(rk)
+    return lax.fori_loop(0, piv.shape[0], body, lu)

@@ -1,0 +1,148 @@
+"""DGEQRF - Householder QR, unblocked and blocked (compact-WY), in JAX.
+
+The paper's section-4.2 workload: the panel path carries the serial
+sqrt (column norm) -> div (vector scale) hazard chain; the trailing update is
+pure DGEMM. The blocked form makes that split explicit - panel = hazards,
+trailing = throughput - which is why the adder/multiplier depths from
+section 4.1 carry over and only sqrt/div need their own analysis.
+
+All routines are jittable (static shapes, masked updates inside fori_loop).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _house_column(a: jnp.ndarray, k: int | jnp.ndarray,
+                  row0: int | jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Householder vector for column ``k`` of ``a``, rows >= row0.
+
+    Returns (v, tau) with v[row0..] the reflector (v[row0] = 1), zeros above.
+    H = I - tau v v^T maps the column to (-sign(x0) ||x||) e_row0.
+    """
+    m = a.shape[0]
+    rows = jnp.arange(m)
+    mask = rows >= row0
+    x = jnp.where(mask, a[:, k], 0.0)
+    normx = jnp.sqrt(jnp.sum(x * x))
+    x0 = a[row0, k]
+    sign = jnp.where(x0 >= 0, 1.0, -1.0).astype(a.dtype)
+    alpha = x0 + sign * normx                       # v0 before normalization
+    safe = jnp.abs(alpha) > jnp.finfo(a.dtype).tiny
+    alpha = jnp.where(safe, alpha, 1.0)
+    v = jnp.where(rows > row0, x / alpha, 0.0)
+    v = jnp.where(rows == row0, 1.0, v)
+    v = jnp.where(mask, v, 0.0)
+    vtv = jnp.sum(v * v)
+    tau = jnp.where(safe & (normx > 0), 2.0 / vtv, 0.0).astype(a.dtype)
+    return v, tau
+
+
+def geqrf_unblocked(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """LAPACK-layout QR: returns (packed, tau); R on/above the diagonal,
+    reflector tails below it."""
+    m, n = a.shape
+    kmax = min(m, n)
+
+    def body(k, carry):
+        A, tau = carry
+        v, tk = _house_column(A, k, k)
+        # apply H = I - tau v v^T to columns >= k only (earlier columns hold
+        # stored reflector tails which H must not touch)
+        w = tk * (v @ A)                             # (n,)
+        w = jnp.where(jnp.arange(n) >= k, w, 0.0)
+        A = A - jnp.outer(v, w)
+        # store the reflector tail below the diagonal of column k
+        col = jnp.where(jnp.arange(m) > k, v, A[:, k])
+        A = A.at[:, k].set(col)
+        return A, tau.at[k].set(tk)
+
+    A, tau = lax.fori_loop(0, kmax, body, (a, jnp.zeros((kmax,), a.dtype)))
+    return A, tau
+
+
+def _larft(v: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """Forward compact-WY T factor: Q = I - V T V^T (T upper triangular)."""
+    nb = tau.shape[0]
+
+    def body(k, t):
+        # T[:k, k] = -tau_k * T[:k, :k] @ (V^T v_k);  T[k, k] = tau_k
+        col = (v.T @ v[:, k])                        # (nb,)
+        col = jnp.where(jnp.arange(nb) < k, col, 0.0)
+        tcol = -tau[k] * (t @ col)
+        tcol = jnp.where(jnp.arange(nb) < k, tcol, 0.0)
+        tcol = tcol.at[k].set(tau[k])
+        return t.at[:, k].set(tcol)
+
+    return lax.fori_loop(0, nb, body, jnp.zeros((nb, nb), v.dtype))
+
+
+def geqrf(a: jnp.ndarray, block: int = 32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blocked QR (compact WY). Python loop over static panel boundaries ->
+    still a single jittable computation."""
+    m, n = a.shape
+    kmax = min(m, n)
+    if kmax <= block:
+        return geqrf_unblocked(a)
+    taus = []
+    for j0 in range(0, kmax, block):
+        nb = min(block, kmax - j0)
+        # panel factorization (unblocked on the full height, masked rows)
+        panel = a[:, j0:j0 + nb]
+
+        def pbody(k, carry):
+            P, tau = carry
+            v, tk = _house_column(P, k, j0 + k)
+            w = tk * (v @ P)
+            w = jnp.where(jnp.arange(nb) >= k, w, 0.0)
+            P = P - jnp.outer(v, w)
+            col = jnp.where(jnp.arange(m) > j0 + k, v, P[:, k])
+            P = P.at[:, k].set(col)
+            return P, tau.at[k].set(tk)
+
+        panel, tau = lax.fori_loop(0, nb, pbody,
+                                   (panel, jnp.zeros((nb,), a.dtype)))
+        a = a.at[:, j0:j0 + nb].set(panel)
+        taus.append(tau)
+        # trailing update: C <- (I - V T V^T)^T C = C - V T^T (V^T C)
+        if j0 + nb < n:
+            rows = jnp.arange(m)
+            V = jnp.where(rows[:, None] > (j0 + jnp.arange(nb))[None, :],
+                          panel, 0.0)
+            V = jnp.where(rows[:, None] == (j0 + jnp.arange(nb))[None, :],
+                          1.0, V)
+            T = _larft(V, tau)
+            C = a[:, j0 + nb:]
+            W = V.T @ C                               # (nb, rest)   GEMM
+            W = T.T @ W                               # small GEMM
+            a = a.at[:, j0 + nb:].set(C - V @ W)      # GEMM
+    return a, jnp.concatenate(taus)
+
+
+def q_from_geqrf(packed: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """Accumulate the full Q (m x m) from the packed form."""
+    m = packed.shape[0]
+    kmax = tau.shape[0]
+    rows = jnp.arange(m)
+
+    def body(i, q):
+        k = kmax - 1 - i                              # apply in reverse
+        v = jnp.where(rows > k, packed[:, k], 0.0)
+        v = v.at[k].set(1.0)
+        v = jnp.where(rows >= k, v, 0.0)
+        w = tau[k] * (v @ q)
+        return q - jnp.outer(v, w)
+
+    return lax.fori_loop(0, kmax, body, jnp.eye(m, dtype=packed.dtype))
+
+
+def qr(a: jnp.ndarray, block: int = 32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Convenience (Q, R) form."""
+    packed, tau = geqrf(a, block=block)
+    q = q_from_geqrf(packed, tau)
+    r = jnp.triu(packed)[: min(a.shape), :]
+    return q[:, : min(a.shape)], r

@@ -1,0 +1,107 @@
+"""Serving launcher: batched prefill + decode with a request queue.
+
+``python -m repro.launch.serve --arch mamba2-130m --requests 8``
+
+Implements the serving loop the decode shapes lower: a continuous-batching-
+lite scheduler - requests with different prompt lengths are left-padded into
+a batch, prefilled once, then decoded step-by-step with donated caches;
+finished sequences are masked out. On the production mesh the same
+serve_step runs with sequence-sharded KV caches (launch.dryrun lowers it).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.launch.train import reduce_config
+from repro.models import model_zoo as zoo
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (len,) int32
+    max_new: int
+
+
+def serve_batch(params, cfg, requests: List[Request], max_len: int,
+                temperature: float = 0.0, seed: int = 0):
+    """Prefill + decode a batch of requests; returns list of token arrays."""
+    b = len(requests)
+    plens = np.array([len(r.prompt) for r in requests])
+    pmax = int(plens.max())
+    toks = np.zeros((b, pmax), np.int32)           # right-aligned prompts
+    for i, r in enumerate(requests):
+        toks[i, pmax - len(r.prompt):] = r.prompt
+    batch = {"tokens": jnp.asarray(toks)}
+
+    # prefill the whole padded batch (cache layout matches decode)
+    logits, _, _ = zoo.prefill(params, batch, cfg, use_pallas=False)
+    caches = zoo.init_caches(params, cfg, b, max_len)
+    # replay prompts through decode_step to fill caches (simple + exact;
+    # a production server would scatter the prefill KVs directly)
+    step = jax.jit(lambda p, t, c, i: zoo.decode_step(p, t, cfg, c, i))
+    last = None
+    for t in range(pmax):
+        last, caches = step(params, jnp.asarray(toks[:, t:t + 1]), caches,
+                            jnp.int32(t))
+
+    key = jax.random.PRNGKey(seed)
+    out = [list(r.prompt) for r in requests]
+    done = np.zeros(b, bool)
+    max_new = max(r.max_new for r in requests)
+    t0 = time.time()
+    cur = last
+    for n in range(max_new):
+        lg = cur[:, -1].astype(jnp.float32)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, lg / temperature)
+        else:
+            nxt = jnp.argmax(lg, -1)
+        nxt = np.asarray(nxt, np.int32)
+        for i in range(b):
+            if not done[i]:
+                out[i].append(int(nxt[i]))
+                if len(out[i]) - len(requests[i].prompt) >= requests[i].max_new:
+                    done[i] = True
+        if done.all():
+            break
+        cur, caches = step(params, jnp.asarray(nxt)[:, None], caches,
+                           jnp.int32(pmax + n))
+    dt = time.time() - t0
+    tok_s = (b * (n + 1)) / max(dt, 1e-9)
+    return out, {"decode_tokens_per_s": tok_s, "steps": n + 1}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.ARCHS, default="mamba2-130m")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--d-model", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = reduce_config(registry.get_config(args.arch), args.layers,
+                        args.d_model, vocab=512, heads=4)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = zoo.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(0, cfg.vocab, size=rng.integers(4, 12)
+                                 ).astype(np.int32), args.max_new)
+            for _ in range(args.requests)]
+    outs, stats = serve_batch(params, cfg, reqs, max_len=64)
+    for i, o in enumerate(outs):
+        print(f"req{i}: prompt={len(reqs[i].prompt)} -> {len(o)} tokens")
+    print(stats)
+
+
+if __name__ == "__main__":
+    main()

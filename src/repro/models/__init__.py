@@ -1,0 +1,2 @@
+from repro.models import model_zoo
+from repro.models.config import ModelConfig

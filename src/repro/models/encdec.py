@@ -1,0 +1,175 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings (B, encoder_seq, d_model). Sinusoidal positions
+are used on both sides (the released model's learned decoder positions cap
+at 448 tokens; sinusoidal extrapolates, which makes the assigned
+``decode_32k`` cell well-defined - recorded in DESIGN.md section 4).
+
+Encoder: bidirectional self-attention blocks. Decoder: causal self-attention
++ cross-attention to the encoder memory + FFN. Decode caches: self-attention
+KV ring + cross-attention K/V computed once from the memory.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_embedding, apply_ffn, apply_rmsnorm,
+                                 init_embedding, init_ffn, init_rmsnorm,
+                                 sinusoidal_positions, truncated_normal)
+
+
+def init_encdec(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": init_rmsnorm(cfg.d_model),
+                "attn": attn_mod.init_attention(k1, cfg),
+                "ln2": init_rmsnorm(cfg.d_model),
+                "ffn": init_ffn(k2, cfg.d_model, cfg.d_ff, cfg.glu)}
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": init_rmsnorm(cfg.d_model),
+                "attn": attn_mod.init_attention(k1, cfg),
+                "ln_x": init_rmsnorm(cfg.d_model),
+                "xattn": attn_mod.init_attention(k2, cfg),
+                "ln2": init_rmsnorm(cfg.d_model),
+                "ffn": init_ffn(k3, cfg.d_model, cfg.d_ff, cfg.glu)}
+
+    return {
+        "embed": init_embedding(ks[0], cfg.vocab, cfg.d_model),
+        "enc_blocks": jax.vmap(enc_block)(
+            jax.random.split(ks[1], cfg.encoder_layers)),
+        "enc_norm": init_rmsnorm(cfg.d_model),
+        "dec_blocks": jax.vmap(dec_block)(
+            jax.random.split(ks[2], cfg.n_layers)),
+        "dec_norm": init_rmsnorm(cfg.d_model),
+        "head": truncated_normal(ks[3], (cfg.d_model, cfg.vocab),
+                                 cfg.d_model ** -0.5),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, shard_fn=lambda x, n: x,
+           use_pallas: Optional[bool] = None):
+    """frames: (B, S_enc, d) stub frontend embeddings -> memory (B, S_enc, d)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b, s, _ = frames.shape
+    x = frames.astype(dtype) + sinusoidal_positions(s, cfg.d_model, dtype)[None]
+    x = shard_fn(x, "residual")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(xc, lp):
+        h = apply_rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+        xc = xc + attn_mod.apply_attention(lp["attn"], h, cfg, positions,
+                                           causal=False,
+                                           use_pallas=use_pallas)
+        h = apply_rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+        xc = xc + apply_ffn(lp["ffn"], h, cfg.act, xc.dtype)
+        return shard_fn(xc, "residual"), None
+
+    from repro.models.transformer import maybe_remat
+    body = maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return apply_rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_train(params, tokens, memory, cfg: ModelConfig,
+                 shard_fn=lambda x, n: x, use_pallas: Optional[bool] = None):
+    """Teacher-forced decoder pass: tokens (B, S) + memory -> logits."""
+    dtype = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    x = apply_embedding(params["embed"], tokens, dtype)
+    x = x + sinusoidal_positions(s, cfg.d_model, dtype)[None]
+    x = shard_fn(x, "residual")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(xc, lp):
+        h = apply_rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+        xc = xc + attn_mod.apply_attention(lp["attn"], h, cfg, positions,
+                                           causal=True, use_pallas=use_pallas)
+        h = apply_rmsnorm(lp["ln_x"], xc, cfg.norm_eps)
+        xc = xc + attn_mod.apply_cross_attention(lp["xattn"], h, cfg, memory,
+                                                 use_pallas=use_pallas)
+        h = apply_rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+        xc = xc + apply_ffn(lp["ffn"], h, cfg.act, xc.dtype)
+        return shard_fn(xc, "residual"), None
+
+    from repro.models.transformer import maybe_remat
+    body = maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = apply_rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    return x @ params["head"].astype(dtype)
+
+
+def forward(params, frames, tokens, cfg: ModelConfig,
+            shard_fn=lambda x, n: x, use_pallas: Optional[bool] = None):
+    memory = encode(params, frames, cfg, shard_fn, use_pallas)
+    logits = decode_train(params, tokens, memory, cfg, shard_fn, use_pallas)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_decode_caches(params, memory, cfg: ModelConfig, batch: int,
+                       max_len: int, dtype=jnp.bfloat16):
+    """Self-attn KV caches + cross K/V precomputed from memory, per layer."""
+    hd, hkv = cfg.hd, cfg.n_kv
+    sm = memory.shape[1]
+
+    def per_layer(lp):
+        ck = (memory @ lp["xattn"]["wk"].astype(memory.dtype)
+              ).reshape(batch, sm, hkv, hd)
+        cv = (memory @ lp["xattn"]["wv"].astype(memory.dtype)
+              ).reshape(batch, sm, hkv, hd)
+        return {
+            "self": attn_mod.init_kv_cache(cfg, batch, max_len, dtype),
+            "cross_k": ck.astype(dtype), "cross_v": cv.astype(dtype),
+        }
+
+    return jax.vmap(per_layer)(params["dec_blocks"])
+
+
+def decode_step(params, token, cfg: ModelConfig, caches, cache_index,
+                shard_fn=lambda x, n: x):
+    """One decoder token against cached self/cross KV."""
+    dtype = jnp.dtype(cfg.dtype)
+    b = token.shape[0]
+    x = apply_embedding(params["embed"], token, dtype)
+    pos_tab = sinusoidal_positions(caches["self"]["k"].shape[2],
+                                   cfg.d_model, dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(pos_tab, cache_index, 1)[None]
+    x = shard_fn(x, "residual")
+
+    def body(xc, layer):
+        lp, cache = layer
+        smax = cache["self"]["k"].shape[1]
+        kv_len = jnp.minimum(cache_index + 1, smax)
+        h = apply_rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+        y, nkv = attn_mod.apply_attention_decode(
+            lp["attn"], h, cfg, cache["self"], cache_index % smax,
+            cache_index, kv_len)
+        xc = xc + y
+        h = apply_rmsnorm(lp["ln_x"], xc, cfg.norm_eps)
+        hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv
+        q = (h @ lp["xattn"]["wq"].astype(dtype)).reshape(b, 1, hq, hd)
+        o = attn_mod.masked_decode_attention(
+            jnp.moveaxis(q, 2, 1),
+            jnp.moveaxis(cache["cross_k"], 2, 1).astype(dtype),
+            jnp.moveaxis(cache["cross_v"], 2, 1).astype(dtype),
+            cache["cross_k"].shape[1])
+        o = jnp.moveaxis(o, 1, 2).reshape(b, 1, hq * hd)
+        xc = xc + o @ lp["xattn"]["wo"].astype(dtype)
+        h = apply_rmsnorm(lp["ln2"], xc, cfg.norm_eps)
+        xc = xc + apply_ffn(lp["ffn"], h, cfg.act, xc.dtype)
+        new_cache = {"self": nkv, "cross_k": cache["cross_k"],
+                     "cross_v": cache["cross_v"]}
+        return xc, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_blocks"], caches))
+    x = apply_rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    return x @ params["head"].astype(dtype), new_caches

@@ -1,0 +1,38 @@
+"""Modality frontend STUBS for [audio] and [vlm] architectures.
+
+Per the assignment, these entries specify the transformer BACKBONE only; the
+frontend provides *precomputed* frame/patch embeddings. ``input_specs()``
+in the configs returns ShapeDtypeStructs of these shapes; the synthetic data
+pipeline draws matching random embeddings for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+WHISPER_FRAMES = 1500          # 30 s of audio at the encoder's frame rate
+INTERNVL_PATCHES = 256         # 448x448 / 14 patch / pixel-shuffle 0.5
+
+
+def frontend_tokens(cfg: ModelConfig) -> int:
+    if cfg.frontend == "audio":
+        return cfg.encoder_seq or WHISPER_FRAMES
+    if cfg.frontend == "vision":
+        return cfg.num_prefix_tokens or INTERNVL_PATCHES
+    return 0
+
+
+def frontend_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    n = frontend_tokens(cfg)
+    if n == 0:
+        return None
+    return jax.ShapeDtypeStruct((batch, n, cfg.d_model), dtype)
+
+
+def synthetic_frontend(key, cfg: ModelConfig, batch: int,
+                       dtype=jnp.bfloat16) -> jnp.ndarray:
+    n = frontend_tokens(cfg)
+    return (0.02 * jax.random.normal(key, (batch, n, cfg.d_model))
+            ).astype(dtype)

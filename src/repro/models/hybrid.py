@@ -1,0 +1,95 @@
+"""Hymba-style hybrid block: parallel attention + Mamba heads per layer.
+
+Each layer runs a (windowed or global) attention path and an SSM path on the
+same normalized input; the outputs are each RMS-normalized and averaged with
+learnable per-path scales (the Hymba fusion). Most layers use sliding-window
+attention; ``cfg.global_layers`` use full attention. Hymba's meta tokens are
+omitted (DESIGN.md section 4 records this).
+
+The SSM path gives the O(1) global state that makes ``long_500k`` decoding
+feasible while the windowed attention keeps local precision.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rmsnorm, init_rmsnorm
+
+
+def init_hybrid(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": attn.init_attention(k1, cfg),
+        "ssm": mamba2.init_mamba(k2, cfg),
+        "attn_norm": init_rmsnorm(cfg.d_model),
+        "ssm_norm": init_rmsnorm(cfg.d_model),
+        "attn_scale": jnp.ones((), jnp.float32),
+        "ssm_scale": jnp.ones((), jnp.float32),
+    }
+
+
+def _fuse(p, ya, ys, cfg: ModelConfig):
+    ya = apply_rmsnorm(p["attn_norm"], ya, cfg.norm_eps)
+    ys = apply_rmsnorm(p["ssm_norm"], ys, cfg.norm_eps)
+    return 0.5 * (p["attn_scale"].astype(ya.dtype) * ya
+                  + p["ssm_scale"].astype(ys.dtype) * ys)
+
+
+def apply_hybrid(p, x, cfg: ModelConfig, positions, is_global,
+                 use_pallas: Optional[bool] = None) -> jnp.ndarray:
+    """Full-sequence path. ``is_global``: bool (traced ok) - full vs window.
+
+    The two attention flavours go through ``lax.cond`` so only ONE executes
+    per layer (the first implementation computed both and selected - 2x the
+    attention cost on every windowed layer; EXPERIMENTS.md §Perf hymba)."""
+    if cfg.window is not None:
+        ya = jax.lax.cond(
+            is_global,
+            lambda h: attn.apply_attention(p["attn"], h, cfg, positions,
+                                           window=None,
+                                           use_pallas=use_pallas),
+            lambda h: attn.apply_attention(p["attn"], h, cfg, positions,
+                                           window=cfg.window,
+                                           use_pallas=use_pallas),
+            x)
+    else:
+        ya = attn.apply_attention(p["attn"], x, cfg, positions, window=None,
+                                  use_pallas=use_pallas)
+    ys = mamba2.apply_mamba(p["ssm"], x, cfg, use_pallas=use_pallas)
+    return _fuse(p, ya, ys, cfg)
+
+
+def init_hybrid_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      is_global: bool = False, dtype=jnp.bfloat16):
+    """Windowed layers keep a ``window``-sized KV ring (the memory win that
+    makes long_500k feasible); ``is_global`` layers get the full horizon.
+    Cache shapes therefore differ per layer -> hybrid caches are a per-layer
+    list, and decode unrolls the (few) layers instead of scanning."""
+    if is_global or cfg.window is None:
+        kv_len = max_len
+    else:
+        kv_len = min(max_len, cfg.window)
+    return {
+        "attn": attn.init_kv_cache(cfg, batch, kv_len, dtype),
+        "ssm": mamba2.init_ssm_cache(cfg, batch, dtype),
+    }
+
+
+def apply_hybrid_decode(p, x, cfg: ModelConfig, cache, cache_index,
+                        is_global) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode. The attention cache is a ring buffer of the window
+    size (RoPE at absolute positions keeps relative offsets exact)."""
+    smax = cache["attn"]["k"].shape[1]
+    widx = cache_index % smax                    # ring write slot
+    kv_len = jnp.minimum(cache_index + 1, smax)  # valid slots
+    ya, new_kv = attn.apply_attention_decode(
+        p["attn"], x, cfg, cache["attn"], widx, cache_index, kv_len)
+    ys, new_ssm = mamba2.apply_mamba_decode(p["ssm"], x, cfg, cache["ssm"])
+    y = _fuse(p, ya, ys, cfg)
+    return y, {"attn": new_kv, "ssm": new_ssm}

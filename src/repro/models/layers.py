@@ -1,0 +1,99 @@
+"""Shared layer primitives: norms, embeddings, linear, RoPE, FFN.
+
+Parameters are plain pytrees (nested dicts) built by ``init_*`` functions;
+``apply_*`` functions are pure. Compute runs in cfg.dtype (bf16 by default)
+with fp32 norms/softmax; parameters are stored fp32 and cast at use
+(the train state owns the masters).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, scale: float, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False):
+    p = {"w": truncated_normal(key, (d_in, d_out), d_in ** -0.5)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def apply_linear(p, x, dtype):
+    y = x.astype(dtype) @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int):
+    return {"table": truncated_normal(key, (vocab, d), 1.0)}
+
+
+def apply_embedding(p, ids, dtype):
+    return p["table"].astype(dtype)[ids]
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10_000.0):
+    """Rotary embedding. x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # (..., S, half)
+    if x.ndim == ang.ndim + 1:                                 # head dim present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.log(10_000.0) * jnp.arange(0, d, 2, jnp.float32) / d)
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div[: (d + 1) // 2]))
+    return pe.astype(dtype)
+
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def init_ffn(key, d: int, f: int, glu: bool):
+    ks = jax.random.split(key, 3)
+    p = {"w_in": truncated_normal(ks[0], (d, f), d ** -0.5),
+         "w_out": truncated_normal(ks[1], (f, d), f ** -0.5)}
+    if glu:
+        p["w_gate"] = truncated_normal(ks[2], (d, f), d ** -0.5)
+    return p
+
+
+def apply_ffn(p, x, act: str, dtype):
+    h = x @ p["w_in"].astype(dtype)
+    if "w_gate" in p:
+        h = _act(x @ p["w_gate"].astype(dtype), act) * h
+    else:
+        h = _act(h, act)
+    return h @ p["w_out"].astype(dtype)

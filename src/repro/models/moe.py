@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN with sort-based token dispatch (dropping impl).
+
+Design notes (MaxText-style, chosen for multi-pod shardability):
+  * router -> top-k -> flatten (tokens x k) assignments,
+  * stable-sort assignments by expert, compute each assignment's position
+    within its expert via a counts/offset subtraction (no giant one-hot
+    dispatch tensors - the GShard einsum would materialize O(T*E*C)),
+  * scatter into a (E, C, d) padded buffer (assignments past capacity C are
+    dropped, standard dropping semantics),
+  * batched expert FFN einsum, sharded over the 'model' axis in E,
+  * gather back + weighted combine + load-balancing aux loss.
+
+The expert einsum is the paper's dgemm profile batched E ways; EP sharding
+adds the all-to-all traffic the roofline's collective term tracks.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _act, truncated_normal
+
+
+def init_moe(key, cfg: ModelConfig):
+    d = cfg.d_model
+    de = cfg.d_expert or cfg.d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": truncated_normal(ks[0], (d, e), d ** -0.5),
+        "w_in": truncated_normal(ks[1], (e, d, de), d ** -0.5),
+        "w_out": truncated_normal(ks[2], (e, de, d), de ** -0.5),
+    }
+    if cfg.glu:
+        p["w_gate"] = truncated_normal(ks[3], (e, d, de), d ** -0.5)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def apply_moe(p, x: jnp.ndarray, cfg: ModelConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    ``cfg.moe_grouped`` dispatches per batch row (group = one sequence):
+    the (E, C, d) buffer grows a leading B dim sharded over the data axes
+    while E stays sharded over "model" - dispatch scatter, expert einsum and
+    combine gather are all shard-LOCAL. The flat (global-token) dispatch
+    forces XLA to reshard T x d activations against the model-sharded buffer
+    every layer: the all-to-all/collective-permute storm the qwen3 baseline
+    row shows (EXPERIMENTS.md §Perf). Dropping variance rises slightly
+    (capacity per row instead of global), standard group-wise semantics.
+    """
+    if cfg.moe_grouped:
+        y, aux = jax.vmap(lambda row: _moe_tokens(p, row, cfg))(x)
+        return y, jnp.mean(aux)
+    b, s, d = x.shape
+    y, aux = _moe_tokens(p, x.reshape(b * s, d), cfg)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_tokens(p, xt: jnp.ndarray, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based dispatch over a flat (T, d) token group."""
+    dtype = xt.dtype
+    t, d = xt.shape
+    k = cfg.top_k
+    e = cfg.n_experts
+    cap = capacity(t, cfg)
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)            # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # ---- load-balancing aux loss (Switch-style) ----
+    me = jnp.mean(probs, axis=0)                               # mean prob
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], e), axis=0) # top-1 fraction
+    aux = cfg.router_aux_coef * e * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----
+    flat_e = expert_ids.reshape(-1)                            # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)                      # token of slot
+    order = jnp.argsort(flat_e, stable=True)
+    se, st = flat_e[order], flat_t[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts                       # exclusive
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[se]
+    dest = jnp.where(pos < cap, se * cap + pos, e * cap)       # drop slot
+
+    buf = jnp.zeros((e * cap + 1, d), dtype).at[dest].set(xt[st].astype(dtype))
+    h = buf[: e * cap].reshape(e, cap, d)
+
+    # ---- expert FFN (batched GEMM, sharded over E) ----
+    up = jnp.einsum("ecd,edf->ecf", h, p["w_in"].astype(dtype))
+    if cfg.glu:
+        g = jnp.einsum("ecd,edf->ecf", h, p["w_gate"].astype(dtype))
+        up = _act(g, cfg.act) * up
+    else:
+        up = _act(up, cfg.act)
+    out = jnp.einsum("ecf,efd->ecd", up, p["w_out"].astype(dtype))
+
+    # ---- combine ----
+    out_flat = jnp.concatenate(
+        [out.reshape(e * cap, d), jnp.zeros((1, d), dtype)], axis=0)
+    slot_out = out_flat[dest]                                  # sorted order
+    slot_gate = gate_vals.reshape(-1)[order].astype(dtype)
+    y = jnp.zeros((t, d), dtype).at[st].add(slot_out * slot_gate[:, None])
+    return y, aux.astype(jnp.float32)

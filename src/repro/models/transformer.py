@@ -1,0 +1,305 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Layers are *scanned* (params stacked on a leading L axis) so HLO size is
+layer-count independent - the 94-layer MoE compiles on one CPU core - and
+``jax.checkpoint`` around the scan body gives per-layer remat.
+
+An optional ``shard_fn(x, name)`` hook lets the distributed layer constrain
+activation shardings without the model importing mesh machinery.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import mamba2 as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_embedding, apply_ffn, apply_rmsnorm,
+                                 init_embedding, init_ffn, init_rmsnorm,
+                                 truncated_normal)
+
+ShardFn = Callable[[jnp.ndarray, str], jnp.ndarray]
+_id_shard: ShardFn = lambda x, name: x
+
+
+def maybe_remat(body, cfg: ModelConfig):
+    """Per-layer remat with the configured policy.
+
+    'full' recomputes everything in backward (min memory, ~2x fwd compute in
+    bwd); 'dots' saves matmul outputs (recompute only cheap elementwise -
+    the compute-term hillclimb lever); 'none' disables remat."""
+    if not cfg.remat or cfg.remat_policy == "none":
+        return body
+    policy = None
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(body, prevent_cse=False, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": init_rmsnorm(cfg.d_model)}
+    if cfg.family == "ssm":
+        p["ssm"] = mamba_mod.init_mamba(ks[0], cfg)
+        if cfg.d_ff:
+            p["ln2"] = init_rmsnorm(cfg.d_model)
+            p["ffn"] = init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.glu)
+        return p
+    if cfg.family == "hybrid":
+        p["mix"] = hybrid_mod.init_hybrid(ks[0], cfg)
+    else:
+        p["attn"] = attn_mod.init_attention(ks[0], cfg)
+    p["ln2"] = init_rmsnorm(cfg.d_model)
+    if cfg.family == "moe":
+        assert cfg.moe_every == 1, "scan requires uniform layer structure"
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["ffn"] = init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.glu)
+    return p
+
+
+def apply_block(p, x, cfg: ModelConfig, positions, is_global,
+                shard_fn: ShardFn = _id_shard,
+                use_pallas: Optional[bool] = None,
+                causal: bool = True):
+    """Full-sequence block. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.family == "ssm":
+        x = x + mamba_mod.apply_mamba(p["ssm"], h, cfg, use_pallas=use_pallas)
+        if cfg.d_ff:
+            h2 = apply_rmsnorm(p["ln2"], x, cfg.norm_eps)
+            x = x + apply_ffn(p["ffn"], h2, cfg.act, x.dtype)
+        return shard_fn(x, "residual"), aux
+    if cfg.family == "hybrid":
+        mix = hybrid_mod.apply_hybrid(p["mix"], h, cfg, positions, is_global,
+                                      use_pallas=use_pallas)
+        x = x + mix
+    else:
+        window = cfg.window
+        x = x + attn_mod.apply_attention(p["attn"], h, cfg, positions,
+                                         window=window, causal=causal,
+                                         use_pallas=use_pallas)
+    x = shard_fn(x, "residual")
+    h = apply_rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe_mod.apply_moe(p["moe"], h, cfg)
+    else:
+        y = apply_ffn(p["ffn"], h, cfg.act, x.dtype)
+    return shard_fn(x + y, "residual"), aux
+
+
+def apply_block_decode(p, x, cfg: ModelConfig, cache, cache_index, is_global
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, dict]:
+    """One-token decode block. Returns (x, aux, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.family == "ssm":
+        y, nc = mamba_mod.apply_mamba_decode(p["ssm"], h, cfg, cache)
+        x = x + y
+        if cfg.d_ff:
+            h2 = apply_rmsnorm(p["ln2"], x, cfg.norm_eps)
+            x = x + apply_ffn(p["ffn"], h2, cfg.act, x.dtype)
+        return x, aux, nc
+    if cfg.family == "hybrid":
+        y, nc = hybrid_mod.apply_hybrid_decode(p["mix"], h, cfg, cache,
+                                               cache_index, is_global)
+        x = x + y
+    else:
+        smax = cache["k"].shape[1]
+        kv_len = jnp.minimum(cache_index + 1, smax)
+        y, nc = attn_mod.apply_attention_decode(
+            p["attn"], h, cfg, cache, cache_index % smax, cache_index, kv_len)
+        x = x + y
+    h = apply_rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe_mod.apply_moe(p["moe"], h, cfg)
+    else:
+        y = apply_ffn(p["ffn"], h, cfg.act, x.dtype)
+    return x + y, aux, nc
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def _is_global_arr(cfg: ModelConfig) -> jnp.ndarray:
+    g = jnp.zeros((cfg.n_layers,), bool)
+    for i in cfg.global_layers:
+        g = g.at[i].set(True)
+    return g
+
+
+def init_lm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    params = {
+        "embed": init_embedding(ks[0], cfg.vocab, cfg.d_model),
+        "blocks": jax.vmap(lambda k: init_block(k, cfg))(
+            jax.random.split(ks[1], cfg.n_layers)),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = truncated_normal(ks[2], (cfg.d_model, cfg.vocab),
+                                          cfg.d_model ** -0.5)
+    if cfg.frontend is not None:
+        params["frontend_proj"] = truncated_normal(
+            ks[3], (cfg.d_model, cfg.d_model), cfg.d_model ** -0.5)
+    return params
+
+
+def _logits(params, x, cfg: ModelConfig):
+    head = (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["head"])
+    logits = x @ head.astype(x.dtype)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits.astype(jnp.float32) / c)
+    return logits
+
+
+def forward(params, tokens, cfg: ModelConfig,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            shard_fn: ShardFn = _id_shard,
+            use_pallas: Optional[bool] = None,
+            collect_kv: bool = False):
+    """Training / prefill forward.
+
+    tokens: (B, S) int32. prefix_embeds: (B, P, d) stub frontend output
+    (vlm/audio), prepended before the token embeddings.
+    Returns (logits (B, S_total, d), aux) or (logits, aux, caches) with
+    ``collect_kv`` (prefill).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = apply_embedding(params["embed"], tokens, dtype)
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(dtype) @ params["frontend_proj"].astype(dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = shard_fn(x, "residual")
+    is_global = _is_global_arr(cfg)
+
+    def body(carry, layer):
+        xc, aux = carry
+        lp, g = layer
+        xc, a = apply_block(lp, xc, cfg, positions, g, shard_fn=shard_fn,
+                            use_pallas=use_pallas)
+        return (xc, aux + a), None
+
+    body = maybe_remat(body, cfg)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   (params["blocks"], is_global))
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda t: t[i], params["blocks"])
+            (x, aux), _ = body((x, aux), (lp, is_global[i]))
+    x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, x, cfg), aux
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    """Stacked (L, ...) caches for the scan-over-layers decode path.
+
+    Hybrid models return a per-layer *list* (global layers carry a full
+    horizon, windowed layers a ring of ``window`` slots - shapes differ), and
+    decode unrolls layers instead of scanning.
+    """
+    if cfg.family == "hybrid":
+        g = set(cfg.global_layers)
+        return [hybrid_mod.init_hybrid_cache(cfg, batch, max_len,
+                                             is_global=(i in g), dtype=dtype)
+                for i in range(cfg.n_layers)]
+    def one(_):
+        if cfg.family == "ssm":
+            return mamba_mod.init_ssm_cache(cfg, batch, dtype)
+        return attn_mod.init_kv_cache(cfg, batch, max_len, dtype)
+    caches = [one(i) for i in range(cfg.n_layers)]
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *caches)
+
+
+def decode_step(params, token, cfg: ModelConfig, caches, cache_index,
+                shard_fn: ShardFn = _id_shard):
+    """One serving step: token (B, 1) -> (logits (B, 1, V), new caches)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = apply_embedding(params["embed"], token, dtype)
+    x = shard_fn(x, "residual")
+    is_global = _is_global_arr(cfg)
+
+    def body(carry, layer):
+        xc = carry
+        lp, cache, g = layer
+        xc, _, nc = apply_block_decode(lp, xc, cfg, cache, cache_index, g)
+        xc = shard_fn(xc, "residual")
+        return xc, nc
+
+    if isinstance(caches, list):            # hybrid: ragged cache shapes
+        ncs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda t: t[i], params["blocks"])
+            x, nc = body(x, (lp, caches[i], is_global[i]))
+            ncs.append(nc)
+        new_caches = ncs
+    elif cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x,
+                                     (params["blocks"], caches, is_global))
+    else:
+        ncs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda t: t[i], params["blocks"])
+            cache = jax.tree.map(lambda t: t[i], caches)
+            x, nc = body(x, (lp, cache, is_global[i]))
+            ncs.append(nc)
+        new_caches = jax.tree.map(lambda *ls: jnp.stack(ls), *ncs)
+    x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, x, cfg), new_caches
+
+
+def prefill(params, tokens, cfg: ModelConfig,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            shard_fn: ShardFn = _id_shard,
+            use_pallas: Optional[bool] = None):
+    """Prefill: full forward + per-layer KV caches (attention families).
+
+    Implemented as a scan whose ys are the per-layer caches.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = apply_embedding(params["embed"], tokens, dtype)
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(dtype) @ params["frontend_proj"].astype(dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = shard_fn(x, "residual")
+    is_global = _is_global_arr(cfg)
+
+    def body(carry, layer):
+        xc, aux = carry
+        lp, g = layer
+        h = apply_rmsnorm(lp["ln1"], xc, cfg.norm_eps)
+        kv = None
+        if cfg.family in ("dense", "moe", "vlm"):
+            q, k, v = attn_mod._project_qkv(lp["attn"], h, cfg, positions,
+                                            dtype)
+            kv = {"k": k, "v": v}
+        xc, a = apply_block(lp, xc, cfg, positions, g, shard_fn=shard_fn,
+                            use_pallas=use_pallas)
+        return (xc, aux + a), kv
+
+    body = maybe_remat(body, cfg)
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["blocks"], is_global))
+    x = apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, x, cfg), aux, caches

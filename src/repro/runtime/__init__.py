@@ -1,0 +1,3 @@
+from repro.runtime.fault_tolerance import (Heartbeat, SimulatedFailure,
+                                           StragglerDetector,
+                                           run_with_restarts)

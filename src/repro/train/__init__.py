@@ -1,0 +1,2 @@
+from repro.train import losses, optimizer, train_state
+from repro.train.optimizer import AdamWConfig

@@ -1,0 +1,35 @@
+"""Losses: causal-LM cross entropy (fp32, z-loss regularized)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None,
+                  z_loss: float = 1e-4):
+    """Mean token cross-entropy. logits (B, S, V) any dtype; labels (B, S).
+
+    z-loss (PaLM) keeps the softmax normalizer bounded - at 512-chip scale
+    that is a stability feature, not a nicety.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def next_token_loss(logits, tokens, z_loss: float = 1e-4):
+    """Shifted LM loss: predict tokens[t+1] from logits[t]. Handles logits
+    longer than tokens (prefix embeddings prepended): the prefix positions
+    are dropped before shifting."""
+    extra = logits.shape[1] - tokens.shape[1]
+    if extra:
+        logits = logits[:, extra:]
+    return cross_entropy(logits[:, :-1], tokens[:, 1:], z_loss=z_loss)

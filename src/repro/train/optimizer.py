@@ -1,0 +1,148 @@
+"""AdamW from scratch, with optional 8-bit (blockwise-quantized) moments.
+
+The 8-bit moments follow the bitsandbytes recipe: dynamic blockwise
+quantization with one fp32 absmax scale per 256-value block. For the 1T-param
+assigned arch this is the difference between fitting and not fitting HBM
+(EXPERIMENTS.md records the memory_analysis deltas).
+
+All state is a plain pytree so the distributed layer shards it with the same
+rules as the parameters (ZeRO-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Q_BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    eight_bit: bool = False
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8 quantization
+# ---------------------------------------------------------------------------
+
+def _q8(x: jnp.ndarray):
+    """fp32 -> (int8 codes, fp32 block scales). Pads to Q_BLOCK internally."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % Q_BLOCK
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, Q_BLOCK)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(fp / safe), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    fp = q.astype(jnp.float32) * scale
+    n = 1
+    for d in shape:
+        n *= d
+    return fp.reshape(-1)[:n].reshape(shape)
+
+
+def _q8_sqrt(v: jnp.ndarray):
+    """Non-negative second moment -> int8 in sqrt domain (range compression:
+    the linear absmax code would flush small-v entries in a block to zero and
+    the Adam denominator would explode - the bitsandbytes dynamic-quant
+    problem, solved here with sqrt coding + a half-step floor)."""
+    return _q8(jnp.sqrt(v))
+
+
+def _dq8_sqrt(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    s = q.astype(jnp.float32) * scale
+    floor = scale / (2.0 * 127.0)                  # half quantization step
+    s = jnp.maximum(s, jnp.broadcast_to(floor, s.shape))
+    n = 1
+    for d in shape:
+        n *= d
+    return (s * s).reshape(-1)[:n].reshape(shape)
+
+
+class _Moment(NamedTuple):
+    q: jnp.ndarray
+    scale: jnp.ndarray
+
+
+def _zeros_moment(p: jnp.ndarray, eight_bit: bool):
+    if not eight_bit:
+        return jnp.zeros(p.shape, jnp.float32)
+    n = p.size
+    blocks = -(-n // Q_BLOCK)
+    return _Moment(jnp.zeros((blocks, Q_BLOCK), jnp.int8),
+                   jnp.zeros((blocks, 1), jnp.float32))
+
+
+def init(params, cfg: AdamWConfig):
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: _zeros_moment(p, cfg.eight_bit), params),
+        "v": jax.tree.map(lambda p: _zeros_moment(p, cfg.eight_bit), params),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def update(grads, state, params, cfg: AdamWConfig,
+           lr: Optional[jnp.ndarray] = None):
+    """One AdamW step. Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = schedule(cfg, step) if lr is None else lr
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def leaf(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        mf = _dq8(m.q, m.scale, p.shape) if isinstance(m, _Moment) else m
+        vf = _dq8_sqrt(v.q, v.scale, p.shape) if isinstance(v, _Moment) else v
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * g * g
+        upd = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        newp = p.astype(jnp.float32) * (1 - lr * cfg.weight_decay) - lr * upd
+        if isinstance(m, _Moment):
+            mq, ms = _q8(mf)
+            vq, vs = _q8_sqrt(vf)
+            return newp.astype(p.dtype), _Moment(mq, ms), _Moment(vq, vs)
+        return newp.astype(p.dtype), mf, vf
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [leaf(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"step": step, "m": new_m, "v": new_v}, stats

@@ -1,0 +1,78 @@
+"""Train state + the train_step builder used by the launcher and dry-run.
+
+The step supports gradient accumulation (``accum_steps`` microbatches via
+lax.scan - activation memory divides by the accumulation factor, and XLA's
+latency-hiding scheduler overlaps each microbatch's gradient reduce-scatter
+with the next microbatch's compute), global-norm clipping, and the 8-bit
+AdamW. Params are stored fp32 (masters) and cast to cfg.dtype inside the
+forward; grads accumulate in fp32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model_zoo
+from repro.models.config import ModelConfig
+from repro.train import optimizer
+from repro.train.losses import next_token_loss
+from repro.train.optimizer import AdamWConfig
+
+
+def init_state(key, cfg: ModelConfig, opt_cfg: AdamWConfig):
+    params = model_zoo.init(key, cfg)
+    return {"params": params, "opt": optimizer.init(params, opt_cfg)}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    shard_fn=lambda x, n: x,
+                    donate: bool = True) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``batch['tokens']``: (accum, B/accum, S) when accum_steps > 1 else (B, S)
+    - the launcher reshapes; microbatches scan sequentially.
+    """
+    accum = max(cfg.accum_steps, 1)
+
+    def loss_fn(params, micro):
+        logits, aux = model_zoo.forward(params, micro, cfg, shard_fn=shard_fn,
+                                        use_pallas=False)
+        return next_token_loss(logits, micro["tokens"]) + aux
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro_step(acc, micro):
+                g_acc, l_acc = acc
+                l, g = jax.value_and_grad(loss_fn)(params, micro)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = jax.lax.scan(
+                micro_step, (g0, jnp.zeros((), jnp.float32)), batch)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+
+        new_params, new_opt, stats = optimizer.update(
+            grads, state["opt"], params, opt_cfg)
+        metrics = {"loss": loss, **stats}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, shard_fn=lambda x, n: x) -> Callable:
+    def eval_step(state, batch):
+        logits, aux = model_zoo.forward(state["params"], batch, cfg,
+                                        shard_fn=shard_fn, use_pallas=False)
+        return {"loss": next_token_loss(logits, batch["tokens"]) + aux}
+    return eval_step

@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here - smoke tests and benches must
+see 1 device; only launch/dryrun forces 512 placeholder devices (and tests
+that need a few devices spawn a subprocess - see test_distributed.py)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,118 @@
+"""Paper section 4: symbolic censuses vs the enumerated ISA streams."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import characterization as ch
+from repro.core import isa
+
+
+def test_ddot_counts_match_stream():
+    for n in (16, 100, 257):
+        prof = ch.characterize_ddot(n)
+        stream = isa.compile_ddot(n, schedule="tree")
+        census = stream.census()
+        assert census["mul"] == prof.pipes["mul"].n_i == n
+        assert census["add"] == prof.pipes["add"].n_i == n - 1
+        assert stream.hazard_census()["mul"] == 0  # fig. 5: parallel muls
+
+
+def test_ddot_sequential_maximal_hazards():
+    n = 64
+    stream = isa.compile_ddot(n, schedule="sequential")
+    hz = stream.hazard_census()
+    # every accumulate (after the first) depends on the previous instruction
+    assert hz["add"] == n - 2
+    prof = ch.characterize_ddot(n, schedule="sequential")
+    assert prof.pipes["add"].n_h == n - 2
+
+
+def test_strided_schedule_reduces_hazards():
+    n = 512
+    seq = isa.compile_ddot(n, schedule="sequential").hazard_census()["add"]
+    s8 = isa.compile_ddot(n, schedule="strided",
+                          accumulators=8).hazard_census()["add"]
+    assert s8 < seq / 4  # U accumulators break the back-to-back chain
+
+
+def test_dgemv_scales_ddot():
+    prof = ch.characterize_dgemv(10, 50)
+    one = ch.characterize_ddot(50)
+    assert prof.pipes["mul"].n_i == 10 * one.pipes["mul"].n_i
+    assert prof.pipes["add"].n_i == 10 * one.pipes["add"].n_i
+
+
+def test_dgemm_counts():
+    m, n, k = 8, 9, 10
+    prof = ch.characterize_dgemm(m, n, k)
+    stream = isa.compile_dgemm(m, n, k)
+    census = stream.census()
+    assert census["mul"] == m * n * k == prof.pipes["mul"].n_i
+    assert census["add"] == m * n * (k - 1) == prof.pipes["add"].n_i
+    assert prof.flops == 2 * m * n * k
+
+
+def test_dgemm_unroll_reduces_hazards():
+    h1 = isa.compile_dgemm(4, 4, 64, unroll=1).hazard_census()["add"]
+    h8 = isa.compile_dgemm(4, 4, 64, unroll=8).hazard_census()["add"]
+    assert h8 < h1 / 4  # the paper's compiler-optimization effect [23]
+
+
+def test_qr_stream_op_mix():
+    n = 12
+    stream = isa.compile_dgeqrf(n)
+    census = stream.census()
+    # sqrt: one per factored column; div: ~n^2/2 (scaling) + tau
+    assert census["sqrt"] == n - 1
+    assert n * (n - 1) / 2 * 0.5 < census["div"] < n * n
+    # O(n^3) muls dominate O(n^2) divs (the paper's fig. 9 point)
+    assert census["mul"] > 10 * census["div"]
+    prof = ch.characterize_dgeqrf(n)
+    assert prof.pipes["sqrt"].n_h >= prof.pipes["sqrt"].n_i - 1  # serial
+
+
+def test_lu_stream_op_mix():
+    n = 12
+    census = isa.compile_dgetrf(n).census()
+    assert census["sqrt"] == 0                      # no sqrt in LU
+    assert census["div"] == n * (n - 1) / 2         # column scalings
+    prof = ch.characterize_dgetrf(n)
+    assert prof.pipes["div"].n_i == n * (n - 1) / 2
+
+
+def test_cholesky_stream():
+    n = 10
+    census = isa.compile_dpotrf(n).census()
+    assert census["sqrt"] == n
+    assert census["div"] == n * (n - 1) / 2
+
+
+def test_optimal_depths_ordering():
+    """The paper's bottom line: hazard-free mul pipe wants deep pipelines,
+    serial sqrt/div pipes want shallow ones."""
+    prof = ch.characterize_dgeqrf(100)
+    d = prof.optimal_depths(p_max=64)
+    assert d["mul"] == 64                        # monotone: deepest allowed
+    assert d["sqrt"] < d["mul"]
+    assert d["div"] < d["mul"]
+
+
+@given(n=st.integers(4, 2048))
+@settings(max_examples=30, deadline=None)
+def test_property_ddot_census_invariants(n):
+    prof = ch.characterize_ddot(n)
+    assert prof.pipes["mul"].n_h == 0
+    assert prof.pipes["add"].n_i == n - 1
+    assert 0 <= prof.pipes["add"].n_h <= prof.pipes["add"].n_i
+    assert prof.flops == 2 * n - 1
+
+
+@given(m=st.integers(2, 12), n=st.integers(2, 12), k=st.integers(2, 24),
+       u=st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_property_gemm_stream_matches_census(m, n, k, u):
+    stream = isa.compile_dgemm(m, n, k, unroll=u)
+    census = stream.census()
+    assert census["mul"] == m * n * k
+    assert census["add"] == m * n * (k - 1)
+    assert stream.flops == 2 * m * n * k - m * n

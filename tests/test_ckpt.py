@@ -1,0 +1,75 @@
+"""Checkpointing: atomicity, keep-N, manifests, elastic restore."""
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ck
+from repro.ckpt.manager import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 8)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": (jnp.ones((3,)), jnp.zeros((2, 2)))}}
+
+
+def test_save_restore_roundtrip():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 5, t)
+        like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+        r, step = ck.restore(d, like)
+        assert step == 5
+        eq = jax.tree.map(lambda a, b: bool(jnp.all(a == b)), t, r)
+        assert all(jax.tree.leaves(eq))
+
+
+def test_keep_n_gc():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        for s in range(6):
+            ck.save(d, s, t, keep=3)
+        assert ck.all_steps(d) == [3, 4, 5]
+
+
+def test_atomic_no_partial_dirs():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 1, t)
+        names = os.listdir(d)
+        assert all(not n.startswith(".tmp") for n in names)
+        # manifest contents
+        with open(os.path.join(d, "step_0000000001", "manifest.json")) as f:
+            man = json.load(f)
+        assert man["step"] == 1
+        assert "a" in man["keys"]
+
+
+def test_restore_missing_key_errors():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 0, t)
+        bad_like = {"zzz": jax.ShapeDtypeStruct((1,), jnp.float32)}
+        with pytest.raises(KeyError):
+            ck.restore(d, bad_like)
+
+
+def test_latest_step_empty():
+    with tempfile.TemporaryDirectory() as d:
+        assert ck.latest_step(d) is None
+        mgr = CheckpointManager(d)
+        state, step = mgr.restore_latest({"x": jax.ShapeDtypeStruct((1,), jnp.float32)})
+        assert state is None and step == -1
+
+
+def test_manager_interval():
+    mgr = CheckpointManager("/tmp/unused", save_interval=10)
+    assert not mgr.should_save(0)
+    assert mgr.should_save(10)
+    assert not mgr.should_save(11)

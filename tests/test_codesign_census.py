@@ -1,0 +1,132 @@
+"""TPU codesign layer + jaxpr census."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codesign as cd
+from repro.core import jaxpr_census as jc
+
+
+def test_optimal_accumulators_fills_latency():
+    # large n: optimum ~ add latency (pipeline-slot filling)
+    u = cd.optimal_accumulators(1e6, latency=6)
+    assert u == 8  # next pow2 >= 6 minimizes steady-state stalls
+    # tiny n: overhead pulls it down
+    assert cd.optimal_accumulators(4) <= 4
+
+
+def test_reduction_cost_shape():
+    # eq.-2 analogue: cost has the fixed + 1/U + U structure
+    n = 1e5
+    c1 = cd.reduction_cost(n, 1)
+    c8 = cd.reduction_cost(n, 8)
+    c64 = cd.reduction_cost(n, 64)
+    assert c8 < c1            # filling the pipe helps
+    assert c8 <= c64 * 1.01   # oversubscribing stops helping
+
+
+def test_gemm_plan_constraints():
+    p = cd.plan_gemm(4096, 4096, 4096)
+    assert p.bm % 128 == 0 and p.bn % 128 == 0 and p.bk % 128 == 0
+    assert p.vmem_bytes <= cd.VMEM_BYTES
+    assert p.compute_bound          # big square GEMM must be compute bound
+    tiny = cd.plan_gemm(64, 64, 64)
+    assert tiny.bm == 128 and tiny.bn == 128
+
+
+def test_gemm_plan_memory_bound_detection():
+    p = cd.plan_gemm(8, 8192, 8192)     # skinny: low arithmetic intensity
+    assert p.arithmetic_intensity < cd.PEAK_BF16_FLOPS / cd.HBM_BW
+
+
+def test_attention_plan():
+    p = cd.plan_attention(32768, 32768, 128)
+    assert p.block_q % 8 == 0 and p.block_k % 128 == 0
+    assert p.vmem_bytes <= cd.VMEM_BYTES
+    assert p.grid_kv == -(-32768 // p.block_k)
+
+
+def test_ssd_plan():
+    p = cd.plan_ssd(32768, 24, 64, 128)
+    assert p.chunk in (64, 128, 256)
+    assert p.vmem_bytes <= cd.VMEM_BYTES
+
+
+@given(m=st.integers(1, 5000), n=st.integers(1, 5000), k=st.integers(1, 5000))
+@settings(max_examples=40, deadline=None)
+def test_property_gemm_plan_always_valid(m, n, k):
+    p = cd.plan_gemm(m, n, k)
+    assert p.vmem_bytes <= cd.VMEM_BYTES
+    assert p.bm >= 1 and p.bn >= 1 and p.bk >= 1
+    # grid covers the padded problem
+    assert p.grid[0] * p.bm >= m
+    assert p.grid[1] * p.bn >= n
+    assert p.grid[2] * p.bk >= k
+
+
+# ---------------------------------------------------------------------------
+# jaxpr census
+# ---------------------------------------------------------------------------
+
+def test_census_matmul():
+    f = lambda a, b: a @ b
+    c = jc.census_of(f, jax.ShapeDtypeStruct((32, 64), jnp.float32),
+                     jax.ShapeDtypeStruct((64, 16), jnp.float32))
+    assert c.n_i["mul"] == 32 * 64 * 16
+    assert c.n_i["add"] == 32 * 64 * 16
+    assert c.flops == 2 * 32 * 64 * 16
+
+
+def test_census_elementwise_and_classes():
+    def f(x):
+        return jnp.sqrt(x) / (x + 1.0) * jnp.exp(x)
+    c = jc.census_of(f, jax.ShapeDtypeStruct((100,), jnp.float32))
+    assert c.n_i["sqrt"] == 100
+    assert c.n_i["div"] == 100
+    assert c.n_i["add"] == 100
+    assert c.n_i["exp"] == 100
+
+
+def test_census_scan_serial_hazards():
+    def f(x):
+        return jax.lax.scan(lambda c, _: (c * 0.9 + 1.0, None), x,
+                            None, length=50)[0]
+    c = jc.census_of(f, jax.ShapeDtypeStruct((8,), jnp.float32))
+    # loop-carried dependence: hazard ratio ~ 1 on the adder pipe
+    assert c.n_h["add"] / c.n_i["add"] > 0.9
+    assert c.critical_path > 50
+
+
+def test_census_to_profile_depths():
+    """End-to-end: census a GEMM-like fn -> paper profile -> deep mul pipe,
+    and a scan recurrence -> shallow add pipe. The paper's conclusion,
+    derived mechanically from jaxprs."""
+    gemm = jc.census_of(lambda a, b: a @ b,
+                        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                        jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    rec = jc.census_of(
+        lambda x: jax.lax.scan(lambda c, _: (c + 1.0, None), x, None,
+                               length=64)[0],
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    d_gemm = gemm.to_profile().optimal_depths()
+    d_rec = rec.to_profile().optimal_depths()
+    assert d_gemm["add"] > d_rec["add"]
+
+
+def test_census_model_forward():
+    """The census runs on a real model's train-step-sized jaxpr."""
+    from repro.models import model_zoo as zoo
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig("t", "dense", n_layers=2, d_model=32, n_heads=2,
+                      n_kv=1, d_ff=64, vocab=64)
+    params = jax.eval_shape(lambda k: zoo.init(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    c = jc.census_of(
+        lambda p, t: zoo.forward(p, {"tokens": t}, cfg)[0], params,
+        jax.ShapeDtypeStruct((2, 16), jnp.int32))
+    assert c.n_i["mul"] > 5e4           # matmul volume present
+    assert c.n_i["exp"] > 0             # softmax
+    prof = c.to_profile()
+    assert set(prof.optimal_depths()) <= {"mul", "add", "div", "sqrt"}

@@ -1,0 +1,41 @@
+"""Fault-tolerance runtime primitives."""
+import os
+import tempfile
+import time
+
+from repro.runtime.fault_tolerance import (Heartbeat, SimulatedFailure,
+                                           StragglerDetector,
+                                           run_with_restarts)
+
+
+def test_heartbeat():
+    with tempfile.TemporaryDirectory() as d:
+        hb = Heartbeat(os.path.join(d, "hb.json"))
+        assert hb.is_stale(0.1)           # no file yet
+        hb.beat(3)
+        assert not hb.is_stale(5.0)
+        assert hb.age() < 5.0
+
+
+def test_straggler_detection():
+    det = StragglerDetector(window=20, threshold=2.0)
+    for i in range(20):
+        det.observe(i, 0.10)
+    assert det.observe(20, 0.50)          # 5x median -> flagged
+    assert not det.observe(21, 0.12)
+    rep = det.report()
+    assert rep["flagged"] == [20]
+    assert abs(rep["median_s"] - 0.10) < 0.02
+
+
+def test_run_with_restarts_gives_up():
+    def always_fails(_):
+        raise SimulatedFailure("boom")
+    rep = run_with_restarts(always_fails, max_restarts=2)
+    assert not rep.completed
+    assert rep.restarts == 2
+
+
+def test_run_with_restarts_immediate_success():
+    rep = run_with_restarts(lambda _: 1, max_restarts=2)
+    assert rep.completed and rep.restarts == 0

@@ -1,0 +1,130 @@
+"""Trip-count-aware HLO cost analysis vs XLA's cost_analysis."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import hlo_cost
+
+W = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+EXPECT = 2 * 128 ** 3
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_dot_exact():
+    c = hlo_cost.analyze(_hlo(lambda w, x: x @ w, W, W))
+    assert c.flops == pytest.approx(EXPECT, rel=1e-6)
+
+
+def test_xla_undercounts_scan_we_do_not():
+    """The probe DESIGN.md section 7 + the roofline correction rest on."""
+    def scanned(w, x):
+        return jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=8)[0]
+    compiled = jax.jit(scanned).lower(W, W).compile()
+    xla = compiled.cost_analysis()
+    xla = xla[0] if isinstance(xla, list) else xla
+    ours = hlo_cost.analyze(compiled.as_text())
+    assert xla.get("flops", 0) == pytest.approx(EXPECT, rel=0.01)   # 1x body!
+    assert ours.flops == pytest.approx(8 * EXPECT, rel=0.01)        # 8x body
+
+
+def test_nested_scan():
+    def nested(w, x):
+        def outer(c, _):
+            return jax.lax.scan(lambda d, _: (d @ w, None), c, None,
+                                length=4)[0], None
+        return jax.lax.scan(outer, x, None, length=3)[0]
+    c = hlo_cost.analyze(_hlo(nested, W, W))
+    assert c.flops == pytest.approx(12 * EXPECT, rel=0.01)
+
+
+def test_fusion_flops_counted_bytes_boundary_only():
+    def f(x):
+        return jnp.sum(jnp.exp(x) * x + 1.0)
+    c = hlo_cost.analyze(_hlo(f, W))
+    n = 128 * 128
+    # ~3n elementwise + n-ish reduce; generous bounds
+    assert n <= c.flops <= 10 * n
+    # bytes: input once + small outputs, NOT per-elementwise-op
+    assert c.bytes <= 6 * n * 4
+
+
+def test_remat_recompute_visible():
+    """checkpointed grad recomputes the forward: flops ~3x fwd dot count."""
+    def f(w, x):
+        y = jax.checkpoint(lambda a: jnp.tanh(a @ w))(x)
+        return jnp.sum(y @ w)
+    fwd = hlo_cost.analyze(_hlo(lambda w, x: jnp.sum(jnp.tanh(x @ w) @ w),
+                                W, W)).flops
+    g = hlo_cost.analyze(_hlo(lambda w, x: jax.grad(
+        lambda xx: f(w, xx))(x), W, W)).flops
+    assert g > 1.5 * fwd
+
+
+def test_trip_count_parse_robust():
+    # hand-built module with tuple-typed while
+    hlo = """
+HloModule m
+
+%body (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,64] get-tuple-element(%p), index=1
+  %d = f32[64,64] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[64,64]) tuple(%ip, %d)
+}
+
+%cond (p2: (s32[], f32[64,64])) -> pred[] {
+  %p2 = (s32[], f32[64,64]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(17)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main (a: f32[64,64]) -> f32[64,64] {
+  %a = f32[64,64] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[64,64]) tuple(%z, %a)
+  %w = (s32[], f32[64,64]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[64,64] get-tuple-element(%w), index=1
+}
+"""
+    c = hlo_cost.analyze(hlo)
+    assert c.flops == pytest.approx(17 * 2 * 64 ** 3 + 17, rel=0.01)
+
+
+def test_collectives_scaled_by_trips():
+    hlo = """
+HloModule m
+
+%body (p: (s32[], f32[256])) -> (s32[], f32[256]) {
+  %p = (s32[], f32[256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[256] get-tuple-element(%p), index=1
+  %ar = f32[256] all-reduce(%x), to_apply=%sum
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[256]) tuple(%ip, %ar)
+}
+
+%cond (p2: (s32[], f32[256])) -> pred[] {
+  %p2 = (s32[], f32[256]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main (a: f32[256]) -> f32[256] {
+  %a = f32[256] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[256]) tuple(%z, %a)
+  %w = (s32[], f32[256]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[256] get-tuple-element(%w), index=1
+}
+"""
+    c = hlo_cost.analyze(hlo)
+    assert c.coll["all-reduce"] == pytest.approx(5 * 256 * 4)

@@ -1,0 +1,116 @@
+"""LAPACK substrate: QR / LU / Cholesky / solvers (+ hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import lapack
+from repro.blas.level3 import dtrsm
+
+
+def _rand(rng, m, n):
+    return jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+
+
+@pytest.mark.parametrize("block", [8, 999])
+@pytest.mark.parametrize("m,n", [(32, 32), (48, 32), (33, 20)])
+def test_qr_reconstruction(rng, m, n, block):
+    a = _rand(rng, m, n)
+    q, r = lapack.qr.qr(a, block=block)
+    np.testing.assert_allclose(np.asarray(q @ r), np.asarray(a), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(n), atol=5e-4)
+    # R upper triangular
+    assert float(jnp.max(jnp.abs(jnp.tril(r, -1)))) < 1e-5
+
+
+def test_qr_matches_numpy_abs(rng):
+    a = _rand(rng, 24, 24)
+    _, r = lapack.qr.qr(a)
+    r_np = np.linalg.qr(np.asarray(a))[1]
+    # QR unique up to column signs
+    np.testing.assert_allclose(np.abs(np.asarray(r)), np.abs(r_np),
+                               atol=5e-4)
+
+
+@pytest.mark.parametrize("block", [8, 999])
+def test_lu_reconstruction(rng, block):
+    a = _rand(rng, 40, 40)
+    packed, piv = lapack.getrf(a, block=block)
+    np.testing.assert_allclose(np.asarray(lapack.lu_reconstruct(packed, piv)),
+                               np.asarray(a), atol=5e-4)
+    # partial pivoting: |L| <= 1
+    l = np.tril(np.asarray(packed), -1)
+    assert np.max(np.abs(l)) <= 1.0 + 1e-5
+
+
+def test_lu_blocked_equals_unblocked(rng):
+    a = _rand(rng, 36, 36)
+    p1, v1 = lapack.getrf(a, block=8)
+    p2, v2 = lapack.getrf_unblocked(a)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=3e-4)
+    assert bool(jnp.all(v1 == v2))
+
+
+@pytest.mark.parametrize("block", [8, 999])
+def test_cholesky(rng, block):
+    a = _rand(rng, 32, 32)
+    s = a @ a.T + 32 * jnp.eye(32)
+    c = lapack.potrf(s, block=block)
+    np.testing.assert_allclose(np.asarray(c @ c.T), np.asarray(s), rtol=1e-4,
+                               atol=5e-3)
+    np.testing.assert_allclose(np.asarray(c), np.linalg.cholesky(np.asarray(s)),
+                               rtol=2e-3, atol=5e-3)
+
+
+def test_gesv(rng):
+    a = _rand(rng, 32, 32) + 8 * jnp.eye(32)
+    b = _rand(rng, 32, 3)
+    x = lapack.gesv(a, b, block=8)
+    np.testing.assert_allclose(np.asarray(a @ x), np.asarray(b), atol=2e-3)
+
+
+def test_lstsq_qr(rng):
+    a = _rand(rng, 50, 20)
+    b = jnp.asarray(rng.normal(size=50).astype(np.float32))
+    x = lapack.lstsq_qr(a, b)
+    ref = np.linalg.lstsq(np.asarray(a), np.asarray(b), rcond=None)[0]
+    np.testing.assert_allclose(np.asarray(x), ref, atol=2e-3)
+
+
+def test_jit_compatible(rng):
+    a = _rand(rng, 24, 24)
+    f = jax.jit(lambda m: lapack.getrf(m, block=8))
+    packed, piv = f(a)
+    np.testing.assert_allclose(np.asarray(lapack.lu_reconstruct(packed, piv)),
+                               np.asarray(a), atol=3e-4)
+    g = jax.jit(lambda m: lapack.qr.geqrf(m, block=8))
+    pk, tau = g(a)
+    q = lapack.q_from_geqrf(pk, tau)
+    r = jnp.triu(pk)
+    np.testing.assert_allclose(np.asarray(q @ r), np.asarray(a), atol=5e-4)
+
+
+@given(seed=st.integers(0, 2 ** 31 - 1), n=st.integers(4, 48))
+@settings(max_examples=15, deadline=None)
+def test_property_lu_solves(seed, n):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32)) \
+        + n * jnp.eye(n)
+    b = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    x = lapack.gesv(a, b, block=16)
+    resid = float(jnp.max(jnp.abs(a @ x - b)))
+    assert resid < 1e-2 * n
+
+
+@given(seed=st.integers(0, 2 ** 31 - 1), m=st.integers(6, 40),
+       n=st.integers(4, 30))
+@settings(max_examples=15, deadline=None)
+def test_property_qr_orthogonality(seed, m, n):
+    if m < n:
+        m, n = n, m
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    q, r = lapack.qr.qr(a, block=16)
+    err = float(jnp.max(jnp.abs(q.T @ q - jnp.eye(n))))
+    assert err < 3e-3

@@ -1,0 +1,110 @@
+"""Regression tests for the beyond-paper optimizations (EXPERIMENTS §Perf)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.models import moe as moe_mod
+from repro.models import model_zoo as zoo
+from repro.models.config import ModelConfig
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])
+@pytest.mark.parametrize("s,w", [(256, 32), (192, 64), (130, 16)])
+def test_banded_attention_exact(rng, hq, hkv, s, w):
+    q = jnp.asarray(rng.normal(size=(2, hq, s, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, hkv, s, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, hkv, s, 16)).astype(np.float32))
+    want = ref.attention(q, k, v, causal=True, window=w)
+    got = ref.banded_attention(q, k, v, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5)
+
+
+def test_banded_attention_grad_finite(rng):
+    q = jnp.asarray(rng.normal(size=(1, 2, 64, 8)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 64, 8)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 64, 8)).astype(np.float32))
+    g = jax.grad(lambda q: jnp.sum(ref.banded_attention(q, k, v, 16) ** 2))(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+@given(seed=st.integers(0, 10_000), s=st.integers(33, 200),
+       wexp=st.integers(3, 6))
+@settings(max_examples=10, deadline=None)
+def test_property_banded_matches_masked(seed, s, wexp):
+    w = 1 << wexp
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 2, s, 8)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, s, 8)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, s, 8)).astype(np.float32))
+    a = ref.attention(q, k, v, causal=True, window=w)
+    b = ref.banded_attention(q, k, v, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_grouped_moe_matches_flat_no_drop(rng):
+    cfg = ModelConfig("m", "moe", n_layers=1, d_model=32, n_heads=2, n_kv=1,
+                      d_ff=64, vocab=64, n_experts=8, top_k=2, d_expert=64,
+                      capacity_factor=8.0, dtype="float32")
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(4, 16, 32)).astype(np.float32))
+    y1, _ = moe_mod.apply_moe(params, x, cfg)
+    y2, _ = moe_mod.apply_moe(params, x,
+                              dataclasses.replace(cfg, moe_grouped=True))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+
+
+def test_moe_dropping_bounded(rng):
+    """With a tight capacity factor, outputs stay finite and bounded (drops
+    zero out, never corrupt)."""
+    cfg = ModelConfig("m", "moe", n_layers=1, d_model=32, n_heads=2, n_kv=1,
+                      d_ff=64, vocab=64, n_experts=4, top_k=2, d_expert=64,
+                      capacity_factor=0.5, dtype="float32", moe_grouped=True)
+    params = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(2, 32, 32)).astype(np.float32))
+    y, aux = moe_mod.apply_moe(params, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(jnp.max(jnp.abs(y))) < 1e3
+    assert np.isfinite(float(aux))
+
+
+def test_hybrid_cond_decode_consistency():
+    """The lax.cond routing must keep decode == forward (hymba cell)."""
+    cfg = ModelConfig("hyb", "hybrid", n_layers=2, d_model=64, n_heads=4,
+                      n_kv=2, d_ff=128, vocab=128, ssm_state=16,
+                      ssm_head_dim=16, window=8, global_layers=(0,),
+                      dtype="float32")
+    params = zoo.init(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, 128)
+    full, _ = zoo.forward(params, {"tokens": toks}, cfg)
+    caches = zoo.init_caches(params, cfg, 2, 16, dtype=jnp.float32)
+    dec = []
+    for t in range(12):
+        lg, caches = zoo.decode_step(params, toks[:, t:t + 1], cfg, caches,
+                                     jnp.int32(t))
+        dec.append(lg[:, 0])
+    err = float(jnp.max(jnp.abs(jnp.stack(dec, 1) - full)))
+    assert err < 1e-4
+
+
+def test_remat_policies_same_loss():
+    """remat full/dots/none change memory, never the math."""
+    base = ModelConfig("t", "dense", n_layers=2, d_model=64, n_heads=4,
+                       n_kv=2, d_ff=128, vocab=97, dtype="float32")
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, 16), 0, 97)
+    params = zoo.init(jax.random.PRNGKey(1), base)
+    outs = []
+    for pol in ("full", "dots", "none"):
+        cfg = dataclasses.replace(base, remat_policy=pol)
+        loss = jax.grad(lambda p: jnp.sum(
+            zoo.forward(p, {"tokens": toks}, cfg)[0].astype(jnp.float32) ** 2
+        ).astype(jnp.float32))(params)
+        outs.append(loss["embed"]["table"])
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[2]),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,100 @@
+"""Paper section 3: the analytical TPI model and optimal pipeline depth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pipeline_model as pm
+
+
+def test_tpi_three_terms_shape():
+    # eq. 2: fixed + t_p/p + gamma*h*t_o*p - check against a hand expansion
+    val = pm.tpi(4, n_i=1000, n_h=10, gamma=0.5, t_p=1.0, t_o=0.05)
+    h = 10 / 1000
+    expect = (0.05 + 0.5 * h * 1.0) + 1.0 / 4 + 0.5 * h * 0.05 * 4
+    assert np.isclose(float(val), expect, rtol=1e-6)
+
+
+def test_popt_closed_form_matches_argmin():
+    # eq. 3 optimum == numerical argmin of eq. 2 over a fine grid
+    for ratio in (0.01, 0.1, 0.5):
+        n_i, gamma = 1e6, 0.5
+        n_h = ratio * n_i
+        popt = float(pm.p_opt(n_i=n_i, n_h=n_h, gamma=gamma))
+        grid = jnp.linspace(1.0, 200.0, 20000)
+        vals = pm.tpi(grid, n_i=n_i, n_h=n_h, gamma=gamma)
+        num = float(grid[int(jnp.argmin(vals))])
+        assert abs(popt - num) / num < 0.02, (ratio, popt, num)
+
+
+def test_popt_autodiff_crosscheck():
+    # derivative of eq. 2 vanishes at the closed-form optimum
+    f = lambda p: pm.tpi(p, n_i=1e5, n_h=1e3, gamma=0.6)
+    popt = float(pm.p_opt(n_i=1e5, n_h=1e3, gamma=0.6))
+    g = float(jax.grad(f)(jnp.float32(popt)))
+    assert abs(g) < 1e-4
+
+
+def test_hazard_free_pipe_unbounded():
+    # the paper's ddot multiplier pipe: no hazards -> p_opt = inf and TPI
+    # monotonically decreasing ("flat horizontal line")
+    assert np.isinf(float(pm.p_opt(n_i=1000, n_h=0, gamma=0.5)))
+    vals = pm.tpi(jnp.arange(1, 50), n_i=1000, n_h=0, gamma=0.5)
+    assert bool(jnp.all(jnp.diff(vals) <= 0))
+
+
+def test_remark2_shallower_with_more_hazards():
+    # Remark 2: higher N_H/N_I -> shallower optimum
+    p_low = float(pm.p_opt(n_i=1e6, n_h=1e3, gamma=0.5))
+    p_high = float(pm.p_opt(n_i=1e6, n_h=1e5, gamma=0.5))
+    assert p_high < p_low
+
+
+def test_remark3_gamma_sensitivity():
+    # Remark 3 / fig. 4: larger gamma -> shallower optimum
+    p1 = float(pm.p_opt(n_i=1e6, n_h=1e4, gamma=0.1))
+    p2 = float(pm.p_opt(n_i=1e6, n_h=1e4, gamma=0.8))
+    assert p2 < p1
+
+
+def test_figure2_saturation():
+    curves = pm.figure2_curves()
+    for (p, r), (grid, vals) in curves.items():
+        # TPI decreases toward an asymptote as workload grows (fp32 noise)
+        assert bool(jnp.all(jnp.diff(vals) <= 1e-6))
+        # deeper pipes saturate lower for the low-hazard regime
+    lo = curves[(8, 0.001)][1][-1]
+    hi = curves[(2, 0.001)][1][-1]
+    assert float(lo) < float(hi)
+
+
+def test_figure3_minimum_exists():
+    curves = pm.figure3_curves()
+    for r, (grid, vals) in curves.items():
+        i = int(jnp.argmin(vals))
+        popt = float(pm.p_opt(n_i=1e6, n_h=r * 1e6, gamma=0.5))
+        if popt < float(grid[-1]):
+            assert 0 < i < len(grid) - 1, (r, i)  # interior optimum
+        else:
+            assert i == len(grid) - 1             # optimum beyond the grid
+
+
+@given(n_i=st.floats(1e3, 1e8), ratio=st.floats(1e-4, 0.9),
+       gamma=st.floats(0.05, 0.95))
+@settings(max_examples=50, deadline=None)
+def test_property_popt_formula(n_i, ratio, gamma):
+    """eq. 3 invariance: p_opt^2 * gamma * N_H * t_o == N_I * t_p."""
+    n_h = ratio * n_i
+    p = float(pm.p_opt(n_i=n_i, n_h=n_h, gamma=gamma, t_p=1.0, t_o=0.05))
+    lhs = p * p * gamma * n_h * 0.05
+    assert lhs == pytest.approx(n_i * 1.0, rel=1e-3)
+
+
+@given(p=st.integers(1, 64), n_i=st.floats(1e3, 1e7),
+       ratio=st.floats(1e-4, 0.9))
+@settings(max_examples=50, deadline=None)
+def test_property_tpi_positive_and_bounded_below(p, n_i, ratio):
+    v = float(pm.tpi(p, n_i=n_i, n_h=ratio * n_i, gamma=0.5))
+    assert v > 0
+    assert v >= 0.05  # never beats the latch overhead floor

@@ -1,0 +1,57 @@
+"""Paper Tables 1-2 and the abstract's efficiency claims."""
+import numpy as np
+import pytest
+
+from repro.core import synthesis as syn
+
+
+def test_table2_derivation():
+    r = syn.check_table2()
+    assert max(r["checked"].values()) < 0.06
+    # the paper-internal inconsistency: LAP-PE GFlops/W below 0.95 GHz does
+    # not follow from the paper's own Table 1 (recorded, not hidden)
+    assert set(r["discrepant"]) <= {"lap_w@0.95", "lap_w@0.33", "lap_w@0.2"}
+
+
+def test_area_efficiency_claim():
+    """Abstract: 1.9x-2.1x GFlops/mm^2. Derived ratios: 2.10-2.17."""
+    ratios = syn.efficiency_ratios()["gflops_per_mm2"]
+    for speed, r in ratios.items():
+        assert 1.9 <= r <= 2.2, (speed, r)
+
+
+def test_power_efficiency_claim_range():
+    """Abstract claims 1.1-1.5x GFlops/W; Table 2 itself spans 0.95-1.66x.
+    We assert the *published-table* ratios (what is reproducible)."""
+    pub = syn.TABLE2_PUBLISHED
+    ratios = {s: v[3] / v[1] for s, v in pub.items()}
+    assert min(ratios.values()) == pytest.approx(0.951, abs=0.01)
+    assert max(ratios.values()) == pytest.approx(1.660, abs=0.01)
+    # and the paper's conclusion holds: PE wins at low frequency
+    assert ratios[0.20] > 1.5 and ratios[0.33] > 1.4
+
+
+def test_gflops_model():
+    lap = [p for p in syn.TABLE1 if p.design == "lap-pe"][0]
+    assert lap.gflops == pytest.approx(2 * 1.81)
+    pe_ = [p for p in syn.TABLE1 if p.design == "pe"][0]
+    assert pe_.gflops == pytest.approx(7 * 1.81)
+
+
+def test_power_model_fit():
+    for design in ("lap-pe", "pe"):
+        m = syn.fit_power_model(design)
+        pts = [p for p in syn.TABLE1 if p.design == design]
+        for p in pts:
+            pred = m.power_mw(p.speed_ghz)
+            assert pred == pytest.approx(p.total_mw, rel=0.35), (design, p)
+        # monotone increasing in frequency
+        fs = np.linspace(0.1, 2.0, 20)
+        ps = [m.power_mw(f) for f in fs]
+        assert all(b >= a for a, b in zip(ps, ps[1:]))
+
+
+def test_energy_per_flop_sane():
+    e = syn.energy_per_flop_pj("pe", 0.2)
+    # double-precision flops at 28nm-ish: O(1-20) pJ
+    assert 0.5 < e < 50

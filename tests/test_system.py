@@ -1,0 +1,51 @@
+"""End-to-end behaviour of the paper's system: the full codesign loop.
+
+Workload -> characterization -> optimal depths (eq. 7) -> PE simulation
+corroboration -> TPU knobs -> codesigned kernels matching oracles. One test
+walks the whole pipeline the way examples/quickstart.py does.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import characterization as ch
+from repro.core import codesign, isa, pe
+from repro.kernels import ops
+
+
+def test_full_codesign_loop():
+    n = 1024
+    # 1) characterize (section 4)
+    prof = ch.characterize_ddot(n, schedule="sequential")
+    assert prof.hazard_ratios()["add"] > 0.9
+    # 2) closed-form optimum (eq. 7): serial adds -> shallow-ish pipe
+    depths = prof.optimal_depths()
+    assert 2 <= depths["add"] <= 16
+    # 3) PE simulation corroborates (section 5). Sweep add+mul jointly as
+    # the paper's fig. 12 does (otherwise the fixed mul pipe holds the clock
+    # and the adder optimum is artificially shallow).
+    stream = isa.compile_ddot(n, schedule="sequential")
+    sweep = pe.sweep_joint(stream, ["add", "mul"], [1, 2, 4, 8, 16, 32])
+    best = pe.best_depth(sweep, "add")
+    assert abs(np.log2(max(best, 1)) - np.log2(max(depths["add"], 1))) <= 2
+    # 4) TPU adaptation: the same trade-off picks the accumulator count
+    u = codesign.optimal_accumulators(n)
+    assert u >= 4
+    # 5) the codesigned kernel agrees with the oracle
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    got = float(ops.dotp(x, y, accumulators=u, use_pallas=True,
+                         interpret=True))
+    want = float(np.dot(np.asarray(x, np.float64), np.asarray(y, np.float64)))
+    assert abs(got - want) < 1e-3 * max(abs(want), 1.0)
+
+
+def test_strided_schedule_beats_sequential_on_pe():
+    """The codesign claim end-to-end: the U-accumulator schedule chosen by
+    eq. 3 runs faster on the simulated PE than the naive serial one."""
+    n = 2048
+    u = codesign.optimal_accumulators(n)
+    seq = pe.simulate(isa.compile_ddot(n, schedule="sequential"))
+    par = pe.simulate(isa.compile_ddot(n, schedule="strided",
+                                       accumulators=u))
+    assert par.cycles < seq.cycles / 2

@@ -1,0 +1,129 @@
+"""Batched blocked LAPACK sweep: batch x size x block wall time + Gflop/s.
+
+Records the trajectory the ISSUE-1 tentpole opens: how the batched
+factorizations scale as the trailing updates ride the GEMM hot path, and
+how the measured best block compares with the codesign model's
+``plan_factorization`` choice.
+
+Standalone:  PYTHONPATH=src python -m benchmarks.bench_lapack_batched \
+                 [--fast] [--out benchmarks/out/lapack_batched.json]
+Driver:      registered in benchmarks.run as "lapack_batched".
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import lapack
+from repro.core.codesign import plan_factorization
+
+FLOP_COEFF = {"potrf": 1.0 / 3.0, "getrf": 2.0 / 3.0, "geqrf": 4.0 / 3.0}
+FACTOR_FN = {"potrf": lapack.batched_potrf, "getrf": lapack.batched_getrf,
+             "geqrf": lapack.batched_geqrf}
+
+
+def _timeit(f, *args, reps=3):
+    jax.block_until_ready(f(*args))             # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def sweep(batches=(1, 8, 32), sizes=(32, 64, 128), blocks=(8, 16, 32, None),
+          kinds=("potrf", "getrf", "geqrf"), reps=3):
+    """Returns a list of row dicts, one per (kind, batch, n, block)."""
+    rng = np.random.default_rng(0)
+    rows = []
+    for kind in kinds:
+        fn = FACTOR_FN[kind]
+        for n in sizes:
+            a = rng.normal(size=(max(batches), n, n)).astype(np.float32)
+            if kind == "potrf":
+                a = a @ np.swapaxes(a, 1, 2) + n * np.eye(n, dtype=np.float32)
+            for b in batches:
+                x = jnp.asarray(a[:b])
+                for block in blocks:
+                    f = jax.jit(lambda m, k=kind, nb=block: FACTOR_FN[k](
+                        m, block=nb).factors)
+                    t = _timeit(f, x, reps=reps)
+                    flops = b * FLOP_COEFF[kind] * 2.0 * n ** 3
+                    rows.append({
+                        "kind": kind, "batch": b, "n": n,
+                        "block": block if block is not None else
+                        plan_factorization(n, kind=kind).block,
+                        "planned": block is None,
+                        "seconds_per_call": t,
+                        "gflops": flops / t / 1e9,
+                    })
+    return rows
+
+
+def record(rows) -> dict:
+    """JSON record: config + rows + per-(kind, batch, n) best block vs the
+    codesign model's pick."""
+    best = {}
+    for r in rows:
+        key = (r["kind"], r["batch"], r["n"])
+        if key not in best or r["seconds_per_call"] < best[key]["seconds_per_call"]:
+            best[key] = r
+    summary = [{
+        "kind": k, "batch": b, "n": n,
+        "best_block": v["block"],
+        "best_gflops": v["gflops"],
+        "planned_block": plan_factorization(n, kind=k, batch=b).block,
+    } for (k, b, n), v in sorted(best.items())]
+    return {
+        "benchmark": "lapack_batched",
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "rows": rows,
+        "summary": summary,
+    }
+
+
+# CI-sized grid shared by run() and main(--fast)
+FAST_GRID = dict(batches=(1, 8), sizes=(32, 64), blocks=(8, 16, None), reps=2)
+
+
+def run(emit, fast: bool = True):
+    """benchmarks.run driver entry: CSV rows + JSON artifact."""
+    rows = sweep(**FAST_GRID) if fast else sweep()
+    for r in rows:
+        name = f"lapack_batched,{r['kind']},b{r['batch']},n{r['n']},nb{r['block']}"
+        emit(name, r["seconds_per_call"] * 1e3, "ms_per_call")
+        emit(name, r["gflops"], "gflops")
+    out = os.path.join(os.path.dirname(__file__), "out", "lapack_batched.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(record(rows), f, indent=2)
+    emit("lapack_batched,json", out, "path")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="benchmarks/out/lapack_batched.json")
+    ap.add_argument("--fast", action="store_true",
+                    help="small grid (CI-sized)")
+    args = ap.parse_args()
+    rows = sweep(**FAST_GRID) if args.fast else sweep()
+    rec = record(rows)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"wrote {len(rows)} rows -> {args.out}")
+    for s in rec["summary"]:
+        print(f"{s['kind']:6s} batch={s['batch']:<3d} n={s['n']:<4d} "
+              f"best_block={s['best_block']:<4} model={s['planned_block']:<4} "
+              f"{s['best_gflops']:.2f} Gflop/s")
+
+
+if __name__ == "__main__":
+    main()

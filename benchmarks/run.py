@@ -16,6 +16,7 @@ MODULES = [
     ("pe_cpi", "benchmarks.bench_pe_cpi"),                # figs 12-13
     ("synthesis", "benchmarks.bench_synthesis"),          # tables 1-2
     ("blas", "benchmarks.bench_blas"),                    # substrate perf
+    ("lapack_batched", "benchmarks.bench_lapack_batched"),  # batched sweep
     ("census", "benchmarks.bench_census"),                # section 4 on zoo
     ("roofline", "benchmarks.bench_roofline"),            # dry-run reader
 ]

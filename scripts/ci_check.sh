@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# CI gate: fast import-error guard first (a broken import chain once hid 9
+# test modules from the suite - see ISSUE 1), then the tier-1 suite.
+#
+# Usage: scripts/ci_check.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== collection guard (zero import errors required) =="
+python -m pytest --collect-only -q
+
+echo "== tier-1 suite =="
+python -m pytest -x -q "$@"

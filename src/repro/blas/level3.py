@@ -2,7 +2,9 @@
 
 ``dgemm`` is the routine the whole paper orbits (every LAPACK trailing update
 lowers to it); ``use_kernel=True`` routes through the Pallas MXU kernel whose
-tiling comes from :func:`repro.core.codesign.plan_gemm`.
+tiling comes from :func:`repro.core.codesign.plan_gemm`. ``dsyrk`` and
+``dtrsm`` thread the same flag through to their internal GEMMs, so a blocked
+factorization dispatches *every* trailing flop onto the one hot path.
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ def dgemm(a: jnp.ndarray, b: jnp.ndarray, c: Optional[jnp.ndarray] = None,
     """C <- alpha * A B + beta * C."""
     if use_kernel:
         from repro.kernels import ops  # local import: kernels are optional
-        ab = ops.gemm(a, b, interpret=interpret)
+        ab = ops.gemm(a, b, use_pallas=True, interpret=interpret)
     else:
         ab = a @ b
     out = alpha * ab
@@ -28,9 +30,10 @@ def dgemm(a: jnp.ndarray, b: jnp.ndarray, c: Optional[jnp.ndarray] = None,
 
 
 def dsyrk(a: jnp.ndarray, c: Optional[jnp.ndarray] = None, alpha=1.0,
-          beta=0.0, lower: bool = True) -> jnp.ndarray:
+          beta=0.0, lower: bool = True, use_kernel: bool = False,
+          interpret: bool = True) -> jnp.ndarray:
     """C <- alpha A A^T + beta C, triangular part referenced."""
-    full = alpha * (a @ a.T)
+    full = alpha * dgemm(a, a.T, use_kernel=use_kernel, interpret=interpret)
     if c is not None:
         full = full + beta * c
     n = full.shape[0]
@@ -41,17 +44,19 @@ def dsyrk(a: jnp.ndarray, c: Optional[jnp.ndarray] = None, alpha=1.0,
 
 def dtrsm(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
           unit_diag: bool = False, left: bool = True,
-          block: int = 64) -> jnp.ndarray:
+          block: int = 64, use_kernel: bool = False,
+          interpret: bool = True) -> jnp.ndarray:
     """Solve op(T) X = B (left=True) or X op(T) = B, T triangular, blocked.
 
     Diagonal blocks use the sequential substitution scan (the serial divider
     chain); off-diagonal updates are GEMMs - the paper's panel/trailing
-    structure in miniature.
+    structure in miniature - and follow ``use_kernel`` onto the Pallas path.
     """
     if not left:
         # X T = B  <=>  T^T X^T = B^T
         return dtrsm(a.T, b.T, lower=not lower, unit_diag=unit_diag,
-                     left=True, block=block).T
+                     left=True, block=block, use_kernel=use_kernel,
+                     interpret=interpret).T
     n = a.shape[0]
     if n <= block:
         return _trsm_unblocked(a, b, lower=lower, unit_diag=unit_diag)
@@ -62,9 +67,11 @@ def dtrsm(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
         i1 = min(i0 + block, n)
         rhs = b[i0:i1]
         if lower and i0 > 0:
-            rhs = rhs - a[i0:i1, :i0] @ x[:i0]
+            rhs = rhs - dgemm(a[i0:i1, :i0], x[:i0], use_kernel=use_kernel,
+                              interpret=interpret)
         elif not lower and i1 < n:
-            rhs = rhs - a[i0:i1, i1:] @ x[i1:]
+            rhs = rhs - dgemm(a[i0:i1, i1:], x[i1:], use_kernel=use_kernel,
+                              interpret=interpret)
         xi = _trsm_unblocked(a[i0:i1, i0:i1], rhs, lower=lower,
                              unit_diag=unit_diag)
         x = x.at[i0:i1].set(xi)

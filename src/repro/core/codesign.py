@@ -154,6 +154,107 @@ def plan_gemm(m: int, n: int, k: int, dtype_bytes: int = 2,
     return best
 
 
+
+# ------------------------- blocked-factorization plans ----------------------
+# Serial-chain cycles exposed per panel column: the paper's section-4.2
+# hazard profile per routine (DEFAULT_DEPTHS in core.pe: div 12, sqrt 14).
+# potrf: sqrt then a dependent div per column; getrf: pivot-compare + div;
+# geqrf: norm-sqrt, alpha-add, div scale, tau div.
+_PANEL_CHAIN_CYCLES = {"potrf": 14 + 12, "getrf": 6 + 12, "geqrf": 14 + 6 + 2 * 12}
+# flops(n) ~ coeff * n^3 for the square factorization.
+_FACTOR_FLOP_COEFF = {"potrf": 1.0 / 3.0, "getrf": 2.0 / 3.0, "geqrf": 4.0 / 3.0}
+MXU_CLOCK = PEAK_BF16_FLOPS / (2 * MXU * MXU)   # cycles/s implied by peak
+VPU_FLOPS = MXU_CLOCK * SUBLANE * LANE          # vector (non-MXU) peak
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorizationPlan:
+    """Panel width + trailing-update GEMM tiling for a blocked factorization."""
+
+    kind: str                     # "potrf" | "getrf" | "geqrf"
+    block: int                    # panel width nb (the LAPACK NB)
+    gemm: GemmPlan                # plan for the widest trailing update
+    panel_time: float             # modeled seconds in serial panels
+    trailing_time: float          # modeled seconds in GEMM trailing updates
+    batch: int = 1
+
+    @property
+    def modeled_time(self) -> float:
+        return self.panel_time + self.trailing_time
+
+    @property
+    def panel_fraction(self) -> float:
+        t = self.modeled_time
+        return self.panel_time / t if t > 0 else 0.0
+
+
+PIPELINE_FILL_S = 2e-6   # per grid-step DMA/launch overhead (fig.-2 fill)
+
+
+def _factorization_time(n: int, nb: int, kind: str, dtype_bytes: int,
+                        batch: int) -> Tuple[float, float]:
+    """(panel_s, trailing_s) for one size-n factorization at panel width nb.
+
+    Panel: the unblocked path is hazard-bound — per column, a serial
+    sqrt/div chain of ``_PANEL_CHAIN_CYCLES[kind]`` cycles (eq.-2's exposed
+    latency, unhidable by ILP) plus its rank-1 update flops at VPU rate.
+    Trailing: DGEMM under the roofline — the k-extent of the update IS the
+    panel width, so arithmetic intensity (and hence the achieved fraction of
+    peak) grows with nb until the PEAK/HBM_BW knee; each panel step also
+    pays one software-pipeline fill (fig. 2's unamortized-fill region).
+    """
+    chain = _PANEL_CHAIN_CYCLES[kind] / MXU_CLOCK
+    coeff = _FACTOR_FLOP_COEFF[kind]
+    panel_s = 0.0
+    trailing_s = 0.0
+    for j0 in range(0, n, nb):
+        b = min(nb, n - j0)
+        m = n - j0
+        panel_s += b * chain + (coeff * 3.0) * m * b * b / VPU_FLOPS \
+            + PIPELINE_FILL_S
+        rest = n - j0 - b
+        if rest <= 0:
+            continue
+        # trailing update ~ (rest x b) @ (b x rest) (potrf/getrf) or the
+        # compact-WY triple product (geqrf ~ 2x that)
+        gf = 2.0 if kind == "geqrf" else 1.0
+        flops = gf * 2.0 * rest * b * rest
+        bytes_moved = gf * (2 * rest * b + 2 * rest * rest) * dtype_bytes
+        ai = flops / bytes_moved
+        rate = min(PEAK_BF16_FLOPS, ai * HBM_BW)
+        trailing_s += flops / rate + PIPELINE_FILL_S
+    return batch * panel_s, batch * trailing_s
+
+
+def plan_factorization(n: int, kind: str = "potrf", dtype_bytes: int = 4,
+                       batch: int = 1,
+                       candidates: Tuple[int, ...] = (8, 16, 32, 64, 128),
+                       ) -> FactorizationPlan:
+    """Pick the panel width NB for a blocked right-looking factorization.
+
+    Same trade-off as the paper's pipeline-depth equation: the panel is the
+    serial (hazard) term that grows with NB, the trailing update is the
+    throughput term whose GEMM efficiency grows with NB (arithmetic
+    intensity ~ NB until the roofline knee). The minimum of the summed model
+    is the software analogue of eq. 3's p_opt.
+    """
+    if kind not in _FACTOR_FLOP_COEFF:
+        raise ValueError(f"unknown factorization kind: {kind!r}")
+    n = max(int(n), 1)
+    best_nb, best_t = None, None
+    for nb in candidates:
+        if nb > n and best_nb is not None:
+            continue
+        nb_ = min(nb, n)
+        p, t = _factorization_time(n, nb_, kind, dtype_bytes, batch)
+        if best_t is None or p + t < best_t:
+            best_nb, best_t = nb_, p + t
+    rest = max(n - best_nb, 1)
+    gemm = plan_gemm(rest, rest, best_nb, dtype_bytes=dtype_bytes)
+    p, t = _factorization_time(n, best_nb, kind, dtype_bytes, batch)
+    return FactorizationPlan(kind, best_nb, gemm, p, t, batch=batch)
+
+
 @dataclasses.dataclass(frozen=True)
 class AttentionPlan:
     """Flash-attention tiling: KV blocks stream through VMEM; the online

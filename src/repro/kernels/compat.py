@@ -1,0 +1,11 @@
+"""Version compatibility for Pallas TPU APIs.
+
+``pltpu.CompilerParams`` was named ``TPUCompilerParams`` before jax 0.5;
+every kernel imports the alias from here so the package loads on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

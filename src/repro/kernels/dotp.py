@@ -24,6 +24,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.codesign import LANE, optimal_accumulators
+from repro.kernels.compat import CompilerParams
 
 
 def _dotp_kernel(x_ref, y_ref, o_ref, acc_ref, *, nsteps: int):
@@ -63,7 +64,7 @@ def dotp(x: jnp.ndarray, y: jnp.ndarray, accumulators: Optional[int] = None,
         out_specs=pl.BlockSpec((1, u, LANE), lambda i: (0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, u, LANE), jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, u, LANE), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(xs, ys)

@@ -26,6 +26,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.codesign import LANE, plan_attention
+from repro.kernels.compat import CompilerParams
 
 NEG_INF = -1e30
 
@@ -120,7 +121,7 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pltpu.VMEM((bq, LANE), jnp.float32),   # running denom l
             pltpu.VMEM((bq, d), jnp.float32),      # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

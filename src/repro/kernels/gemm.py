@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.codesign import GemmPlan, plan_gemm
+from repro.kernels.compat import CompilerParams
 
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
@@ -66,7 +67,7 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, plan: Optional[GemmPlan] = None,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((pm, pn), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a_p, b_p)

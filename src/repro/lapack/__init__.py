@@ -1,4 +1,7 @@
-from repro.lapack import cholesky, lu, qr, solve
+from repro.lapack import batched, cholesky, lu, qr, solve
+from repro.lapack.batched import (FactorizationResult, batched_geqrf,
+                                  batched_getrf, batched_potrf,
+                                  batched_solve, reconstruct)
 from repro.lapack.cholesky import potrf, potrf_unblocked
 from repro.lapack.lu import getrf, getrf_unblocked, lu_reconstruct
 from repro.lapack.qr import geqrf, geqrf_unblocked, q_from_geqrf

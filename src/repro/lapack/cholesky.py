@@ -1,10 +1,25 @@
-"""DPOTRF - Cholesky factorization (lower), unblocked and blocked."""
+"""DPOTRF - Cholesky factorization (lower), unblocked and blocked.
+
+Blocked right-looking form: POTRF(diag) + TRSM(panel) + SYRK(trailing).
+Every trailing flop dispatches through :mod:`repro.blas.level3`, so
+``use_kernel=True`` lowers the SYRK/GEMM hot path onto the Pallas MXU
+kernel (interpret mode on CPU). The default panel width comes from
+:func:`repro.core.codesign.plan_factorization` - the same roofline +
+pipeline-depth model that tiles the GEMM itself.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax.numpy as jnp
 from jax import lax
 
-from repro.blas.level3 import dtrsm
+from repro.blas.level3 import dgemm, dtrsm
+
+
+def default_block(n: int, kind: str) -> int:
+    from repro.core.codesign import plan_factorization
+    return plan_factorization(n, kind=kind).block
 
 
 def potrf_unblocked(a: jnp.ndarray) -> jnp.ndarray:
@@ -27,9 +42,12 @@ def potrf_unblocked(a: jnp.ndarray) -> jnp.ndarray:
     return jnp.tril(A)
 
 
-def potrf(a: jnp.ndarray, block: int = 32) -> jnp.ndarray:
-    """Blocked: POTRF(diag) + TRSM(panel) + SYRK(trailing)."""
+def potrf(a: jnp.ndarray, block: Optional[int] = None,
+          use_kernel: bool = False, interpret: bool = True) -> jnp.ndarray:
+    """Blocked right-looking POTRF: panel = hazards, trailing = GEMM."""
     n = a.shape[0]
+    if block is None:
+        block = default_block(n, "potrf")
     if n <= block:
         return potrf_unblocked(a)
     for j0 in range(0, n, block):
@@ -40,7 +58,10 @@ def potrf(a: jnp.ndarray, block: int = 32) -> jnp.ndarray:
             l11 = a[j0:j0 + nb, j0:j0 + nb]
             # L21 = A21 L11^{-T}
             l21 = dtrsm(l11, a[j0 + nb:, j0:j0 + nb].T, lower=True,
-                        unit_diag=False, left=True).T
+                        unit_diag=False, left=True, use_kernel=use_kernel,
+                        interpret=interpret).T
             a = a.at[j0 + nb:, j0:j0 + nb].set(l21)
-            a = a.at[j0 + nb:, j0 + nb:].add(-(l21 @ l21.T))
+            # trailing SYRK: A22 -= L21 L21^T (the DGEMM hot path)
+            a = a.at[j0 + nb:, j0 + nb:].add(
+                -dgemm(l21, l21.T, use_kernel=use_kernel, interpret=interpret))
     return jnp.tril(a)

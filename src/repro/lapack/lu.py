@@ -6,12 +6,13 @@ in the QR factorization"); the trailing update is DGEMM.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 from jax import lax
 
-from repro.blas.level3 import dtrsm
+from repro.blas.level3 import dgemm, dtrsm
+from repro.lapack.cholesky import default_block
 
 
 def getrf_unblocked(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -40,10 +41,19 @@ def getrf_unblocked(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return A, piv
 
 
-def getrf(a: jnp.ndarray, block: int = 32) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Blocked right-looking LU with partial pivoting."""
+def getrf(a: jnp.ndarray, block: Optional[int] = None,
+          use_kernel: bool = False,
+          interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blocked right-looking LU with partial pivoting.
+
+    Trailing updates (TRSM for U12, GEMM for A22) dispatch through
+    :mod:`repro.blas.level3`; ``use_kernel=True`` reaches the Pallas MXU
+    kernel. Default block from ``plan_factorization(kind="getrf")``.
+    """
     n, nc = a.shape
     kmax = min(n, nc)
+    if block is None:
+        block = default_block(kmax, "getrf")
     if kmax <= block:
         return getrf_unblocked(a)
     pivs = []
@@ -77,10 +87,12 @@ def getrf(a: jnp.ndarray, block: int = 32) -> Tuple[jnp.ndarray, jnp.ndarray]:
             # U12 = L11^{-1} A12 ; A22 -= L21 U12  (trsm + GEMM)
             l11 = a[j0:j0 + nb, j0:j0 + nb]
             u12 = dtrsm(l11, a[j0:j0 + nb, j0 + nb:], lower=True,
-                        unit_diag=True, left=True)
+                        unit_diag=True, left=True, use_kernel=use_kernel,
+                        interpret=interpret)
             a = a.at[j0:j0 + nb, j0 + nb:].set(u12)
             a = a.at[j0 + nb:, j0 + nb:].add(
-                -a[j0 + nb:, j0:j0 + nb] @ u12)
+                -dgemm(a[j0 + nb:, j0:j0 + nb], u12, use_kernel=use_kernel,
+                       interpret=interpret))
     return a, jnp.concatenate(pivs)
 
 

@@ -10,11 +10,14 @@ All routines are jittable (static shapes, masked updates inside fori_loop).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.blas.level3 import dgemm
+from repro.lapack.cholesky import default_block
 
 
 def _house_column(a: jnp.ndarray, k: int | jnp.ndarray,
@@ -81,11 +84,20 @@ def _larft(v: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
     return lax.fori_loop(0, nb, body, jnp.zeros((nb, nb), v.dtype))
 
 
-def geqrf(a: jnp.ndarray, block: int = 32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def geqrf(a: jnp.ndarray, block: Optional[int] = None,
+          use_kernel: bool = False,
+          interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Blocked QR (compact WY). Python loop over static panel boundaries ->
-    still a single jittable computation."""
+    still a single jittable computation.
+
+    The trailing compact-WY triple product is three GEMMs dispatched through
+    :func:`repro.blas.level3.dgemm` (``use_kernel=True`` -> Pallas MXU);
+    default block from ``plan_factorization(kind="geqrf")``.
+    """
     m, n = a.shape
     kmax = min(m, n)
+    if block is None:
+        block = default_block(kmax, "geqrf")
     if kmax <= block:
         return geqrf_unblocked(a)
     taus = []
@@ -117,9 +129,12 @@ def geqrf(a: jnp.ndarray, block: int = 32) -> Tuple[jnp.ndarray, jnp.ndarray]:
                           1.0, V)
             T = _larft(V, tau)
             C = a[:, j0 + nb:]
-            W = V.T @ C                               # (nb, rest)   GEMM
-            W = T.T @ W                               # small GEMM
-            a = a.at[:, j0 + nb:].set(C - V @ W)      # GEMM
+            W = dgemm(V.T, C, use_kernel=use_kernel,
+                      interpret=interpret)            # (nb, rest)   GEMM
+            W = T.T @ W                               # small (nb x nb) GEMM
+            a = a.at[:, j0 + nb:].set(
+                C - dgemm(V, W, use_kernel=use_kernel,
+                          interpret=interpret))       # GEMM
     return a, jnp.concatenate(taus)
 
 
@@ -140,9 +155,12 @@ def q_from_geqrf(packed: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
     return lax.fori_loop(0, kmax, body, jnp.eye(m, dtype=packed.dtype))
 
 
-def qr(a: jnp.ndarray, block: int = 32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def qr(a: jnp.ndarray, block: Optional[int] = None,
+       use_kernel: bool = False,
+       interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Convenience (Q, R) form."""
-    packed, tau = geqrf(a, block=block)
+    packed, tau = geqrf(a, block=block, use_kernel=use_kernel,
+                        interpret=interpret)
     q = q_from_geqrf(packed, tau)
     r = jnp.triu(packed)[: min(a.shape), :]
     return q[:, : min(a.shape)], r

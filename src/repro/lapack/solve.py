@@ -1,6 +1,8 @@
 """DGESV-style dense solvers built on the factorizations."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
 from repro.blas.level3 import dtrsm
@@ -8,23 +10,30 @@ from repro.lapack.lu import apply_ipiv, getrf
 from repro.lapack.qr import geqrf, q_from_geqrf
 
 
-def gesv(a: jnp.ndarray, b: jnp.ndarray, block: int = 32) -> jnp.ndarray:
+def gesv(a: jnp.ndarray, b: jnp.ndarray, block: Optional[int] = None,
+         use_kernel: bool = False, interpret: bool = True) -> jnp.ndarray:
     """Solve A X = B via LU with partial pivoting + two triangular solves."""
-    packed, piv = getrf(a, block=block)
+    packed, piv = getrf(a, block=block, use_kernel=use_kernel,
+                        interpret=interpret)
     rhs = b if b.ndim == 2 else b[:, None]
     rhs = apply_ipiv(rhs, piv)
-    y = dtrsm(packed, rhs, lower=True, unit_diag=True, left=True)
-    x = dtrsm(packed, y, lower=False, unit_diag=False, left=True)
+    y = dtrsm(packed, rhs, lower=True, unit_diag=True, left=True,
+              use_kernel=use_kernel, interpret=interpret)
+    x = dtrsm(packed, y, lower=False, unit_diag=False, left=True,
+              use_kernel=use_kernel, interpret=interpret)
     return x if b.ndim == 2 else x[:, 0]
 
 
-def lstsq_qr(a: jnp.ndarray, b: jnp.ndarray, block: int = 32) -> jnp.ndarray:
+def lstsq_qr(a: jnp.ndarray, b: jnp.ndarray, block: Optional[int] = None,
+             use_kernel: bool = False, interpret: bool = True) -> jnp.ndarray:
     """Least-squares via QR: x = R^{-1} Q^T b (m >= n, full rank)."""
     m, n = a.shape
-    packed, tau = geqrf(a, block=block)
+    packed, tau = geqrf(a, block=block, use_kernel=use_kernel,
+                        interpret=interpret)
     q = q_from_geqrf(packed, tau)
     rhs = b if b.ndim == 2 else b[:, None]
     qtb = q.T @ rhs
     r = jnp.triu(packed)[:n, :n]
-    x = dtrsm(r, qtb[:n], lower=False, unit_diag=False, left=True)
+    x = dtrsm(r, qtb[:n], lower=False, unit_diag=False, left=True,
+              use_kernel=use_kernel, interpret=interpret)
     return x if b.ndim == 2 else x[:, 0]

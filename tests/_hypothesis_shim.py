@@ -1,0 +1,212 @@
+"""Minimal deterministic stand-in for the slice of `hypothesis` this suite
+uses, installed by conftest.py only when the real package is unavailable
+(the container image cannot pip install).
+
+Property tests degrade gracefully to sampled-example tests: each ``@given``
+test runs ``max_examples`` deterministic draws per strategy — boundary
+values first (example 0 draws every strategy's minimum, example 1 every
+maximum), then seeded-random interiors — so edge cases are always probed
+and failures are reproducible. No shrinking; the failing example is
+attached to the raised AssertionError instead.
+
+Covered API (everything the test modules import):
+    hypothesis.given / settings / strategies.{integers,floats,booleans,
+    sampled_from,just} / strategy.{map,flatmap,filter} /
+    hypothesis.extra.numpy.arrays
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+_SETTINGS_ATTR = "_shim_settings"
+
+
+class SearchStrategy:
+    """A strategy is a draw function (rng, example_index) -> value.
+
+    ``index`` 0/1 request the strategy's min/max boundary; anything else
+    (including None) requests a random interior value.
+    """
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random, index=None):
+        return self._draw(rng, index)
+
+    def map(self, f):
+        return SearchStrategy(lambda rng, i: f(self._draw(rng, i)))
+
+    def flatmap(self, f):
+        return SearchStrategy(lambda rng, i: f(self._draw(rng, i))._draw(rng, i))
+
+    def filter(self, pred):
+        def draw(rng, i):
+            v = self._draw(rng, i)
+            if pred(v):
+                return v
+            for _ in range(1000):  # boundary rejected: fall back to random
+                v = self._draw(rng, None)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate rejected 1000 draws")
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    def draw(rng, i):
+        if i == 0:
+            return int(min_value)
+        if i == 1:
+            return int(max_value)
+        return rng.randint(int(min_value), int(max_value))
+    return SearchStrategy(draw)
+
+
+def floats(min_value=None, max_value=None, width: int = 64,
+           allow_nan: bool = False, allow_infinity: bool = False,
+           **_ignored) -> SearchStrategy:
+    lo = -1e6 if min_value is None else float(min_value)
+    hi = 1e6 if max_value is None else float(max_value)
+
+    def draw(rng, i):
+        if i == 0:
+            v = lo
+        elif i == 1:
+            v = hi
+        else:
+            v = rng.uniform(lo, hi)
+        return float(np.float32(v)) if width == 32 else v
+    return SearchStrategy(draw)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng, i: bool(i % 2) if i in (0, 1)
+                          else rng.random() < 0.5)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    seq = list(elements)
+    return SearchStrategy(lambda rng, i: seq[0] if i == 0 else
+                          seq[-1] if i == 1 else rng.choice(seq))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng, i: value)
+
+
+def _np_arrays(dtype, shape, elements: SearchStrategy | None = None,
+               **_ignored) -> SearchStrategy:
+    """hypothesis.extra.numpy.arrays — shape may be an int, a tuple, or a
+    strategy; elements defaults to small floats."""
+    elements = elements or floats(-10, 10, width=32)
+
+    def draw(rng, i):
+        shp = shape.example(rng, i) if isinstance(shape, SearchStrategy) else shape
+        if isinstance(shp, int):
+            shp = (shp,)
+        n = int(np.prod(shp)) if shp else 1
+        # example 0/1 probe all-min / all-max arrays; others are random
+        flat = [elements.example(rng, i if i in (0, 1) else None)
+                for _ in range(n)]
+        return np.asarray(flat, dtype=dtype).reshape(shp)
+    return SearchStrategy(draw)
+
+
+def settings(**kw):
+    """Records max_examples (everything else — deadline, suppress_* — is a
+    no-op here). Works above or below @given."""
+    def deco(fn):
+        setattr(fn, _SETTINGS_ATTR, kw)
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        def wrapper(*fixture_args, **fixture_kwargs):
+            conf = (getattr(wrapper, _SETTINGS_ATTR, None)
+                    or getattr(fn, _SETTINGS_ATTR, None) or {})
+            n = int(conf.get("max_examples", DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(0)
+            for i in range(n):
+                args = [s.example(rng, i) for s in arg_strategies]
+                kwargs = {k: s.example(rng, i)
+                          for k, s in kw_strategies.items()}
+                try:
+                    fn(*fixture_args, *args, **fixture_kwargs, **kwargs)
+                except _Rejected:
+                    continue  # assume() failed: discard this example
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: args={args!r} "
+                        f"kwargs={kwargs!r}") from e
+
+        # plain attribute copies — functools.wraps would set __wrapped__ and
+        # pytest would then collect the inner signature as fixture requests
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        if hasattr(fn, _SETTINGS_ATTR):
+            setattr(wrapper, _SETTINGS_ATTR, getattr(fn, _SETTINGS_ATTR))
+        return wrapper
+    return deco
+
+
+def assume(condition) -> bool:
+    """Real hypothesis aborts the example; we just skip the rest of it by
+    raising the same control-flow exception pytest treats as a pass."""
+    if not condition:
+        raise _Rejected()
+    return True
+
+
+class _Rejected(Exception):
+    pass
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.data_too_large, cls.filter_too_much]
+
+
+def install() -> None:
+    """Register shim modules under the hypothesis import names."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.__version__ = "0.0-shim"
+
+    strat = types.ModuleType("hypothesis.strategies")
+    strat.integers = integers
+    strat.floats = floats
+    strat.booleans = booleans
+    strat.sampled_from = sampled_from
+    strat.just = just
+    strat.SearchStrategy = SearchStrategy
+    hyp.strategies = strat
+
+    extra = types.ModuleType("hypothesis.extra")
+    extra_np = types.ModuleType("hypothesis.extra.numpy")
+    extra_np.arrays = _np_arrays
+    extra.numpy = extra_np
+    hyp.extra = extra
+
+    sys.modules.setdefault("hypothesis", hyp)
+    sys.modules.setdefault("hypothesis.strategies", strat)
+    sys.modules.setdefault("hypothesis.extra", extra)
+    sys.modules.setdefault("hypothesis.extra.numpy", extra_np)

@@ -1,6 +1,16 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here - smoke tests and benches must
 see 1 device; only launch/dryrun forces 512 placeholder devices (and tests
 that need a few devices spawn a subprocess - see test_distributed.py)."""
+import os
+import sys
+
+try:  # the image may lack hypothesis: fall back to the deterministic shim
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_shim
+    _hypothesis_shim.install()
+
 import jax
 import numpy as np
 import pytest
@@ -14,3 +24,39 @@ def rng():
 @pytest.fixture
 def key():
     return jax.random.PRNGKey(0)
+
+
+# --------------------------- tolerance helper -------------------------------
+# One shared oracle-comparison policy for every differential test: tolerances
+# keyed by dtype (fp32 kernels accumulate in fp32; bf16 storage loses ~8
+# mantissa bits), scaled by an optional problem-size factor so blocked
+# algorithms with O(n) accumulation depth get proportional slack.
+
+_DTYPE_TOL = {
+    np.dtype(np.float64): dict(rtol=1e-12, atol=1e-12),
+    np.dtype(np.float32): dict(rtol=2e-4, atol=1e-4),
+}
+
+
+def dtype_tolerances(dtype, scale: float = 1.0):
+    """(rtol, atol) for comparing a result of ``dtype`` against an oracle."""
+    base = _DTYPE_TOL.get(np.dtype(dtype))
+    if base is None:  # bfloat16 and anything else low-precision
+        base = dict(rtol=5e-2, atol=5e-2)
+    return base["rtol"] * scale, base["atol"] * scale
+
+
+@pytest.fixture
+def assert_close():
+    """np.testing.assert_allclose with dtype-derived tolerances.
+
+    Usage: assert_close(got, want) or assert_close(got, want, scale=4.0).
+    Arrays are compared in float64 against the oracle ``want``.
+    """
+    def check(got, want, scale: float = 1.0, err_msg: str = ""):
+        got = np.asarray(got)
+        rtol, atol = dtype_tolerances(got.dtype, scale)
+        np.testing.assert_allclose(got.astype(np.float64),
+                                   np.asarray(want).astype(np.float64),
+                                   rtol=rtol, atol=atol, err_msg=err_msg)
+    return check

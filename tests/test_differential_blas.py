@@ -1,0 +1,158 @@
+"""Differential tests: every BLAS routine vs a NumPy/SciPy oracle.
+
+Levels 1-3 over a parametrized shape x dtype x transpose grid; all
+comparisons go through the shared dtype-keyed tolerance helper in
+conftest.py (oracle computed in float64). This is the testing convention
+ROADMAP.md prescribes for every new numeric routine.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.linalg
+
+from repro import blas
+
+DTYPES = [np.float32, jnp.bfloat16]
+SHAPES_MM = [(8, 8, 8), (24, 36, 12), (17, 5, 29), (1, 64, 1)]
+VEC_NS = [1, 7, 64, 1000]
+
+
+def _mk(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32)).astype(dtype)
+
+
+def _f64(x):
+    return np.asarray(x.astype(jnp.float32)).astype(np.float64)
+
+
+# ------------------------------- level 1 ------------------------------------
+
+@pytest.mark.parametrize("n", VEC_NS)
+@pytest.mark.parametrize("schedule", ["tree", "sequential", "strided"])
+def test_ddot_vs_numpy(rng, assert_close, n, schedule):
+    x = _mk(rng, n, np.float32)
+    y = _mk(rng, n, np.float32)
+    got = blas.ddot(x, y, schedule=schedule, accumulators=8)
+    assert_close(got, np.dot(_f64(x), _f64(y)), scale=max(1.0, n / 64))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n", VEC_NS)
+def test_daxpy_dscal_vs_numpy(rng, assert_close, n, dtype):
+    x, y = _mk(rng, n, dtype), _mk(rng, n, dtype)
+    assert_close(blas.daxpy(2.5, x, y), 2.5 * _f64(x) + _f64(y))
+    assert_close(blas.dscal(-0.5, x), -0.5 * _f64(x))
+
+
+@pytest.mark.parametrize("n", VEC_NS)
+def test_dnrm2_dasum_idamax_vs_numpy(rng, assert_close, n):
+    x = _mk(rng, n, np.float32)
+    assert_close(blas.dnrm2(x), np.linalg.norm(_f64(x)))
+    assert_close(blas.level1.dasum(x), np.abs(_f64(x)).sum(),
+                 scale=max(1.0, n / 64))
+    assert int(blas.idamax(x)) == int(np.argmax(np.abs(_f64(x))))
+
+
+def test_drot_vs_oracle(rng, assert_close):
+    x, y = _mk(rng, 33, np.float32), _mk(rng, 33, np.float32)
+    c, s = np.cos(0.3), np.sin(0.3)
+    gx, gy = blas.level1.drot(x, y, c, s)
+    assert_close(gx, c * _f64(x) + s * _f64(y))
+    assert_close(gy, c * _f64(y) - s * _f64(x))
+
+
+# ------------------------------- level 2 ------------------------------------
+
+@pytest.mark.parametrize("trans", [False, True])
+@pytest.mark.parametrize("m,n", [(8, 8), (24, 36), (17, 5), (1, 64)])
+def test_dgemv_vs_numpy(rng, assert_close, m, n, trans):
+    a = _mk(rng, (m, n), np.float32)
+    x = _mk(rng, m if trans else n, np.float32)
+    y = _mk(rng, n if trans else m, np.float32)
+    ref = (_f64(a).T if trans else _f64(a)) @ _f64(x)
+    assert_close(blas.dgemv(a, x, trans=trans), ref)
+    got = blas.dgemv(a, x, trans=trans, alpha=1.5, beta=-2.0, y=y)
+    assert_close(got, 1.5 * ref - 2.0 * _f64(y))
+
+
+def test_dger_vs_numpy(rng, assert_close):
+    x, y = _mk(rng, 13, np.float32), _mk(rng, 21, np.float32)
+    a = _mk(rng, (13, 21), np.float32)
+    assert_close(blas.dger(0.75, x, y, a),
+                 _f64(a) + 0.75 * np.outer(_f64(x), _f64(y)))
+
+
+@pytest.mark.parametrize("unit_diag", [False, True])
+@pytest.mark.parametrize("lower", [False, True])
+@pytest.mark.parametrize("n", [5, 32, 65])
+def test_dtrsv_vs_scipy(rng, assert_close, n, lower, unit_diag):
+    a = _mk(rng, (n, n), np.float32)
+    t = (jnp.tril(a) if lower else jnp.triu(a)) + 4 * jnp.eye(n)
+    b = _mk(rng, n, np.float32)
+    got = blas.dtrsv(t, b, lower=lower, unit_diag=unit_diag)
+    ref = scipy.linalg.solve_triangular(
+        _f64(t), _f64(b), lower=lower, unit_diagonal=unit_diag)
+    assert_close(got, ref, scale=4.0)
+
+
+# ------------------------------- level 3 ------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("ta,tb", [(False, False), (True, False),
+                                   (False, True), (True, True)])
+@pytest.mark.parametrize("m,n,k", SHAPES_MM)
+def test_dgemm_transpose_grid_vs_numpy(rng, assert_close, m, n, k, ta, tb,
+                                       dtype):
+    a = _mk(rng, (k, m) if ta else (m, k), dtype)
+    b = _mk(rng, (n, k) if tb else (k, n), dtype)
+    opa, opb = (a.T if ta else a), (b.T if tb else b)
+    ref = (_f64(a).T if ta else _f64(a)) @ (_f64(b).T if tb else _f64(b))
+    assert_close(blas.dgemm(opa, opb), ref, scale=max(1.0, k / 16))
+
+
+@pytest.mark.parametrize("m,n,k", [(24, 36, 12), (17, 5, 29)])
+def test_dgemm_alpha_beta_vs_numpy(rng, assert_close, m, n, k):
+    a, b = _mk(rng, (m, k), np.float32), _mk(rng, (k, n), np.float32)
+    c = _mk(rng, (m, n), np.float32)
+    got = blas.dgemm(a, b, c=c, alpha=-1.5, beta=0.5)
+    assert_close(got, -1.5 * _f64(a) @ _f64(b) + 0.5 * _f64(c))
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES_MM)
+def test_dgemm_kernel_path_vs_numpy(rng, assert_close, m, n, k):
+    """use_kernel=True (Pallas, interpret on CPU) against the same oracle."""
+    a, b = _mk(rng, (m, k), np.float32), _mk(rng, (k, n), np.float32)
+    got = blas.dgemm(a, b, use_kernel=True, interpret=True)
+    assert_close(got, _f64(a) @ _f64(b), scale=max(1.0, k / 16))
+
+
+@pytest.mark.parametrize("lower", [False, True])
+def test_dsyrk_vs_numpy(rng, assert_close, lower):
+    a = _mk(rng, (12, 20), np.float32)
+    ref = _f64(a) @ _f64(a).T
+    assert_close(blas.dsyrk(a, lower=lower), ref)
+    c = _mk(rng, (12, 12), np.float32)
+    got = blas.dsyrk(a, c=c, alpha=2.0, beta=-1.0, lower=lower,
+                     use_kernel=True)
+    # BLAS semantics: only the selected triangle of C is referenced
+    tri = np.tril if lower else np.triu
+    assert_close(tri(np.asarray(got)), tri(2.0 * ref - _f64(c)))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("left", [True, False])
+@pytest.mark.parametrize("lower", [True, False])
+@pytest.mark.parametrize("n,nrhs,block", [(24, 7, 8), (40, 3, 999)])
+def test_dtrsm_grid_vs_scipy(rng, assert_close, n, nrhs, block, lower, left,
+                             use_kernel):
+    a = _mk(rng, (n, n), np.float32)
+    t = (jnp.tril(a) if lower else jnp.triu(a)) + 4 * jnp.eye(n)
+    b = _mk(rng, (n, nrhs) if left else (nrhs, n), np.float32)
+    got = blas.dtrsm(t, b, lower=lower, left=left, block=block,
+                     use_kernel=use_kernel)
+    if left:
+        ref = scipy.linalg.solve_triangular(_f64(t), _f64(b), lower=lower)
+    else:  # X T = B
+        ref = scipy.linalg.solve_triangular(_f64(t).T, _f64(b).T,
+                                            lower=not lower).T
+    assert_close(got, ref, scale=4.0)

@@ -109,4 +109,7 @@ def test_grad_accum_equivalence():
     assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-5)
     diff = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
                         s1n["params"], s4n["params"])
-    assert max(jax.tree.leaves(diff)) < 5e-5
+    # fp32 reassociation of the microbatch sum is amplified by AdamW's
+    # m/(sqrt(v)+eps) normalization where grads are near zero; ~1e-4 of the
+    # 5e-3 first-step update is pure accumulation-order noise
+    assert max(jax.tree.leaves(diff)) < 2e-4

@@ -2,34 +2,34 @@
 and the codesign schedule comparison the paper's section 4 predicts."""
 from __future__ import annotations
 
-import time
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import blas, lapack
+from repro import blas, lapack, tune
 from repro.core.codesign import optimal_accumulators
+from repro.tune.search import measure_wall_time
 
 
 def _timeit(f, *args, reps=5):
-    f(*args)                                    # compile
-    jax.block_until_ready(f(*args))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = f(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
+    return measure_wall_time(f, *args, reps=reps)
 
 
-def run(emit):
+def run(emit, policy: str = "reference"):
     rng = np.random.default_rng(0)
+    rows = []
     n = 512
     a = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
     b = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
-    t = _timeit(jax.jit(blas.dgemm), a, b)
+    t = _timeit(jax.jit(lambda x, y: blas.dgemm(x, y, policy=policy)), a, b)
     emit(f"blas,dgemm,{n}", t * 1e6, "us_per_call")
     emit(f"blas,dgemm,{n}", 2 * n ** 3 / t / 1e9, "gflops")
+    rows.append({"op": "dgemm", "n": n, "seconds_per_call": t,
+                 "resolution": tune.resolve("gemm", (n, n, n), jnp.float32,
+                                            policy=policy).describe()})
 
     x = jnp.asarray(rng.normal(size=1 << 20).astype(np.float32))
     y = jnp.asarray(rng.normal(size=1 << 20).astype(np.float32))
@@ -40,10 +40,26 @@ def run(emit):
         emit(f"blas,ddot_{sched},1M", t * 1e6, "us_per_call")
 
     m = jnp.asarray(rng.normal(size=(192, 192)).astype(np.float32))
-    for name, f in (("geqrf", jax.jit(lambda z: lapack.geqrf(z, block=32))),
-                    ("getrf", jax.jit(lambda z: lapack.getrf(z, block=32)))):
+    fact_res = tune.resolve("gemm", (192, 192, 32), jnp.float32,
+                            policy=policy).describe()
+    for name, f in (("geqrf", jax.jit(lambda z: lapack.geqrf(
+                        z, block=32, policy=policy))),
+                    ("getrf", jax.jit(lambda z: lapack.getrf(
+                        z, block=32, policy=policy)))):
         t = _timeit(f, m, reps=3)
         emit(f"lapack,{name},192", t * 1e3, "ms_per_call")
+        rows.append({"op": name, "n": 192, "block": 32,
+                     "seconds_per_call": t, "resolution": fact_res})
     s = m @ m.T + 192 * jnp.eye(192)
-    t = _timeit(jax.jit(lambda z: lapack.potrf(z, block=32)), s, reps=3)
+    t = _timeit(jax.jit(lambda z: lapack.potrf(z, block=32, policy=policy)),
+                s, reps=3)
     emit("lapack,potrf,192", t * 1e3, "ms_per_call")
+    rows.append({"op": "potrf", "n": 192, "block": 32,
+                 "seconds_per_call": t, "resolution": fact_res})
+
+    out = os.path.join(os.path.dirname(__file__), "out", "blas.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"benchmark": "blas", "backend": jax.default_backend(),
+                   "policy": policy, "rows": rows}, f, indent=2)
+    emit("blas,json", out, "path")

@@ -14,32 +14,25 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import lapack
+from repro import lapack, tune
+from repro.core.codesign import FACTOR_FLOP_COEFF as FLOP_COEFF
 from repro.core.codesign import plan_factorization
+from repro.tune.search import measure_wall_time as _timeit
 
-FLOP_COEFF = {"potrf": 1.0 / 3.0, "getrf": 2.0 / 3.0, "geqrf": 4.0 / 3.0}
 FACTOR_FN = {"potrf": lapack.batched_potrf, "getrf": lapack.batched_getrf,
              "geqrf": lapack.batched_geqrf}
 
 
-def _timeit(f, *args, reps=3):
-    jax.block_until_ready(f(*args))             # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = f(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
-
-
 def sweep(batches=(1, 8, 32), sizes=(32, 64, 128), blocks=(8, 16, 32, None),
-          kinds=("potrf", "getrf", "geqrf"), reps=3):
-    """Returns a list of row dicts, one per (kind, batch, n, block)."""
+          kinds=("potrf", "getrf", "geqrf"), reps=3, policy="reference"):
+    """Returns a list of row dicts, one per (kind, batch, n, block); every
+    row carries the policy its trailing updates resolved through the
+    repro.tune dispatcher."""
     rng = np.random.default_rng(0)
     rows = []
     for kind in kinds:
@@ -48,11 +41,13 @@ def sweep(batches=(1, 8, 32), sizes=(32, 64, 128), blocks=(8, 16, 32, None),
             a = rng.normal(size=(max(batches), n, n)).astype(np.float32)
             if kind == "potrf":
                 a = a @ np.swapaxes(a, 1, 2) + n * np.eye(n, dtype=np.float32)
+            gemm_cfg = tune.resolve(
+                "gemm", (n, n, n), jnp.float32, policy=policy).describe()
             for b in batches:
                 x = jnp.asarray(a[:b])
                 for block in blocks:
                     f = jax.jit(lambda m, k=kind, nb=block: FACTOR_FN[k](
-                        m, block=nb).factors)
+                        m, block=nb, policy=policy).factors)
                     t = _timeit(f, x, reps=reps)
                     flops = b * FLOP_COEFF[kind] * 2.0 * n ** 3
                     rows.append({
@@ -60,6 +55,8 @@ def sweep(batches=(1, 8, 32), sizes=(32, 64, 128), blocks=(8, 16, 32, None),
                         "block": block if block is not None else
                         plan_factorization(n, kind=kind).block,
                         "planned": block is None,
+                        "policy": policy,
+                        "trailing_resolution": gemm_cfg,
                         "seconds_per_call": t,
                         "gflops": flops / t / 1e9,
                     })
@@ -84,6 +81,7 @@ def record(rows) -> dict:
         "benchmark": "lapack_batched",
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
+        "policy": rows[0]["policy"] if rows else None,
         "rows": rows,
         "summary": summary,
     }

@@ -17,6 +17,7 @@ MODULES = [
     ("synthesis", "benchmarks.bench_synthesis"),          # tables 1-2
     ("blas", "benchmarks.bench_blas"),                    # substrate perf
     ("lapack_batched", "benchmarks.bench_lapack_batched"),  # batched sweep
+    ("tune", "benchmarks.bench_tune"),                    # tuner sweep -> registry
     ("census", "benchmarks.bench_census"),                # section 4 on zoo
     ("roofline", "benchmarks.bench_roofline"),            # dry-run reader
 ]

@@ -11,5 +11,29 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 echo "== collection guard (zero import errors required) =="
 python -m pytest --collect-only -q
 
+echo "== tuner smoke (tiny sweep -> tmpdir registry -> lookup must hit) =="
+python - <<'PY'
+import tempfile, os, sys
+import jax, jax.numpy as jnp
+from repro.tune import dispatch, search
+from repro.tune.registry import Registry
+
+with tempfile.TemporaryDirectory() as d:
+    reg = Registry(path=os.path.join(d, "registry.json"))
+    search.tune_gemm(16, 16, 16, registry=reg, top_k=1, reps=1)
+    search.tune_trsm(32, 4, registry=reg, reps=1, blocks=(16,))
+    path = reg.save()
+    reloaded = Registry(path=path)
+    backend = jax.default_backend()
+    for op, shape in (("gemm", (16, 16, 16)), ("trsm", (32, 4))):
+        assert reloaded.lookup(op, shape, jnp.float32, backend) is not None, \
+            f"registry round-trip lost the {op} entry"
+        res = dispatch.resolve(op, shape, jnp.float32, policy="tuned",
+                               registry=reloaded)
+        assert res.source == "registry", \
+            f"{op} resolution missed the registry: {res.source}"
+print("tuner smoke OK: sweep -> save -> reload -> registry hit")
+PY
+
 echo "== tier-1 suite =="
 python -m pytest -x -q "$@"

@@ -1,14 +1,27 @@
-"""Level-2 BLAS in JAX."""
+"""Level-2 BLAS in JAX.
+
+``dgemv`` shares the BLAS-3 policy mechanism: its matvec core resolves
+through :mod:`repro.tune.dispatch` (``reference`` = plain jnp; ``model`` /
+``tuned`` route op(A) x through the Pallas GEMM kernel as an (m, n) x
+(n, 1) product), so Level-2 configs live in the same registry.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax.numpy as jnp
 from jax import lax
 
 
 def dgemv(a: jnp.ndarray, x: jnp.ndarray, beta=0.0, y=None,
-          alpha=1.0, trans: bool = False) -> jnp.ndarray:
+          alpha=1.0, trans: bool = False, policy: Optional[str] = None,
+          use_kernel: Optional[bool] = None, interpret: bool = True,
+          registry=None) -> jnp.ndarray:
     """y <- alpha*op(A) x + beta*y."""
-    ax = (a.T if trans else a) @ x
+    from repro.tune import dispatch as _tune
+    ax = _tune.dispatch("gemv", a, x, trans=trans, policy=policy,
+                        use_kernel=use_kernel, interpret=interpret,
+                        registry=registry)
     out = alpha * ax
     if y is not None:
         out = out + beta * y

@@ -1,10 +1,14 @@
-"""Level-3 BLAS in JAX, with Pallas-kernel dispatch for the GEMM hot spot.
+"""Level-3 BLAS in JAX, policy-dispatched onto the Pallas GEMM hot spot.
 
-``dgemm`` is the routine the whole paper orbits (every LAPACK trailing update
-lowers to it); ``use_kernel=True`` routes through the Pallas MXU kernel whose
-tiling comes from :func:`repro.core.codesign.plan_gemm`. ``dsyrk`` and
-``dtrsm`` thread the same flag through to their internal GEMMs, so a blocked
-factorization dispatches *every* trailing flop onto the one hot path.
+``dgemm`` is the routine the whole paper orbits (every LAPACK trailing
+update lowers to it). Every kernel-shaped core here resolves through
+:mod:`repro.tune.dispatch`: ``policy="reference"`` is plain jnp,
+``"model"`` the Pallas MXU kernel at the :func:`repro.core.codesign`
+tiling, ``"tuned"`` the measured registry config (cold start == model).
+``dsyrk`` and ``dtrsm`` thread the same policy through their internal
+GEMMs, so a blocked factorization dispatches *every* trailing flop onto
+the one hot path. ``use_kernel=True/False`` remains as a deprecated alias
+for ``policy="model"`` / ``"reference"``.
 """
 from __future__ import annotations
 
@@ -15,14 +19,16 @@ from jax import lax
 
 
 def dgemm(a: jnp.ndarray, b: jnp.ndarray, c: Optional[jnp.ndarray] = None,
-          alpha=1.0, beta=0.0, use_kernel: bool = False,
-          interpret: bool = True) -> jnp.ndarray:
-    """C <- alpha * A B + beta * C."""
-    if use_kernel:
-        from repro.kernels import ops  # local import: kernels are optional
-        ab = ops.gemm(a, b, use_pallas=True, interpret=interpret)
-    else:
-        ab = a @ b
+          alpha=1.0, beta=0.0, transa: bool = False, transb: bool = False,
+          policy: Optional[str] = None, use_kernel: Optional[bool] = None,
+          interpret: bool = True, registry=None) -> jnp.ndarray:
+    """C <- alpha * op(A) op(B) + beta * C."""
+    from repro.tune import dispatch as _tune
+    op_a = a.T if transa else a
+    op_b = b.T if transb else b
+    ab = _tune.dispatch("gemm", op_a, op_b, policy=policy,
+                        use_kernel=use_kernel, interpret=interpret,
+                        registry=registry)
     out = alpha * ab
     if c is not None:
         out = out + beta * c
@@ -30,10 +36,19 @@ def dgemm(a: jnp.ndarray, b: jnp.ndarray, c: Optional[jnp.ndarray] = None,
 
 
 def dsyrk(a: jnp.ndarray, c: Optional[jnp.ndarray] = None, alpha=1.0,
-          beta=0.0, lower: bool = True, use_kernel: bool = False,
-          interpret: bool = True) -> jnp.ndarray:
-    """C <- alpha A A^T + beta C, triangular part referenced."""
-    full = alpha * dgemm(a, a.T, use_kernel=use_kernel, interpret=interpret)
+          beta=0.0, lower: bool = True, trans: bool = False,
+          policy: Optional[str] = None, use_kernel: Optional[bool] = None,
+          interpret: bool = True, registry=None) -> jnp.ndarray:
+    """C <- alpha op(A) op(A)^T + beta C, triangular part referenced.
+
+    ``trans`` mirrors ``dgemm``'s transpose flags (BLAS TRANS: False is
+    A A^T, True is A^T A); the product runs through the same ``dgemm``
+    kernel path, so SYRK reaches Pallas under the kernel policies.
+    """
+    from repro.tune import dispatch as _tune
+    full = alpha * _tune.dispatch("syrk", a, trans=trans, policy=policy,
+                                  use_kernel=use_kernel, interpret=interpret,
+                                  registry=registry)
     if c is not None:
         full = full + beta * c
     n = full.shape[0]
@@ -44,20 +59,34 @@ def dsyrk(a: jnp.ndarray, c: Optional[jnp.ndarray] = None, alpha=1.0,
 
 def dtrsm(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
           unit_diag: bool = False, left: bool = True,
-          block: int = 64, use_kernel: bool = False,
-          interpret: bool = True) -> jnp.ndarray:
+          block: Optional[int] = None, policy: Optional[str] = None,
+          use_kernel: Optional[bool] = None, interpret: bool = True,
+          registry=None) -> jnp.ndarray:
     """Solve op(T) X = B (left=True) or X op(T) = B, T triangular, blocked.
 
-    Diagonal blocks use the sequential substitution scan (the serial divider
-    chain); off-diagonal updates are GEMMs - the paper's panel/trailing
-    structure in miniature - and follow ``use_kernel`` onto the Pallas path.
+    Diagonal blocks use the sequential substitution scan (the serial
+    divider chain); off-diagonal updates are GEMMs - the paper's
+    panel/trailing structure in miniature - and follow the policy onto the
+    Pallas path. ``block=None`` resolves the diagonal width through
+    :func:`repro.tune.dispatch.resolve` (64 under ``reference`` - the
+    historical default - else the ``plan_trsm`` model or the registry).
     """
     if not left:
         # X T = B  <=>  T^T X^T = B^T
         return dtrsm(a.T, b.T, lower=not lower, unit_diag=unit_diag,
-                     left=True, block=block, use_kernel=use_kernel,
-                     interpret=interpret).T
+                     left=True, block=block, policy=policy,
+                     use_kernel=use_kernel, interpret=interpret,
+                     registry=registry).T
     n = a.shape[0]
+    if block is None:
+        from repro.tune import dispatch as _tune
+        nrhs = b.shape[1] if b.ndim == 2 else 1
+        res = _tune.resolve("trsm", (n, nrhs), a.dtype, policy=policy,
+                            use_kernel=use_kernel, registry=registry)
+        pol, block = res.policy, res.block
+    else:
+        from repro.tune.policy import resolve_policy
+        pol = resolve_policy(policy, use_kernel)
     if n <= block:
         return _trsm_unblocked(a, b, lower=lower, unit_diag=unit_diag)
     blocks = list(range(0, n, block))
@@ -67,11 +96,11 @@ def dtrsm(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
         i1 = min(i0 + block, n)
         rhs = b[i0:i1]
         if lower and i0 > 0:
-            rhs = rhs - dgemm(a[i0:i1, :i0], x[:i0], use_kernel=use_kernel,
-                              interpret=interpret)
+            rhs = rhs - dgemm(a[i0:i1, :i0], x[:i0], policy=pol,
+                              interpret=interpret, registry=registry)
         elif not lower and i1 < n:
-            rhs = rhs - dgemm(a[i0:i1, i1:], x[i1:], use_kernel=use_kernel,
-                              interpret=interpret)
+            rhs = rhs - dgemm(a[i0:i1, i1:], x[i1:], policy=pol,
+                              interpret=interpret, registry=registry)
         xi = _trsm_unblocked(a[i0:i1, i0:i1], rhs, lower=lower,
                              unit_diag=unit_diag)
         x = x.at[i0:i1].set(xi)

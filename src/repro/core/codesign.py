@@ -154,6 +154,23 @@ def plan_gemm(m: int, n: int, k: int, dtype_bytes: int = 2,
     return best
 
 
+def plan_from_blocks(m: int, n: int, k: int, bm: int, bn: int, bk: int,
+                     dtype_bytes: int = 2) -> GemmPlan:
+    """Rebuild a full :class:`GemmPlan` from explicit block dims.
+
+    This is how registry entries (``{"bm","bn","bk"}``) and sweep
+    candidates become executable plans: grid, VMEM footprint, and
+    arithmetic intensity are re-derived exactly as :func:`plan_gemm`
+    derives them for its own picks.
+    """
+    bm_, bn_, bk_ = (max(int(b), 1) for b in (bm, bn, bk))
+    grid = (-(-m // bm_), -(-n // bn_), -(-k // bk_))
+    vmem = 2 * (bm_ * bk_ + bk_ * bn_) * dtype_bytes + bm_ * bn_ * 4
+    ai = (2 * bm_ * bn_ * bk_) / ((bm_ * bk_ + bk_ * bn_) * dtype_bytes
+                                  + bm_ * bn_ * dtype_bytes / max(grid[2], 1))
+    return GemmPlan(bm_, bn_, bk_, optimal_accumulators(bk_ // MXU, max_u=8),
+                    grid, vmem, ai)
+
 
 # ------------------------- blocked-factorization plans ----------------------
 # Serial-chain cycles exposed per panel column: the paper's section-4.2
@@ -161,8 +178,10 @@ def plan_gemm(m: int, n: int, k: int, dtype_bytes: int = 2,
 # potrf: sqrt then a dependent div per column; getrf: pivot-compare + div;
 # geqrf: norm-sqrt, alpha-add, div scale, tau div.
 _PANEL_CHAIN_CYCLES = {"potrf": 14 + 12, "getrf": 6 + 12, "geqrf": 14 + 6 + 2 * 12}
-# flops(n) ~ coeff * n^3 for the square factorization.
+# flops(n) ~ coeff * n^3 for the square factorization. Public alias below:
+# benchmarks derive Gflop/s from the same table the model plans with.
 _FACTOR_FLOP_COEFF = {"potrf": 1.0 / 3.0, "getrf": 2.0 / 3.0, "geqrf": 4.0 / 3.0}
+FACTOR_FLOP_COEFF = _FACTOR_FLOP_COEFF
 MXU_CLOCK = PEAK_BF16_FLOPS / (2 * MXU * MXU)   # cycles/s implied by peak
 VPU_FLOPS = MXU_CLOCK * SUBLANE * LANE          # vector (non-MXU) peak
 
@@ -253,6 +272,56 @@ def plan_factorization(n: int, kind: str = "potrf", dtype_bytes: int = 4,
     gemm = plan_gemm(rest, rest, best_nb, dtype_bytes=dtype_bytes)
     p, t = _factorization_time(n, best_nb, kind, dtype_bytes, batch)
     return FactorizationPlan(kind, best_nb, gemm, p, t, batch=batch)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrsmPlan:
+    """Diagonal-block width for the blocked triangular solve."""
+
+    block: int
+    panel_time: float             # modeled seconds in serial substitutions
+    trailing_time: float          # modeled seconds in off-diagonal GEMMs
+
+    @property
+    def modeled_time(self) -> float:
+        return self.panel_time + self.trailing_time
+
+
+def plan_trsm(n: int, nrhs: int = 1, dtype_bytes: int = 4,
+              candidates: Tuple[int, ...] = (16, 32, 64, 128)) -> TrsmPlan:
+    """Pick the diagonal-block width for the blocked TRSM.
+
+    Same structure as :func:`plan_factorization`: the diagonal substitution
+    scan is the serial divider-hazard chain (one dependent div per row, a
+    block-wide AXPY at VPU rate - work that grows with the block); the
+    off-diagonal updates are GEMMs whose per-panel pipeline fill shrinks as
+    the block grows. The modeled minimum is eq. 3's p_opt in software.
+    """
+    n = max(int(n), 1)
+    nrhs = max(int(nrhs), 1)
+    chain = _PANEL_CHAIN_CYCLES["getrf"] / MXU_CLOCK   # pivotless div chain
+    best: Optional[TrsmPlan] = None
+    for b in candidates:
+        b_ = min(b, n)
+        steps = -(-n // b_)
+        # serial part: n dependent divides + the in-block AXPYs at VPU rate
+        panel = n * chain + 2.0 * n * b_ * nrhs / VPU_FLOPS \
+            + steps * PIPELINE_FILL_S
+        # off-diagonal GEMMs: ~ n*(n-b)/2 * nrhs MACs under the roofline
+        flops = max(n - b_, 0) * n * nrhs
+        if flops > 0:
+            bytes_moved = (max(n - b_, 0) * b_ + 2 * n * nrhs) * dtype_bytes
+            ai = flops / max(bytes_moved, 1)
+            rate = min(PEAK_BF16_FLOPS, ai * HBM_BW)
+            trailing = flops / rate + steps * PIPELINE_FILL_S
+        else:
+            trailing = 0.0
+        cand = TrsmPlan(b_, panel, trailing)
+        if best is None or cand.modeled_time < best.modeled_time:
+            best = cand
+        if b_ >= n:
+            break
+    return best
 
 
 @dataclasses.dataclass(frozen=True)

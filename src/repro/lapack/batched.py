@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.blas.level3 import dtrsm
 from repro.lapack import cholesky, lu, qr
 from repro.lapack.cholesky import default_block
+from repro.tune.policy import resolve_policy
 
 
 @functools.partial(jax.tree_util.register_dataclass,
@@ -59,42 +60,49 @@ def _resolve_block(kmax: int, block: Optional[int], kind: str) -> int:
 
 
 def batched_potrf(a: jnp.ndarray, block: Optional[int] = None,
-                  use_kernel: bool = False,
+                  policy: Optional[str] = None,
+                  use_kernel: Optional[bool] = None,
                   interpret: bool = True) -> FactorizationResult:
     """Cholesky of a (B, n, n) SPD batch; factors holds L (lower)."""
     assert a.ndim == 3 and a.shape[1] == a.shape[2], a.shape
+    pol = resolve_policy(policy, use_kernel)
     nb = _resolve_block(a.shape[1], block, "potrf")
-    f = jax.vmap(lambda x: cholesky.potrf(x, block=nb, use_kernel=use_kernel,
+    f = jax.vmap(lambda x: cholesky.potrf(x, block=nb, policy=pol,
                                           interpret=interpret))
     return FactorizationResult(f(a), None, None, "potrf", nb)
 
 
 def batched_getrf(a: jnp.ndarray, block: Optional[int] = None,
-                  use_kernel: bool = False,
+                  policy: Optional[str] = None,
+                  use_kernel: Optional[bool] = None,
                   interpret: bool = True) -> FactorizationResult:
     """LU with partial pivoting of a (B, m, n) batch."""
     assert a.ndim == 3, a.shape
+    pol = resolve_policy(policy, use_kernel)
     nb = _resolve_block(min(a.shape[1], a.shape[2]), block, "getrf")
-    f = jax.vmap(lambda x: lu.getrf(x, block=nb, use_kernel=use_kernel,
+    f = jax.vmap(lambda x: lu.getrf(x, block=nb, policy=pol,
                                     interpret=interpret))
     packed, piv = f(a)
     return FactorizationResult(packed, piv, None, "getrf", nb)
 
 
 def batched_geqrf(a: jnp.ndarray, block: Optional[int] = None,
-                  use_kernel: bool = False,
+                  policy: Optional[str] = None,
+                  use_kernel: Optional[bool] = None,
                   interpret: bool = True) -> FactorizationResult:
     """Householder QR of a (B, m, n) batch."""
     assert a.ndim == 3, a.shape
+    pol = resolve_policy(policy, use_kernel)
     nb = _resolve_block(min(a.shape[1], a.shape[2]), block, "geqrf")
-    f = jax.vmap(lambda x: qr.geqrf(x, block=nb, use_kernel=use_kernel,
+    f = jax.vmap(lambda x: qr.geqrf(x, block=nb, policy=pol,
                                     interpret=interpret))
     packed, tau = f(a)
     return FactorizationResult(packed, None, tau, "geqrf", nb)
 
 
 def batched_solve(res: FactorizationResult, b: jnp.ndarray,
-                  use_kernel: bool = False,
+                  policy: Optional[str] = None,
+                  use_kernel: Optional[bool] = None,
                   interpret: bool = True) -> jnp.ndarray:
     """Solve A_i x_i = b_i for every batch item from a FactorizationResult.
 
@@ -104,9 +112,10 @@ def batched_solve(res: FactorizationResult, b: jnp.ndarray,
     """
     vec = b.ndim == 2
     rhs = b[:, :, None] if vec else b
+    pol = resolve_policy(policy, use_kernel)
 
     def trsm(t, r, **kw):
-        return dtrsm(t, r, left=True, use_kernel=use_kernel,
+        return dtrsm(t, r, left=True, policy=pol,
                      interpret=interpret, **kw)
 
     if res.kind == "potrf":

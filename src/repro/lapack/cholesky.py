@@ -1,9 +1,11 @@
 """DPOTRF - Cholesky factorization (lower), unblocked and blocked.
 
 Blocked right-looking form: POTRF(diag) + TRSM(panel) + SYRK(trailing).
-Every trailing flop dispatches through :mod:`repro.blas.level3`, so
-``use_kernel=True`` lowers the SYRK/GEMM hot path onto the Pallas MXU
-kernel (interpret mode on CPU). The default panel width comes from
+Every trailing flop dispatches through :mod:`repro.blas.level3`, whose
+kernel configs resolve via :mod:`repro.tune.dispatch`: ``policy="model"``
+(the deprecated ``use_kernel=True``) lowers the SYRK/GEMM hot path onto
+the Pallas MXU kernel (interpret mode on CPU); ``"tuned"`` uses the
+registry's measured config. The default panel width comes from
 :func:`repro.core.codesign.plan_factorization` - the same roofline +
 pipeline-depth model that tiles the GEMM itself.
 """
@@ -43,8 +45,11 @@ def potrf_unblocked(a: jnp.ndarray) -> jnp.ndarray:
 
 
 def potrf(a: jnp.ndarray, block: Optional[int] = None,
-          use_kernel: bool = False, interpret: bool = True) -> jnp.ndarray:
+          policy: Optional[str] = None, use_kernel: Optional[bool] = None,
+          interpret: bool = True) -> jnp.ndarray:
     """Blocked right-looking POTRF: panel = hazards, trailing = GEMM."""
+    from repro.tune.policy import resolve_policy
+    pol = resolve_policy(policy, use_kernel)
     n = a.shape[0]
     if block is None:
         block = default_block(n, "potrf")
@@ -58,10 +63,11 @@ def potrf(a: jnp.ndarray, block: Optional[int] = None,
             l11 = a[j0:j0 + nb, j0:j0 + nb]
             # L21 = A21 L11^{-T}
             l21 = dtrsm(l11, a[j0 + nb:, j0:j0 + nb].T, lower=True,
-                        unit_diag=False, left=True, use_kernel=use_kernel,
+                        unit_diag=False, left=True, policy=pol,
                         interpret=interpret).T
             a = a.at[j0 + nb:, j0:j0 + nb].set(l21)
             # trailing SYRK: A22 -= L21 L21^T (the DGEMM hot path)
             a = a.at[j0 + nb:, j0 + nb:].add(
-                -dgemm(l21, l21.T, use_kernel=use_kernel, interpret=interpret))
+                -dgemm(l21, l21, transb=True, policy=pol,
+                       interpret=interpret))
     return jnp.tril(a)

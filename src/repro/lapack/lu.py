@@ -42,14 +42,18 @@ def getrf_unblocked(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def getrf(a: jnp.ndarray, block: Optional[int] = None,
-          use_kernel: bool = False,
+          policy: Optional[str] = None, use_kernel: Optional[bool] = None,
           interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Blocked right-looking LU with partial pivoting.
 
     Trailing updates (TRSM for U12, GEMM for A22) dispatch through
-    :mod:`repro.blas.level3`; ``use_kernel=True`` reaches the Pallas MXU
-    kernel. Default block from ``plan_factorization(kind="getrf")``.
+    :mod:`repro.blas.level3`, resolved by :mod:`repro.tune.dispatch`:
+    ``policy="model"`` (deprecated ``use_kernel=True``) reaches the Pallas
+    MXU kernel, ``"tuned"`` the registry config. Default block from
+    ``plan_factorization(kind="getrf")``.
     """
+    from repro.tune.policy import resolve_policy
+    pol = resolve_policy(policy, use_kernel)
     n, nc = a.shape
     kmax = min(n, nc)
     if block is None:
@@ -87,11 +91,11 @@ def getrf(a: jnp.ndarray, block: Optional[int] = None,
             # U12 = L11^{-1} A12 ; A22 -= L21 U12  (trsm + GEMM)
             l11 = a[j0:j0 + nb, j0:j0 + nb]
             u12 = dtrsm(l11, a[j0:j0 + nb, j0 + nb:], lower=True,
-                        unit_diag=True, left=True, use_kernel=use_kernel,
+                        unit_diag=True, left=True, policy=pol,
                         interpret=interpret)
             a = a.at[j0:j0 + nb, j0 + nb:].set(u12)
             a = a.at[j0 + nb:, j0 + nb:].add(
-                -dgemm(a[j0 + nb:, j0:j0 + nb], u12, use_kernel=use_kernel,
+                -dgemm(a[j0 + nb:, j0:j0 + nb], u12, policy=pol,
                        interpret=interpret))
     return a, jnp.concatenate(pivs)
 

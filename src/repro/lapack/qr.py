@@ -85,15 +85,18 @@ def _larft(v: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
 
 
 def geqrf(a: jnp.ndarray, block: Optional[int] = None,
-          use_kernel: bool = False,
+          policy: Optional[str] = None, use_kernel: Optional[bool] = None,
           interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Blocked QR (compact WY). Python loop over static panel boundaries ->
     still a single jittable computation.
 
     The trailing compact-WY triple product is three GEMMs dispatched through
-    :func:`repro.blas.level3.dgemm` (``use_kernel=True`` -> Pallas MXU);
-    default block from ``plan_factorization(kind="geqrf")``.
+    :func:`repro.blas.level3.dgemm`, resolved by :mod:`repro.tune.dispatch`
+    (``policy="model"`` - the deprecated ``use_kernel=True`` - is the Pallas
+    MXU kernel); default block from ``plan_factorization(kind="geqrf")``.
     """
+    from repro.tune.policy import resolve_policy
+    pol = resolve_policy(policy, use_kernel)
     m, n = a.shape
     kmax = min(m, n)
     if block is None:
@@ -129,11 +132,11 @@ def geqrf(a: jnp.ndarray, block: Optional[int] = None,
                           1.0, V)
             T = _larft(V, tau)
             C = a[:, j0 + nb:]
-            W = dgemm(V.T, C, use_kernel=use_kernel,
+            W = dgemm(V, C, transa=True, policy=pol,
                       interpret=interpret)            # (nb, rest)   GEMM
             W = T.T @ W                               # small (nb x nb) GEMM
             a = a.at[:, j0 + nb:].set(
-                C - dgemm(V, W, use_kernel=use_kernel,
+                C - dgemm(V, W, policy=pol,
                           interpret=interpret))       # GEMM
     return a, jnp.concatenate(taus)
 
@@ -156,10 +159,10 @@ def q_from_geqrf(packed: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
 
 
 def qr(a: jnp.ndarray, block: Optional[int] = None,
-       use_kernel: bool = False,
+       policy: Optional[str] = None, use_kernel: Optional[bool] = None,
        interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Convenience (Q, R) form."""
-    packed, tau = geqrf(a, block=block, use_kernel=use_kernel,
+    packed, tau = geqrf(a, block=block, policy=policy, use_kernel=use_kernel,
                         interpret=interpret)
     q = q_from_geqrf(packed, tau)
     r = jnp.triu(packed)[: min(a.shape), :]

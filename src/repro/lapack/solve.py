@@ -1,4 +1,10 @@
-"""DGESV-style dense solvers built on the factorizations."""
+"""DGESV-style dense solvers built on the factorizations.
+
+Both drivers thread the tuner policy (``reference`` | ``model`` |
+``tuned``; ``use_kernel`` deprecated alias) through every factorization
+and triangular solve, so the whole solve resolves its kernel configs via
+:mod:`repro.tune.dispatch`.
+"""
 from __future__ import annotations
 
 from typing import Optional
@@ -11,29 +17,33 @@ from repro.lapack.qr import geqrf, q_from_geqrf
 
 
 def gesv(a: jnp.ndarray, b: jnp.ndarray, block: Optional[int] = None,
-         use_kernel: bool = False, interpret: bool = True) -> jnp.ndarray:
+         policy: Optional[str] = None, use_kernel: Optional[bool] = None,
+         interpret: bool = True) -> jnp.ndarray:
     """Solve A X = B via LU with partial pivoting + two triangular solves."""
-    packed, piv = getrf(a, block=block, use_kernel=use_kernel,
-                        interpret=interpret)
+    from repro.tune.policy import resolve_policy
+    pol = resolve_policy(policy, use_kernel)
+    packed, piv = getrf(a, block=block, policy=pol, interpret=interpret)
     rhs = b if b.ndim == 2 else b[:, None]
     rhs = apply_ipiv(rhs, piv)
     y = dtrsm(packed, rhs, lower=True, unit_diag=True, left=True,
-              use_kernel=use_kernel, interpret=interpret)
+              policy=pol, interpret=interpret)
     x = dtrsm(packed, y, lower=False, unit_diag=False, left=True,
-              use_kernel=use_kernel, interpret=interpret)
+              policy=pol, interpret=interpret)
     return x if b.ndim == 2 else x[:, 0]
 
 
 def lstsq_qr(a: jnp.ndarray, b: jnp.ndarray, block: Optional[int] = None,
-             use_kernel: bool = False, interpret: bool = True) -> jnp.ndarray:
+             policy: Optional[str] = None, use_kernel: Optional[bool] = None,
+             interpret: bool = True) -> jnp.ndarray:
     """Least-squares via QR: x = R^{-1} Q^T b (m >= n, full rank)."""
+    from repro.tune.policy import resolve_policy
+    pol = resolve_policy(policy, use_kernel)
     m, n = a.shape
-    packed, tau = geqrf(a, block=block, use_kernel=use_kernel,
-                        interpret=interpret)
+    packed, tau = geqrf(a, block=block, policy=pol, interpret=interpret)
     q = q_from_geqrf(packed, tau)
     rhs = b if b.ndim == 2 else b[:, None]
     qtb = q.T @ rhs
     r = jnp.triu(packed)[:n, :n]
     x = dtrsm(r, qtb[:n], lower=False, unit_diag=False, left=True,
-              use_kernel=use_kernel, interpret=interpret)
+              policy=pol, interpret=interpret)
     return x if b.ndim == 2 else x[:, 0]

@@ -1,0 +1,167 @@
+"""Unified BLAS/LAPACK kernel-config resolution and execution.
+
+``resolve`` is the single place a (op, shape, dtype, backend, policy)
+tuple becomes an executable config; ``dispatch`` executes it. Every BLAS-3
+and blocked-LAPACK call in the repo funnels through here - the old
+``use_kernel`` booleans survive only as deprecated aliases that
+:func:`repro.tune.policy.resolve_policy` folds into a policy.
+
+Resolution table (``source`` records which row fired):
+
+    policy      registry hit        registry miss / no file / corrupt
+    ---------   -----------------   ---------------------------------
+    reference   (never consulted)   plain jnp
+    model       (never consulted)   plan_gemm / plan_trsm config
+    tuned       stored config       model config  (source="fallback-model")
+
+The miss column is why a cold-start ``tuned`` run is numerically identical
+to ``model``: both execute the same kernel with the same plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codesign import (GemmPlan, plan_from_blocks, plan_gemm,
+                                 plan_trsm)
+from repro.tune.policy import resolve_policy, uses_kernel
+from repro.tune.registry import Registry, default_registry
+
+OPS = ("gemm", "gemv", "trsm", "syrk")
+
+
+@dataclasses.dataclass(frozen=True)
+class Resolution:
+    """The resolved execution recipe for one call."""
+
+    op: str
+    policy: str                   # "reference" | "model" | "tuned"
+    source: str                   # "reference" | "model" | "registry" |
+                                  # "fallback-model"
+    use_pallas: bool
+    gemm_plan: Optional[GemmPlan] = None
+    block: Optional[int] = None   # trsm diagonal width
+
+    def describe(self) -> dict:
+        """JSON-able summary - benchmarks attach this to every record so
+        trajectories are comparable across PRs."""
+        d = {"op": self.op, "policy": self.policy, "source": self.source,
+             "use_pallas": self.use_pallas}
+        if self.gemm_plan is not None:
+            d["config"] = {"bm": self.gemm_plan.bm, "bn": self.gemm_plan.bn,
+                           "bk": self.gemm_plan.bk}
+        if self.block is not None:
+            d.setdefault("config", {})["block"] = self.block
+        return d
+
+
+def resolve(op: str, shape: Tuple[int, ...], dtype,
+            policy: Optional[str] = None, use_kernel: Optional[bool] = None,
+            registry: Optional[Registry] = None,
+            backend: Optional[str] = None) -> Resolution:
+    """Resolve one call's config. shape is (m, n, k) for gemm/syrk,
+    (m, n) for gemv, (n, nrhs) for trsm."""
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
+    pol = resolve_policy(policy, use_kernel)
+    if not uses_kernel(pol):
+        if op == "trsm":
+            # the reference path still needs a diagonal width; 64 is the
+            # historical (pre-tuner) default
+            return Resolution(op, pol, "reference", False, block=64)
+        return Resolution(op, pol, "reference", False)
+    dtype = jnp.dtype(dtype)
+    backend = backend or jax.default_backend()
+    cfg = None
+    source = "model"
+    if pol == "tuned":
+        reg = registry if registry is not None else default_registry()
+        # syrk and gemv execute as GEMMs, so they share the gemm registry
+        # entries (gemv under its execution shape (m, 1, n))
+        lookup_op, lookup_shape = op, shape
+        if op == "syrk":
+            lookup_op = "gemm"
+        elif op == "gemv":
+            lookup_op, lookup_shape = "gemm", (shape[0], 1, shape[1])
+        cfg = reg.lookup(lookup_op, lookup_shape, dtype, backend)
+        source = "registry" if cfg is not None else "fallback-model"
+    if op in ("gemm", "syrk"):
+        m, n, k = shape
+        if cfg is not None:
+            plan = plan_from_blocks(m, n, k, cfg.params["bm"],
+                                    cfg.params["bn"], cfg.params["bk"],
+                                    dtype_bytes=dtype.itemsize)
+        else:
+            plan = plan_gemm(m, n, k, dtype_bytes=dtype.itemsize)
+        return Resolution(op, pol, source, True, gemm_plan=plan)
+    if op == "gemv":
+        m, n = shape
+        if cfg is not None:
+            plan = plan_from_blocks(m, 1, n, cfg.params["bm"],
+                                    cfg.params["bn"], cfg.params["bk"],
+                                    dtype_bytes=dtype.itemsize)
+        else:
+            plan = plan_gemm(m, 1, n, dtype_bytes=dtype.itemsize)
+        return Resolution(op, pol, source, True, gemm_plan=plan)
+    # trsm
+    n, nrhs = shape
+    block = cfg.params["block"] if cfg is not None \
+        else plan_trsm(n, nrhs, dtype_bytes=dtype.itemsize).block
+    return Resolution(op, pol, source, True, block=block)
+
+
+def _gemm_exec(a, b, res: Resolution, interpret: bool):
+    if not res.use_pallas:
+        return a @ b
+    from repro.kernels import ops                   # lazy: kernels optional
+    if b.ndim == 1:                                 # matvec through the MXU
+        return ops.gemm(a, b[:, None], plan=res.gemm_plan, use_pallas=True,
+                        interpret=interpret)[:, 0]
+    return ops.gemm(a, b, plan=res.gemm_plan, use_pallas=True,
+                    interpret=interpret)
+
+
+def dispatch(op: str, *args, policy: Optional[str] = None,
+             use_kernel: Optional[bool] = None, interpret: bool = True,
+             registry: Optional[Registry] = None, **kw):
+    """One entry point for every BLAS-3 / blocked-LAPACK kernel call.
+
+    dispatch("gemm", a, b)             -> a @ b (by policy)
+    dispatch("syrk", a, trans=False)   -> a a^T / a^T a (by policy)
+    dispatch("gemv", a, x, trans=...)  -> op(a) x (by policy)
+    dispatch("trsm", a, b, lower=..., unit_diag=..., left=..., block=...)
+
+    alpha/beta epilogues stay in :mod:`repro.blas`; this layer only
+    resolves and runs the kernel-shaped core of each op.
+    """
+    if op == "gemm":
+        a, b = args
+        n_out = b.shape[1] if b.ndim == 2 else 1
+        res = resolve("gemm", (a.shape[0], n_out, a.shape[1]), a.dtype,
+                      policy, use_kernel, registry)
+        return _gemm_exec(a, b, res, interpret)
+    if op == "syrk":
+        (a,) = args
+        trans = kw.pop("trans", False)
+        op_a = a.T if trans else a
+        res = resolve("syrk", (op_a.shape[0], op_a.shape[0], op_a.shape[1]),
+                      a.dtype, policy, use_kernel, registry)
+        return _gemm_exec(op_a, op_a.T, res, interpret)
+    if op == "gemv":
+        a, x = args
+        trans = kw.pop("trans", False)
+        op_a = a.T if trans else a
+        res = resolve("gemv", op_a.shape, a.dtype, policy, use_kernel,
+                      registry)
+        if not res.use_pallas:
+            return op_a @ x
+        return _gemm_exec(op_a, x[:, None], res, interpret)[:, 0]
+    if op == "trsm":
+        a, b = args
+        from repro.blas import level3               # lazy: avoid import cycle
+        return level3.dtrsm(a, b, policy=policy, use_kernel=use_kernel,
+                            interpret=interpret, registry=registry, **kw)
+    raise ValueError(f"unknown op {op!r}; expected one of {OPS}")

@@ -1,0 +1,60 @@
+"""Dispatch policies and the deprecated ``use_kernel`` alias.
+
+``"reference"`` - plain jnp, the oracle path (old ``use_kernel=False``).
+``"model"``     - Pallas kernel, analytically planned config (old
+                  ``use_kernel=True``).
+``"tuned"``     - Pallas kernel, measured config from the registry; cold
+                  start falls back to the ``model`` resolution.
+"""
+from __future__ import annotations
+
+import os
+import warnings
+from typing import Optional
+
+POLICIES = ("reference", "model", "tuned")
+
+# policies whose execution path is the Pallas kernel
+KERNEL_POLICIES = ("model", "tuned")
+
+_ENV_POLICY = "REPRO_TUNE_POLICY"
+_warned_use_kernel = False
+
+
+def default_policy() -> str:
+    """Process-wide default policy (env ``REPRO_TUNE_POLICY``, else
+    ``"reference"`` - the conservative oracle path)."""
+    pol = os.environ.get(_ENV_POLICY, "reference")
+    if pol not in POLICIES:
+        raise ValueError(
+            f"{_ENV_POLICY}={pol!r} is not one of {POLICIES}")
+    return pol
+
+
+def resolve_policy(policy: Optional[str] = None,
+                   use_kernel: Optional[bool] = None) -> str:
+    """Collapse (policy, deprecated use_kernel) into one policy string.
+
+    An explicit ``policy`` always wins. ``use_kernel`` maps True ->
+    ``"model"`` and False -> ``"reference"`` (its exact pre-tuner
+    semantics). With neither given, :func:`default_policy` applies.
+    """
+    global _warned_use_kernel
+    if policy is not None:
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; expected one of "
+                             f"{POLICIES}")
+        return policy
+    if use_kernel is not None:
+        if not _warned_use_kernel:
+            warnings.warn(
+                "use_kernel is deprecated; pass policy='model' (True) or "
+                "policy='reference' (False) instead", DeprecationWarning,
+                stacklevel=3)
+            _warned_use_kernel = True
+        return "model" if use_kernel else "reference"
+    return default_policy()
+
+
+def uses_kernel(policy: str) -> bool:
+    return policy in KERNEL_POLICIES

@@ -1,0 +1,200 @@
+"""Measured config sweeps, seeded by the analytical model - not brute force.
+
+Candidate generation asks :mod:`repro.core.codesign` for the model's own
+pick plus its VMEM-feasible neighbors, then *ranks* them with the same two
+models the rest of the repo is built on:
+
+* :mod:`repro.core.roofline` terms - a candidate's achievable FLOP rate is
+  ``min(PEAK, arithmetic_intensity * HBM_BW)`` at its tiling;
+* :mod:`repro.core.pipeline_model` eq. 2 - the HBM->VMEM grid is a software
+  pipeline whose "instructions" are grid steps and whose hazards are the
+  K-carried accumulator dependencies, so ``tpi(p, n_i, n_h, ...)`` prices
+  the per-step overhead (fill never amortized on short grids, fig. 2).
+
+Only the ``top_k`` model-ranked candidates are actually measured (wall
+time of the jitted kernel, interpret mode on CPU), and the measured winner
+is recorded in the registry. This is the ELAPS loop: model proposes,
+measurement disposes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline_model
+from repro.core.codesign import (GemmPlan, HBM_BW, PEAK_BF16_FLOPS,
+                                 PIPELINE_FILL_S, VMEM_BYTES, plan_from_blocks,
+                                 plan_gemm, plan_trsm)
+from repro.tune.registry import KernelConfig, Registry, default_registry
+
+_GEMM_BLOCK_GRID = (128, 256, 512)
+
+
+def model_score(plan: GemmPlan, m: int, n: int, k: int,
+                dtype_bytes: int) -> float:
+    """Modeled seconds for one GEMM at this tiling (lower is better)."""
+    flops = 2.0 * m * n * k
+    roofline_rate = min(PEAK_BF16_FLOPS, plan.arithmetic_intensity * HBM_BW)
+    compute_s = flops / roofline_rate
+    # grid pipeline through eq. 2: steps are instructions, the K-carried
+    # accumulator dependence is the hazard, DMA time is the logic delay,
+    # per-step launch overhead is the latch overhead. Depth 2 = the kernel's
+    # double buffering.
+    g0, g1, g2 = plan.grid
+    steps = max(g0 * g1 * g2, 1)
+    hazards = g0 * g1 * max(g2 - 1, 0)
+    t_dma = (plan.bm * plan.bk + plan.bk * plan.bn) * dtype_bytes / HBM_BW
+    per_step = float(pipeline_model.tpi(
+        2.0, n_i=float(steps), n_h=float(hazards), gamma=0.5, t_p=t_dma,
+        t_o=PIPELINE_FILL_S))
+    return max(compute_s, per_step * steps)
+
+
+def gemm_candidates(m: int, n: int, k: int, dtype_bytes: int = 4,
+                    max_candidates: int = 8,
+                    vmem_budget: int = VMEM_BYTES) -> List[GemmPlan]:
+    """Model pick first, then its VMEM-feasible neighbors, ranked by
+    :func:`model_score`. Never empty."""
+    seed = plan_gemm(m, n, k, dtype_bytes=dtype_bytes)
+    seen = {(seed.bm, seed.bn, seed.bk)}
+    cands = [seed]
+    for bm in _GEMM_BLOCK_GRID:
+        for bn in _GEMM_BLOCK_GRID:
+            for bk in _GEMM_BLOCK_GRID:
+                p = plan_from_blocks(m, n, k, bm, bn, bk,
+                                     dtype_bytes=dtype_bytes)
+                key = (p.bm, p.bn, p.bk)
+                if key in seen or p.vmem_bytes > vmem_budget:
+                    continue
+                seen.add(key)
+                cands.append(p)
+    ranked = sorted(cands, key=lambda p: model_score(p, m, n, k, dtype_bytes))
+    # the model seed always survives the cut (it is the fallback config)
+    top = ranked[:max_candidates]
+    if seed not in top:
+        top[-1] = seed
+    return top
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Trajectory record of one tuned op: every measured candidate plus the
+    winner that went into the registry."""
+
+    op: str
+    shape: Tuple[int, ...]
+    dtype: str
+    backend: str
+    measured: Tuple[dict, ...]          # [{params..., seconds}] model order
+    best: KernelConfig
+    model_params: dict                  # what the model alone would pick
+
+    def to_json(self) -> dict:
+        return {"op": self.op, "shape": list(self.shape), "dtype": self.dtype,
+                "backend": self.backend, "measured": list(self.measured),
+                "best": self.best.to_json(), "model_params": self.model_params}
+
+
+def measure_wall_time(f, *args, reps: int = 2) -> float:
+    """Compile/warm once, then average ``reps`` timed calls. The one
+    wall-clock helper shared by the sweeps and the benchmark drivers."""
+    jax.block_until_ready(f(*args))                 # compile / warm up
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / max(reps, 1)
+
+
+_timeit = measure_wall_time
+
+
+def tune_gemm(m: int, n: int, k: int, dtype=jnp.float32,
+              registry: Optional[Registry] = None, top_k: int = 3,
+              reps: int = 2, interpret: Optional[bool] = None,
+              seed: int = 0) -> SweepResult:
+    """Sweep Pallas GEMM block shapes for one (m, n, k, dtype); record the
+    measured winner in the registry keyed by the shape bucket."""
+    from repro.kernels import ops                   # lazy: kernels optional
+    reg = registry if registry is not None else default_registry()
+    backend = jax.default_backend()
+    interp = (backend != "tpu") if interpret is None else interpret
+    dtype = jnp.dtype(dtype)
+    model_pick = plan_gemm(m, n, k, dtype_bytes=dtype.itemsize)
+    cands = gemm_candidates(m, n, k, dtype_bytes=dtype.itemsize,
+                            max_candidates=max(top_k, 1))
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)).astype(dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32)).astype(dtype)
+    measured = []
+    best_i, best_t = 0, None
+    for i, plan in enumerate(cands):
+        f = jax.jit(lambda x, y, p=plan: ops.gemm(
+            x, y, plan=p, use_pallas=True, interpret=interp))
+        t = _timeit(f, a, b, reps=reps)
+        measured.append({"bm": plan.bm, "bn": plan.bn, "bk": plan.bk,
+                         "seconds": t,
+                         "model_s": model_score(plan, m, n, k, dtype.itemsize)})
+        if best_t is None or t < best_t:
+            best_i, best_t = i, t
+    win = cands[best_i]
+    cfg = reg.record("gemm", (m, n, k), dtype, backend,
+                     {"bm": win.bm, "bn": win.bn, "bk": win.bk},
+                     source="sweep", measured_s=best_t)
+    return SweepResult("gemm", (m, n, k), dtype.name, backend,
+                       tuple(measured), cfg,
+                       {"bm": model_pick.bm, "bn": model_pick.bn,
+                        "bk": model_pick.bk})
+
+
+def trsm_candidates(n: int, nrhs: int, dtype_bytes: int = 4,
+                    blocks: Sequence[int] = (16, 32, 64, 128)) -> List[int]:
+    """Model pick first, then the remaining distinct feasible widths."""
+    seedb = plan_trsm(n, nrhs, dtype_bytes=dtype_bytes).block
+    out = [seedb]
+    for b in blocks:
+        b_ = min(int(b), max(int(n), 1))
+        if b_ not in out:
+            out.append(b_)
+    return out
+
+
+def tune_trsm(n: int, nrhs: int = 8, dtype=jnp.float32,
+              registry: Optional[Registry] = None, reps: int = 2,
+              blocks: Sequence[int] = (16, 32, 64, 128),
+              seed: int = 0) -> SweepResult:
+    """Sweep the blocked-TRSM diagonal width; record the measured winner.
+
+    Measured on the reference inner-GEMM path (the block trade-off - serial
+    substitution vs trailing update - is the same on both paths, and the
+    interpret-mode kernel would drown it in emulation overhead on CPU).
+    """
+    from repro.blas import level3                   # lazy: avoid import cycle
+    reg = registry if registry is not None else default_registry()
+    backend = jax.default_backend()
+    dtype = jnp.dtype(dtype)
+    rng = np.random.default_rng(seed)
+    t_np = np.tril(rng.normal(size=(n, n))).astype(np.float32) \
+        + 4.0 * np.eye(n, dtype=np.float32)
+    t = jnp.asarray(t_np).astype(dtype)
+    b = jnp.asarray(rng.normal(size=(n, nrhs)).astype(np.float32)).astype(dtype)
+    cands = trsm_candidates(n, nrhs, dtype_bytes=dtype.itemsize, blocks=blocks)
+    measured = []
+    best_i, best_t = 0, None
+    for i, blk in enumerate(cands):
+        f = jax.jit(lambda tt, bb, nb=blk: level3.dtrsm(
+            tt, bb, lower=True, block=nb, policy="reference"))
+        sec = _timeit(f, t, b, reps=reps)
+        measured.append({"block": blk, "seconds": sec})
+        if best_t is None or sec < best_t:
+            best_i, best_t = i, sec
+    cfg = reg.record("trsm", (n, nrhs), dtype, backend,
+                     {"block": cands[best_i]}, source="sweep",
+                     measured_s=best_t)
+    return SweepResult("trsm", (n, nrhs), dtype.name, backend,
+                       tuple(measured), cfg, {"block": cands[0]})

@@ -18,6 +18,7 @@ MODULES = [
     ("blas", "benchmarks.bench_blas"),                    # substrate perf
     ("lapack_batched", "benchmarks.bench_lapack_batched"),  # batched sweep
     ("tune", "benchmarks.bench_tune"),                    # tuner sweep -> registry
+    ("distributed_blas", "benchmarks.bench_distributed_blas"),  # mesh sweep
     ("census", "benchmarks.bench_census"),                # section 4 on zoo
     ("roofline", "benchmarks.bench_roofline"),            # dry-run reader
 ]

@@ -35,5 +35,34 @@ with tempfile.TemporaryDirectory() as d:
 print("tuner smoke OK: sweep -> save -> reload -> registry hit")
 PY
 
+echo "== docs reference check (stale paths must fail) =="
+python - <<'PY'
+import os, re, sys
+
+docs = ["README.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir("docs") if f.endswith(".md"))
+# every source-tree path or benchmark module a doc names must exist
+pat = re.compile(r"(?:src/repro/[\w/.-]+\.py|benchmarks/(?:bench_[\w]+|run)\.py"
+                 r"|tests/[\w]+\.py|scripts/[\w]+\.(?:sh|py)|examples/[\w]+\.py"
+                 r"|docs/[\w]+\.md)")
+stale = []
+for doc in docs:
+    with open(doc) as f:
+        text = f.read()
+    for ref in sorted(set(pat.findall(text))):
+        if not os.path.exists(ref):
+            stale.append(f"{doc}: {ref}")
+if stale:
+    print("stale documentation references:\n  " + "\n  ".join(stale))
+    sys.exit(1)
+print(f"docs reference check OK ({len(docs)} docs scanned)")
+PY
+
+echo "== distributed BLAS/LAPACK tests (8 forced host devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q tests/test_distributed_blas.py
+
 echo "== tier-1 suite =="
-python -m pytest -x -q "$@"
+# the distributed module just ran above; skip it here so CI does not pay
+# its 8-device subprocess bodies twice
+python -m pytest -x -q --ignore=tests/test_distributed_blas.py "$@"

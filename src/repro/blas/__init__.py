@@ -2,3 +2,5 @@ from repro.blas import level1, level2, level3
 from repro.blas.level1 import daxpy, ddot, dnrm2, dscal, idamax
 from repro.blas.level2 import dgemv, dger, dtrsv
 from repro.blas.level3 import dgemm, dsyrk, dtrsm
+from repro.blas import distributed
+from repro.blas.distributed import make_blas_mesh, mesh_key, pdgemm, pdtrsm

@@ -17,7 +17,31 @@ def dgemv(a: jnp.ndarray, x: jnp.ndarray, beta=0.0, y=None,
           alpha=1.0, trans: bool = False, policy: Optional[str] = None,
           use_kernel: Optional[bool] = None, interpret: bool = True,
           registry=None) -> jnp.ndarray:
-    """y <- alpha*op(A) x + beta*y."""
+    """y <- alpha*op(A) x + beta*y (BLAS DGEMV).
+
+    Parameters
+    ----------
+    a : (m, n) matrix; x : (n,) vector ((m,) when ``trans``). Any float
+        dtype (float32/float64; bfloat16 storage).
+    trans : bool
+        op(A) = A^T when True (BLAS TRANS flag).
+    y : (m,) accumuland for the ``beta`` epilogue, optional.
+    policy : {"reference", "model", "tuned"}, optional
+        ``reference`` is plain jnp; ``model``/``tuned`` run op(A) x
+        through the Pallas GEMM kernel as an (m, n) x (n, 1) product, so
+        Level-2 configs share the gemm registry entries. ``use_kernel``
+        is the deprecated boolean alias (True == "model").
+
+    Returns
+    -------
+    jnp.ndarray, shape (m,) ((n,) when ``trans``).
+
+    Notes
+    -----
+    Oracle: ``tests/test_differential_blas.py`` (vs NumPy matvec over a
+    shape x dtype x trans grid); per-policy agreement in
+    ``tests/test_tune.py``.
+    """
     from repro.tune import dispatch as _tune
     ax = _tune.dispatch("gemv", a, x, trans=trans, policy=policy,
                         use_kernel=use_kernel, interpret=interpret,
@@ -29,7 +53,17 @@ def dgemv(a: jnp.ndarray, x: jnp.ndarray, beta=0.0, y=None,
 
 
 def dger(alpha, x: jnp.ndarray, y: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
-    """A <- alpha * x y^T + A (rank-1 update)."""
+    """A <- alpha * x y^T + A (BLAS DGER rank-1 update).
+
+    Parameters
+    ----------
+    x : (m,); y : (n,); a : (m, n), all the same float dtype.
+
+    Returns
+    -------
+    (m, n) updated matrix. Pure jnp (no policy - the update is a single
+    fused outer product). Oracle: ``tests/test_differential_blas.py``.
+    """
     return a + alpha * jnp.outer(x, y)
 
 
@@ -40,6 +74,24 @@ def dtrsv(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
     The sequential dependence (x_i needs all earlier x_j) is the paper's
     divider-pipe hazard chain: one divide per row, each waiting on the
     previous row's substitution.
+
+    Parameters
+    ----------
+    a : (n, n) triangular matrix (only the referenced triangle is read);
+        b : (n,) or (n, k) RHS. Any float dtype.
+    lower : solve the lower (True) or upper (False) triangle.
+    unit_diag : assume unit diagonal (LAPACK DIAG="U"); diagonal entries
+        are never read when True.
+
+    Returns
+    -------
+    x with b's shape. Pure jnp scan - no policy; the blocked,
+    policy-dispatched form is :func:`repro.blas.level3.dtrsm`.
+
+    Notes
+    -----
+    Oracle: ``tests/test_differential_blas.py`` (vs
+    ``scipy.linalg.solve_triangular``).
     """
     n = a.shape[0]
     order = jnp.arange(n) if lower else jnp.arange(n - 1, -1, -1)

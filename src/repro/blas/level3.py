@@ -22,7 +22,35 @@ def dgemm(a: jnp.ndarray, b: jnp.ndarray, c: Optional[jnp.ndarray] = None,
           alpha=1.0, beta=0.0, transa: bool = False, transb: bool = False,
           policy: Optional[str] = None, use_kernel: Optional[bool] = None,
           interpret: bool = True, registry=None) -> jnp.ndarray:
-    """C <- alpha * op(A) op(B) + beta * C."""
+    """C <- alpha * op(A) op(B) + beta * C (BLAS DGEMM).
+
+    Parameters
+    ----------
+    a, b : matrices with op(A) (m, k) and op(B) (k, n); ``transa`` /
+        ``transb`` are the BLAS transpose flags. Any float dtype
+        (float32/float64; bfloat16 storage, fp32 accumulation in the
+        kernel).
+    c : (m, n) accumuland for the ``beta`` epilogue, optional.
+    policy : {"reference", "model", "tuned"}, optional
+        ``reference`` = plain jnp (the oracle path); ``model`` = Pallas
+        MXU kernel at the :func:`repro.core.codesign.plan_gemm` tiling;
+        ``tuned`` = the registry's measured config, cold-starting to
+        ``model``. ``use_kernel`` is the deprecated alias
+        (True == "model", False == "reference").
+    interpret : run Pallas in interpret mode (required on CPU).
+
+    Returns
+    -------
+    jnp.ndarray, shape (m, n).
+
+    Notes
+    -----
+    This is the hot path the whole stack funnels into - every LAPACK
+    trailing update and the distributed SUMMA panels execute here.
+    Oracle: ``tests/test_differential_blas.py`` (shape x dtype x
+    transpose grid vs NumPy); per-policy agreement in
+    ``tests/test_tune.py``.
+    """
     from repro.tune import dispatch as _tune
     op_a = a.T if transa else a
     op_b = b.T if transb else b
@@ -39,11 +67,28 @@ def dsyrk(a: jnp.ndarray, c: Optional[jnp.ndarray] = None, alpha=1.0,
           beta=0.0, lower: bool = True, trans: bool = False,
           policy: Optional[str] = None, use_kernel: Optional[bool] = None,
           interpret: bool = True, registry=None) -> jnp.ndarray:
-    """C <- alpha op(A) op(A)^T + beta C, triangular part referenced.
+    """C <- alpha op(A) op(A)^T + beta C (BLAS DSYRK), symmetric output.
 
-    ``trans`` mirrors ``dgemm``'s transpose flags (BLAS TRANS: False is
-    A A^T, True is A^T A); the product runs through the same ``dgemm``
-    kernel path, so SYRK reaches Pallas under the kernel policies.
+    Parameters
+    ----------
+    a : (n, k) matrix ((k, n) when ``trans``); any float dtype.
+    trans : BLAS TRANS flag - False computes A A^T, True A^T A.
+    lower : which triangle of C is authoritative; the other is mirrored.
+    c : (n, n) accumuland, optional.
+    policy : {"reference", "model", "tuned"}, optional
+        The product runs through the same ``dgemm`` kernel path (SYRK
+        shares the gemm registry entries), so SYRK reaches Pallas under
+        the kernel policies; ``use_kernel`` deprecated alias as in
+        :func:`dgemm`.
+
+    Returns
+    -------
+    (n, n) symmetric matrix.
+
+    Notes
+    -----
+    Oracle: ``tests/test_differential_blas.py``; per-policy agreement in
+    ``tests/test_tune.py``.
     """
     from repro.tune import dispatch as _tune
     full = alpha * _tune.dispatch("syrk", a, trans=trans, policy=policy,
@@ -67,9 +112,31 @@ def dtrsm(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
     Diagonal blocks use the sequential substitution scan (the serial
     divider chain); off-diagonal updates are GEMMs - the paper's
     panel/trailing structure in miniature - and follow the policy onto the
-    Pallas path. ``block=None`` resolves the diagonal width through
-    :func:`repro.tune.dispatch.resolve` (64 under ``reference`` - the
-    historical default - else the ``plan_trsm`` model or the registry).
+    Pallas path.
+
+    Parameters
+    ----------
+    a : (n, n) triangular matrix; b : (n, k) or (n,) RHS ((m, n) layouts
+        transposed internally when ``left=False``). Any float dtype.
+    lower, unit_diag : LAPACK UPLO/DIAG flags.
+    left : solve op(T) X = B (True) or X op(T) = B (False).
+    block : diagonal-block width; ``None`` resolves it through
+        :func:`repro.tune.dispatch.resolve` (64 under ``reference`` - the
+        historical default - else the ``plan_trsm`` model or the
+        registry's measured width).
+    policy : {"reference", "model", "tuned"}, optional
+        Applies to the off-diagonal GEMM updates (the substitution scan
+        itself has no kernel form); ``use_kernel`` deprecated alias.
+
+    Returns
+    -------
+    X with b's shape.
+
+    Notes
+    -----
+    Oracle: ``tests/test_differential_blas.py`` (vs
+    ``scipy.linalg.solve_triangular`` over lower/upper x unit/non-unit);
+    per-policy agreement in ``tests/test_tune.py``.
     """
     if not left:
         # X T = B  <=>  T^T X^T = B^T

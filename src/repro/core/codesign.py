@@ -172,6 +172,72 @@ def plan_from_blocks(m: int, n: int, k: int, bm: int, bn: int, bk: int,
                     grid, vmem, ai)
 
 
+# ----------------------------- distributed GEMM ----------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PdgemmPlan:
+    """SUMMA pdgemm schedule on a (px, py) mesh: per-step local tiling plus
+    the roofline extended with a per-hop collective term.
+
+    The mesh is the paper's 'more parallel accumulators' applied across
+    devices: the global K reduction is split into ``steps`` panel updates,
+    each a local GEMM (``local`` - planned exactly like the single-device
+    kernel) fed by ring broadcasts whose per-hop bytes are priced against
+    the inter-chip link, the way :mod:`repro.core.roofline` prices
+    collective bytes against ``ICI_BW``.
+    """
+
+    px: int
+    py: int
+    steps: int                    # SUMMA panel steps = px * py
+    k_fine: int                   # k-panel width per step
+    local: GemmPlan               # tiling of one local panel update
+    compute_s: float              # per-device GEMM flops under the roofline
+    collective_s: float           # per-device ring-broadcast bytes / ICI_BW
+    collective_bytes: int         # on-wire bytes per device, all steps
+
+    @property
+    def modeled_time(self) -> float:
+        return max(self.compute_s, self.collective_s)
+
+    @property
+    def collective_bound(self) -> bool:
+        return self.collective_s > self.compute_s
+
+
+def plan_pdgemm(m: int, n: int, k: int, px: int, py: int,
+                dtype_bytes: int = 4) -> PdgemmPlan:
+    """Plan the SUMMA ``pdgemm`` on a (px, py) mesh.
+
+    Per step (one of ``px * py`` fine k-panels) each device receives an
+    A-panel over a ``py``-ring and a B-panel over a ``px``-ring
+    (:func:`repro.distributed.collectives.ring_bcast`), then runs a local
+    ``(m/px, k_fine) @ (k_fine, n/py)`` update on the Pallas path. The
+    collective term sums the per-hop bytes of both rings
+    (``ring_bcast_bytes``) over all steps against ``ICI_BW``; the compute
+    term is the local flops under the single-device roofline at the
+    ``local`` tiling. ``modeled_time`` is their max (overlap assumed), so
+    the plan exposes where the mesh stops paying - the cross-device
+    analogue of fig. 2's pipeline-fill saturation.
+    """
+    from repro.distributed.collectives import ring_bcast_bytes
+    px, py = max(int(px), 1), max(int(py), 1)
+    steps = px * py
+    m_l = -(-max(m, 1) // px)
+    n_l = -(-max(n, 1) // py)
+    k_f = max(-(-max(k, 1) // steps), 1)
+    local = plan_gemm(m_l, n_l, k_f, dtype_bytes=dtype_bytes)
+    flops = 2.0 * m_l * n_l * k_f * steps
+    rate = min(PEAK_BF16_FLOPS, local.arithmetic_intensity * HBM_BW)
+    compute_s = flops / rate + steps * PIPELINE_FILL_S
+    a_panel = m_l * k_f * dtype_bytes
+    b_panel = k_f * n_l * dtype_bytes
+    coll_bytes = steps * (ring_bcast_bytes(a_panel, py)
+                          + ring_bcast_bytes(b_panel, px))
+    return PdgemmPlan(px, py, steps, k_f, local, compute_s,
+                      coll_bytes / ICI_BW, coll_bytes)
+
+
 # ------------------------- blocked-factorization plans ----------------------
 # Serial-chain cycles exposed per panel column: the paper's section-4.2
 # hazard profile per routine (DEFAULT_DEPTHS in core.pe: div 12, sqrt 14).

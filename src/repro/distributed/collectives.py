@@ -30,6 +30,42 @@ from jax.experimental.shard_map import shard_map
 Q_BLOCK = 256
 
 
+# ---------------------------------------------------------------------------
+# ring broadcast: the SUMMA panel-movement primitive
+# ---------------------------------------------------------------------------
+
+def ring_bcast(val: jnp.ndarray, axis_name: str, size: int,
+               src: int) -> jnp.ndarray:
+    """Broadcast ``val`` from mesh index ``src`` along ``axis_name`` via a
+    ring of ``size - 1`` :func:`jax.lax.ppermute` hops. Call inside
+    shard_map.
+
+    Each hop forwards the buffer one position around the ring; a device
+    adopts the incoming value exactly when it is ``src``'s (step-th)
+    successor, so after ``size - 1`` hops every participant holds ``src``'s
+    panel. This is the pipelined alternative to a masked psum broadcast:
+    hop ``t`` of panel ``s`` can overlap the local GEMM of panel ``s - 1``,
+    and each hop moves only ``val.nbytes`` per link (see
+    :func:`ring_bcast_bytes` - the accounting that
+    :func:`repro.core.codesign.plan_pdgemm` prices).
+    """
+    if size <= 1:
+        return val
+    idx = lax.axis_index(axis_name)
+    perm = [((d - 1) % size, d) for d in range(size)]
+    buf = val
+    for step in range(size - 1):
+        nxt = lax.ppermute(buf, axis_name, perm)
+        buf = jnp.where(idx == (src + step + 1) % size, nxt, buf)
+    return buf
+
+
+def ring_bcast_bytes(panel_bytes: int, size: int) -> int:
+    """On-wire bytes per participating link for one ring broadcast: the
+    panel crosses ``size - 1`` hops, each carrying the full panel."""
+    return int(panel_bytes) * max(int(size) - 1, 0)
+
+
 def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     flat = x.reshape(-1)
     pad = (-flat.size) % Q_BLOCK

@@ -6,3 +6,4 @@ from repro.lapack.cholesky import potrf, potrf_unblocked
 from repro.lapack.lu import getrf, getrf_unblocked, lu_reconstruct
 from repro.lapack.qr import geqrf, geqrf_unblocked, q_from_geqrf
 from repro.lapack.solve import gesv, lstsq_qr
+from repro.lapack import distributed

@@ -63,7 +63,15 @@ def batched_potrf(a: jnp.ndarray, block: Optional[int] = None,
                   policy: Optional[str] = None,
                   use_kernel: Optional[bool] = None,
                   interpret: bool = True) -> FactorizationResult:
-    """Cholesky of a (B, n, n) SPD batch; factors holds L (lower)."""
+    """Cholesky of a (B, n, n) SPD batch; factors holds L (lower).
+
+    float32/float64 (NaNs per non-SPD item, LAPACK-style). ``policy``
+    threads to every trailing update via :mod:`repro.tune.dispatch`
+    (``use_kernel`` deprecated alias); ``block=None`` takes the
+    ``plan_factorization`` model pick. Oracle:
+    ``tests/test_lapack_batched.py`` (round-trip + kernel-path-identical);
+    mesh-parallel form: :func:`repro.lapack.distributed.batched_potrf`.
+    """
     assert a.ndim == 3 and a.shape[1] == a.shape[2], a.shape
     pol = resolve_policy(policy, use_kernel)
     nb = _resolve_block(a.shape[1], block, "potrf")
@@ -76,7 +84,14 @@ def batched_getrf(a: jnp.ndarray, block: Optional[int] = None,
                   policy: Optional[str] = None,
                   use_kernel: Optional[bool] = None,
                   interpret: bool = True) -> FactorizationResult:
-    """LU with partial pivoting of a (B, m, n) batch."""
+    """LU with partial pivoting of a (B, m, n) batch.
+
+    Returns packed L\\U factors + (B, min(m, n)) int32 ipiv. Same
+    policy/block contract as :func:`batched_potrf`. Oracle:
+    ``tests/test_lapack_batched.py`` (incl. non-square and
+    ill-conditioned); mesh-parallel form:
+    :func:`repro.lapack.distributed.batched_getrf`.
+    """
     assert a.ndim == 3, a.shape
     pol = resolve_policy(policy, use_kernel)
     nb = _resolve_block(min(a.shape[1], a.shape[2]), block, "getrf")
@@ -90,7 +105,12 @@ def batched_geqrf(a: jnp.ndarray, block: Optional[int] = None,
                   policy: Optional[str] = None,
                   use_kernel: Optional[bool] = None,
                   interpret: bool = True) -> FactorizationResult:
-    """Householder QR of a (B, m, n) batch."""
+    """Householder QR of a (B, m, n) batch (packed R/V + tau per item).
+
+    Same policy/block contract as :func:`batched_potrf`. Oracle:
+    ``tests/test_lapack_batched.py``; mesh-parallel form:
+    :func:`repro.lapack.distributed.batched_geqrf`.
+    """
     assert a.ndim == 3, a.shape
     pol = resolve_policy(policy, use_kernel)
     nb = _resolve_block(min(a.shape[1], a.shape[2]), block, "geqrf")
@@ -108,7 +128,10 @@ def batched_solve(res: FactorizationResult, b: jnp.ndarray,
 
     b: (B, n) or (B, n, k). potrf solves the SPD system L L^T x = b; getrf
     the pivoted L U x = P b; geqrf the least-squares system via
-    R^{-1} Q^T b (m >= n).
+    R^{-1} Q^T b (m >= n). ``policy`` threads to every triangular solve
+    (``use_kernel`` deprecated alias). Oracle:
+    ``tests/test_lapack_batched.py`` (solve residuals per kind);
+    mesh-parallel form: :func:`repro.lapack.distributed.batched_solve`.
     """
     vec = b.ndim == 2
     rhs = b[:, :, None] if vec else b

@@ -25,8 +25,23 @@ def default_block(n: int, kind: str) -> int:
 
 
 def potrf_unblocked(a: jnp.ndarray) -> jnp.ndarray:
-    """Lower-triangular Cholesky; the serial sqrt-then-div chain per column
-    is the paper's dpotrf hazard profile."""
+    """Lower-triangular Cholesky of one SPD matrix, unblocked.
+
+    Parameters
+    ----------
+    a : (n, n) SPD matrix (float32/float64). Non-SPD input produces NaNs,
+        LAPACK-style - no error is raised.
+
+    Returns
+    -------
+    (n, n) lower-triangular L with A = L L^T.
+
+    Notes
+    -----
+    The serial sqrt-then-div chain per column is the paper's dpotrf
+    hazard profile. Oracle: ``tests/test_lapack.py`` (vs
+    ``np.linalg.cholesky``).
+    """
     n = a.shape[0]
     rows = jnp.arange(n)
 
@@ -47,7 +62,30 @@ def potrf_unblocked(a: jnp.ndarray) -> jnp.ndarray:
 def potrf(a: jnp.ndarray, block: Optional[int] = None,
           policy: Optional[str] = None, use_kernel: Optional[bool] = None,
           interpret: bool = True) -> jnp.ndarray:
-    """Blocked right-looking POTRF: panel = hazards, trailing = GEMM."""
+    """Blocked right-looking POTRF: panel = hazards, trailing = GEMM.
+
+    Parameters
+    ----------
+    a : (n, n) SPD matrix (float32/float64; NaNs on non-SPD input,
+        LAPACK-style).
+    block : panel width NB; ``None`` takes
+        :func:`repro.core.codesign.plan_factorization`'s model pick.
+    policy : {"reference", "model", "tuned"}, optional
+        Every trailing update (panel TRSM + trailing GEMM) dispatches
+        through :mod:`repro.blas.level3`, so the kernel policies put all
+        trailing flops on the Pallas MXU path; ``use_kernel`` is the
+        deprecated alias (True == "model").
+
+    Returns
+    -------
+    (n, n) lower-triangular L with A = L L^T.
+
+    Notes
+    -----
+    Oracle: ``tests/test_lapack.py`` (round-trip vs
+    ``np.linalg.cholesky``); kernel-path agreement in
+    ``tests/test_lapack_batched.py`` and ``tests/test_tune.py``.
+    """
     from repro.tune.policy import resolve_policy
     pol = resolve_policy(policy, use_kernel)
     n = a.shape[0]

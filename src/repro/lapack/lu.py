@@ -16,8 +16,23 @@ from repro.lapack.cholesky import default_block
 
 
 def getrf_unblocked(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (packed LU, piv) - piv[k] is the row swapped into k (LAPACK
-    ipiv, 0-based)."""
+    """Unblocked LU with partial pivoting of one matrix.
+
+    Parameters
+    ----------
+    a : (n, m) matrix (float32/float64); square or rectangular.
+
+    Returns
+    -------
+    (packed, piv)
+        ``packed``: L (unit lower, below diagonal) and U (on/above) in
+        one array; ``piv``: (min(n, m),) int32 - ``piv[k]`` is the row
+        swapped into k (LAPACK ipiv, 0-based).
+
+    Notes
+    -----
+    Oracle: ``tests/test_lapack.py`` (vs ``scipy.linalg.lu_factor``).
+    """
     n = a.shape[0]
     rows = jnp.arange(n)
 
@@ -44,13 +59,31 @@ def getrf_unblocked(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
 def getrf(a: jnp.ndarray, block: Optional[int] = None,
           policy: Optional[str] = None, use_kernel: Optional[bool] = None,
           interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Blocked right-looking LU with partial pivoting.
+    """Blocked right-looking LU with partial pivoting (LAPACK DGETRF).
 
-    Trailing updates (TRSM for U12, GEMM for A22) dispatch through
-    :mod:`repro.blas.level3`, resolved by :mod:`repro.tune.dispatch`:
-    ``policy="model"`` (deprecated ``use_kernel=True``) reaches the Pallas
-    MXU kernel, ``"tuned"`` the registry config. Default block from
-    ``plan_factorization(kind="getrf")``.
+    Parameters
+    ----------
+    a : (m, n) matrix (float32/float64).
+    block : panel width NB; ``None`` takes
+        ``plan_factorization(kind="getrf")``'s model pick.
+    policy : {"reference", "model", "tuned"}, optional
+        Trailing updates (TRSM for U12, GEMM for A22) dispatch through
+        :mod:`repro.blas.level3`, resolved by :mod:`repro.tune.dispatch`:
+        ``"model"`` (deprecated ``use_kernel=True``) reaches the Pallas
+        MXU kernel, ``"tuned"`` the registry config.
+
+    Returns
+    -------
+    (packed, piv)
+        Same packed L\\U + 0-based ipiv contract as
+        :func:`getrf_unblocked`, piv length min(m, n).
+
+    Notes
+    -----
+    Oracle: ``tests/test_lapack.py`` and
+    ``tests/test_lapack_batched.py`` (reconstruction round-trip,
+    non-square and ill-conditioned cases); per-policy agreement in
+    ``tests/test_tune.py``.
     """
     from repro.tune.policy import resolve_policy
     pol = resolve_policy(policy, use_kernel)
@@ -101,7 +134,11 @@ def getrf(a: jnp.ndarray, block: Optional[int] = None,
 
 
 def apply_ipiv(b: jnp.ndarray, piv: jnp.ndarray) -> jnp.ndarray:
-    """Apply the pivot sequence (forward) to rows of b: b <- P b."""
+    """Apply the pivot sequence (forward) to rows of b: b <- P b.
+
+    b : (n,) or (n, k); piv : int32 ipiv from :func:`getrf`. Returns b
+    with its shape. Inverse operation inside :func:`lu_reconstruct`.
+    """
     def body(k, x):
         p = piv[k]
         rk, rp = x[k], x[p]
@@ -110,7 +147,9 @@ def apply_ipiv(b: jnp.ndarray, piv: jnp.ndarray) -> jnp.ndarray:
 
 
 def lu_reconstruct(packed: jnp.ndarray, piv: jnp.ndarray) -> jnp.ndarray:
-    """P^T L U - for testing: should equal the input matrix."""
+    """P^T L U from a packed :func:`getrf` result - the testing oracle:
+    the return value should equal the original input matrix (square
+    packed layout)."""
     n = packed.shape[0]
     l = jnp.tril(packed, -1) + jnp.eye(n, dtype=packed.dtype)
     u = jnp.triu(packed)

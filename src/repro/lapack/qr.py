@@ -46,8 +46,23 @@ def _house_column(a: jnp.ndarray, k: int | jnp.ndarray,
 
 
 def geqrf_unblocked(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """LAPACK-layout QR: returns (packed, tau); R on/above the diagonal,
-    reflector tails below it."""
+    """Unblocked Householder QR in LAPACK packed layout.
+
+    Parameters
+    ----------
+    a : (m, n) matrix (float32/float64), any aspect ratio.
+
+    Returns
+    -------
+    (packed, tau)
+        ``packed``: R on/above the diagonal, reflector tails below;
+        ``tau``: (min(m, n),) reflector scales.
+
+    Notes
+    -----
+    Oracle: ``tests/test_lapack.py`` (Q/R round-trip vs
+    ``np.linalg.qr``).
+    """
     m, n = a.shape
     kmax = min(m, n)
 
@@ -87,13 +102,33 @@ def _larft(v: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
 def geqrf(a: jnp.ndarray, block: Optional[int] = None,
           policy: Optional[str] = None, use_kernel: Optional[bool] = None,
           interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Blocked QR (compact WY). Python loop over static panel boundaries ->
-    still a single jittable computation.
+    """Blocked Householder QR, compact WY (LAPACK DGEQRF).
 
-    The trailing compact-WY triple product is three GEMMs dispatched through
-    :func:`repro.blas.level3.dgemm`, resolved by :mod:`repro.tune.dispatch`
-    (``policy="model"`` - the deprecated ``use_kernel=True`` - is the Pallas
-    MXU kernel); default block from ``plan_factorization(kind="geqrf")``.
+    Python loop over static panel boundaries -> still a single jittable
+    computation.
+
+    Parameters
+    ----------
+    a : (m, n) matrix (float32/float64).
+    block : panel width NB; ``None`` takes
+        ``plan_factorization(kind="geqrf")``'s model pick.
+    policy : {"reference", "model", "tuned"}, optional
+        The trailing compact-WY triple product is three GEMMs dispatched
+        through :func:`repro.blas.level3.dgemm`, resolved by
+        :mod:`repro.tune.dispatch` (``"model"`` - the deprecated
+        ``use_kernel=True`` - is the Pallas MXU kernel, ``"tuned"`` the
+        registry config).
+
+    Returns
+    -------
+    (packed, tau)
+        Same LAPACK packed contract as :func:`geqrf_unblocked`.
+
+    Notes
+    -----
+    Oracle: ``tests/test_lapack.py`` and ``tests/test_lapack_batched.py``
+    (round-trip incl. tall and ill-conditioned inputs); per-policy
+    agreement in ``tests/test_tune.py``.
     """
     from repro.tune.policy import resolve_policy
     pol = resolve_policy(policy, use_kernel)
@@ -142,7 +177,10 @@ def geqrf(a: jnp.ndarray, block: Optional[int] = None,
 
 
 def q_from_geqrf(packed: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
-    """Accumulate the full Q (m x m) from the packed form."""
+    """Accumulate the full (m, m) orthogonal Q from a packed
+    :func:`geqrf` result (LAPACK DORGQR, applied in reverse reflector
+    order). Oracle: ``tests/test_lapack.py`` (orthogonality +
+    round-trip)."""
     m = packed.shape[0]
     kmax = tau.shape[0]
     rows = jnp.arange(m)
@@ -161,7 +199,9 @@ def q_from_geqrf(packed: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
 def qr(a: jnp.ndarray, block: Optional[int] = None,
        policy: Optional[str] = None, use_kernel: Optional[bool] = None,
        interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Convenience (Q, R) form."""
+    """Convenience thin-QR: returns (Q (m, min(m,n)), R (min(m,n), n))
+    from :func:`geqrf` + :func:`q_from_geqrf`; same
+    block/policy/``use_kernel`` contract as :func:`geqrf`."""
     packed, tau = geqrf(a, block=block, policy=policy, use_kernel=use_kernel,
                         interpret=interpret)
     q = q_from_geqrf(packed, tau)

@@ -19,7 +19,25 @@ from repro.lapack.qr import geqrf, q_from_geqrf
 def gesv(a: jnp.ndarray, b: jnp.ndarray, block: Optional[int] = None,
          policy: Optional[str] = None, use_kernel: Optional[bool] = None,
          interpret: bool = True) -> jnp.ndarray:
-    """Solve A X = B via LU with partial pivoting + two triangular solves."""
+    """Solve A X = B via LU with partial pivoting (LAPACK DGESV).
+
+    Parameters
+    ----------
+    a : (n, n) matrix (float32/float64); b : (n,) or (n, k) RHS.
+    block : forwarded to :func:`repro.lapack.lu.getrf`.
+    policy : {"reference", "model", "tuned"}, optional
+        Threaded through the factorization and both triangular solves,
+        so the whole solve resolves its kernel configs through
+        :mod:`repro.tune.dispatch`; ``use_kernel`` deprecated alias.
+
+    Returns
+    -------
+    X with b's shape.
+
+    Notes
+    -----
+    Oracle: ``tests/test_lapack.py`` (vs ``np.linalg.solve``).
+    """
     from repro.tune.policy import resolve_policy
     pol = resolve_policy(policy, use_kernel)
     packed, piv = getrf(a, block=block, policy=pol, interpret=interpret)
@@ -35,7 +53,24 @@ def gesv(a: jnp.ndarray, b: jnp.ndarray, block: Optional[int] = None,
 def lstsq_qr(a: jnp.ndarray, b: jnp.ndarray, block: Optional[int] = None,
              policy: Optional[str] = None, use_kernel: Optional[bool] = None,
              interpret: bool = True) -> jnp.ndarray:
-    """Least-squares via QR: x = R^{-1} Q^T b (m >= n, full rank)."""
+    """Least-squares min ||A x - b|| via QR: x = R^{-1} Q^T b.
+
+    Parameters
+    ----------
+    a : (m, n) matrix with m >= n, full column rank (float32/float64);
+        b : (m,) or (m, k) RHS.
+    block, policy : forwarded to :func:`repro.lapack.qr.geqrf` and the
+        final TRSM - same policy semantics as :func:`gesv`.
+
+    Returns
+    -------
+    x, shape (n,) or (n, k).
+
+    Notes
+    -----
+    Oracle: ``tests/test_lapack.py`` (vs ``np.linalg.lstsq`` on
+    overdetermined systems).
+    """
     from repro.tune.policy import resolve_policy
     pol = resolve_policy(policy, use_kernel)
     m, n = a.shape

@@ -52,10 +52,14 @@ One JSON object (schema version 1)::
        "trsm|64x8|float32|cpu": {
           "op": "trsm", "params": {"block": 32}, ...}}}
 
-Keys are ``op|shape-bucket|dtype|backend`` where the shape bucket rounds
-every dimension up to the next power of two, so one sweep covers a
-neighborhood of problem sizes. Lookups go through an in-memory LRU; the
-file is read lazily once and written with :meth:`Registry.save`.
+Keys are ``op|shape-bucket|dtype|backend[|mesh]`` where the shape bucket
+rounds every dimension up to the next power of two, so one sweep covers a
+neighborhood of problem sizes. The optional trailing mesh component scopes
+distributed ops to one device-mesh shape (e.g.
+``"pdgemm|128x128x64|float32|cpu|x2y4"`` for a 2x4 ("x", "y") mesh);
+single-device entries omit it, so pre-mesh registry files keep resolving
+unchanged. Lookups go through an in-memory LRU; the file is read lazily
+once and written with :meth:`Registry.save`.
 
 Regenerating the cache
 ======================

@@ -26,11 +26,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.codesign import (GemmPlan, plan_from_blocks, plan_gemm,
-                                 plan_trsm)
+                                 plan_pdgemm, plan_trsm)
 from repro.tune.policy import resolve_policy, uses_kernel
 from repro.tune.registry import Registry, default_registry
 
-OPS = ("gemm", "gemv", "trsm", "syrk")
+OPS = ("gemm", "gemv", "trsm", "syrk", "pdgemm")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +44,7 @@ class Resolution:
     use_pallas: bool
     gemm_plan: Optional[GemmPlan] = None
     block: Optional[int] = None   # trsm diagonal width
+    mesh: Optional[str] = None    # registry mesh component (pdgemm)
 
     def describe(self) -> dict:
         """JSON-able summary - benchmarks attach this to every record so
@@ -55,24 +56,33 @@ class Resolution:
                            "bk": self.gemm_plan.bk}
         if self.block is not None:
             d.setdefault("config", {})["block"] = self.block
+        if self.mesh is not None:
+            d["mesh"] = self.mesh
         return d
 
 
 def resolve(op: str, shape: Tuple[int, ...], dtype,
             policy: Optional[str] = None, use_kernel: Optional[bool] = None,
             registry: Optional[Registry] = None,
-            backend: Optional[str] = None) -> Resolution:
-    """Resolve one call's config. shape is (m, n, k) for gemm/syrk,
-    (m, n) for gemv, (n, nrhs) for trsm."""
+            backend: Optional[str] = None,
+            mesh: Optional[Tuple[int, int]] = None) -> Resolution:
+    """Resolve one call's config. shape is (m, n, k) for gemm/syrk/pdgemm
+    (pdgemm: the *global* problem), (m, n) for gemv, (n, nrhs) for trsm.
+    ``mesh`` is the (px, py) device mesh for pdgemm; its registry entries
+    live under the mesh-suffixed key ``pdgemm|bucket|dtype|backend|pxXpyY``.
+    """
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
+    if op == "pdgemm" and mesh is None:
+        raise ValueError("pdgemm resolution needs mesh=(px, py)")
+    mesh_str = f"x{mesh[0]}y{mesh[1]}" if (op == "pdgemm" and mesh) else None
     pol = resolve_policy(policy, use_kernel)
     if not uses_kernel(pol):
         if op == "trsm":
             # the reference path still needs a diagonal width; 64 is the
             # historical (pre-tuner) default
             return Resolution(op, pol, "reference", False, block=64)
-        return Resolution(op, pol, "reference", False)
+        return Resolution(op, pol, "reference", False, mesh=mesh_str)
     dtype = jnp.dtype(dtype)
     backend = backend or jax.default_backend()
     cfg = None
@@ -86,8 +96,24 @@ def resolve(op: str, shape: Tuple[int, ...], dtype,
             lookup_op = "gemm"
         elif op == "gemv":
             lookup_op, lookup_shape = "gemm", (shape[0], 1, shape[1])
-        cfg = reg.lookup(lookup_op, lookup_shape, dtype, backend)
+        cfg = reg.lookup(lookup_op, lookup_shape, dtype, backend,
+                         mesh=mesh_str)
         source = "registry" if cfg is not None else "fallback-model"
+    if op == "pdgemm":
+        # the stored/planned config tiles the per-step *local* update
+        # (m/px, k_fine) @ (k_fine, n/py) - see codesign.plan_pdgemm
+        m, n, k = shape
+        px, py = mesh
+        pplan = plan_pdgemm(m, n, k, px, py, dtype_bytes=dtype.itemsize)
+        if cfg is not None:
+            local = plan_from_blocks(
+                -(-max(m, 1) // px), -(-max(n, 1) // py), pplan.k_fine,
+                cfg.params["bm"], cfg.params["bn"], cfg.params["bk"],
+                dtype_bytes=dtype.itemsize)
+        else:
+            local = pplan.local
+        return Resolution(op, pol, source, True, gemm_plan=local,
+                          mesh=mesh_str)
     if op in ("gemm", "syrk"):
         m, n, k = shape
         if cfg is not None:
@@ -164,4 +190,10 @@ def dispatch(op: str, *args, policy: Optional[str] = None,
         from repro.blas import level3               # lazy: avoid import cycle
         return level3.dtrsm(a, b, policy=policy, use_kernel=use_kernel,
                             interpret=interpret, registry=registry, **kw)
+    if op == "pdgemm":
+        a, b = args
+        from repro.blas import distributed          # lazy: avoid import cycle
+        return distributed.pdgemm(a, b, policy=policy, use_kernel=use_kernel,
+                                  interpret=interpret, registry=registry,
+                                  **kw)
     raise ValueError(f"unknown op {op!r}; expected one of {OPS}")

@@ -1,8 +1,9 @@
 """Persistent kernel-config registry with in-memory LRU lookup.
 
 Winning sweep configs are cached as JSON keyed by
-``(op, shape-bucket, dtype, backend)`` (see the package docstring for the
-exact file format). Loading is lazy and *graceful*: a missing, unreadable,
+``(op, shape-bucket, dtype, backend[, mesh])`` (see the package docstring
+for the exact file format; the optional mesh component scopes distributed
+ops to one device-mesh shape). Loading is lazy and *graceful*: a missing, unreadable,
 or schema-incompatible file yields an empty registry - dispatch then falls
 back to the model-predicted plan, so a broken cache can never change
 numerics, only speed.
@@ -57,10 +58,19 @@ def shape_bucket(shape: Sequence[int]) -> Tuple[int, ...]:
     return tuple(out)
 
 
-def make_key(op: str, shape: Sequence[int], dtype, backend: str) -> str:
+def make_key(op: str, shape: Sequence[int], dtype, backend: str,
+             mesh: Optional[str] = None) -> str:
+    """Registry key ``op|shape-bucket|dtype|backend[|mesh]``.
+
+    ``mesh`` is the device-mesh component for distributed ops (e.g.
+    ``"x2y4"`` for a 2x4 ("x", "y") mesh - see
+    :func:`repro.blas.distributed.mesh_key`). Single-device entries omit
+    it, so every pre-mesh registry file keeps resolving unchanged.
+    """
     bucket = "x".join(str(d) for d in shape_bucket(shape))
     import numpy as np
-    return f"{op}|{bucket}|{np.dtype(dtype).name}|{backend}"
+    key = f"{op}|{bucket}|{np.dtype(dtype).name}|{backend}"
+    return key if mesh is None else f"{key}|{mesh}"
 
 
 class Registry:
@@ -128,11 +138,15 @@ class Registry:
 
     # -------------------------------- access --------------------------------
 
-    def lookup(self, op: str, shape: Sequence[int], dtype,
-               backend: str) -> Optional[KernelConfig]:
-        """LRU lookup; None on miss (dispatch falls back to the model)."""
+    def lookup(self, op: str, shape: Sequence[int], dtype, backend: str,
+               mesh: Optional[str] = None) -> Optional[KernelConfig]:
+        """LRU lookup; None on miss (dispatch falls back to the model).
+
+        ``mesh`` scopes the key to one device-mesh shape (distributed ops);
+        ``None`` is the single-device namespace.
+        """
         self._ensure_loaded()
-        key = make_key(op, shape, dtype, backend)
+        key = make_key(op, shape, dtype, backend, mesh)
         cfg = self._entries.get(key)
         if cfg is not None:
             self._entries.move_to_end(key)
@@ -140,9 +154,10 @@ class Registry:
 
     def record(self, op: str, shape: Sequence[int], dtype, backend: str,
                params: Mapping[str, int], source: str = "sweep",
-               measured_s: Optional[float] = None) -> KernelConfig:
+               measured_s: Optional[float] = None,
+               mesh: Optional[str] = None) -> KernelConfig:
         self._ensure_loaded()
-        key = make_key(op, shape, dtype, backend)
+        key = make_key(op, shape, dtype, backend, mesh)
         cfg = KernelConfig(op=op, params={k: int(v) for k, v in params.items()},
                            source=source, measured_s=measured_s)
         self._entries[key] = cfg

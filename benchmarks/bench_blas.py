@@ -1,5 +1,11 @@
 """BLAS/LAPACK substrate micro-benchmarks (CPU wall time + derived Gflop/s)
-and the codesign schedule comparison the paper's section 4 predicts."""
+and the codesign schedule comparison the paper's section 4 predicts.
+
+Calls go through the :mod:`repro.linalg` front-end under one scoped
+ExecutionContext; every JSON row records the dtype and the resolved
+context alongside the kernel-config resolution, so trajectories stay
+comparable as the dispatch surface evolves.
+"""
 from __future__ import annotations
 
 import json
@@ -9,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import blas, lapack, tune
+from repro import lapack, linalg, tune
 from repro.core.codesign import optimal_accumulators
 from repro.tune.search import measure_wall_time
 
@@ -18,48 +24,57 @@ def _timeit(f, *args, reps=5):
     return measure_wall_time(f, *args, reps=reps)
 
 
-def run(emit, policy: str = "reference"):
+def run(emit, policy: str = "reference", dtype=jnp.float32):
     rng = np.random.default_rng(0)
     rows = []
-    n = 512
-    a = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
-    b = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
-    t = _timeit(jax.jit(lambda x, y: blas.dgemm(x, y, policy=policy)), a, b)
-    emit(f"blas,dgemm,{n}", t * 1e6, "us_per_call")
-    emit(f"blas,dgemm,{n}", 2 * n ** 3 / t / 1e9, "gflops")
-    rows.append({"op": "dgemm", "n": n, "seconds_per_call": t,
-                 "resolution": tune.resolve("gemm", (n, n, n), jnp.float32,
-                                            policy=policy).describe()})
+    dtype = jnp.dtype(dtype)
+    with linalg.use(policy=policy) as ctx:
+        ctx_desc = ctx.describe()
+        n = 512
+        a = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32)).astype(dtype)
+        b = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32)).astype(dtype)
+        t = _timeit(jax.jit(lambda x, y: linalg.gemm(x, y)), a, b)
+        emit(f"blas,gemm,{n}", t * 1e6, "us_per_call")
+        emit(f"blas,gemm,{n}", 2 * n ** 3 / t / 1e9, "gflops")
+        rows.append({"op": "gemm", "n": n, "dtype": dtype.name,
+                     "context": ctx_desc, "seconds_per_call": t,
+                     "resolution": tune.resolve("gemm", (n, n, n), dtype,
+                                                policy=policy).describe()})
 
-    x = jnp.asarray(rng.normal(size=1 << 20).astype(np.float32))
-    y = jnp.asarray(rng.normal(size=1 << 20).astype(np.float32))
-    for sched in ("tree", "sequential", "strided"):
-        f = jax.jit(lambda u, v, s=sched: blas.ddot(u, v, schedule=s,
-                                                    accumulators=optimal_accumulators(1 << 20)))
-        t = _timeit(f, x, y, reps=3)
-        emit(f"blas,ddot_{sched},1M", t * 1e6, "us_per_call")
+        x = jnp.asarray(rng.normal(size=1 << 20).astype(np.float32))
+        y = jnp.asarray(rng.normal(size=1 << 20).astype(np.float32))
+        for sched in ("tree", "sequential", "strided"):
+            f = jax.jit(lambda u, v, s=sched: linalg.dot(
+                u, v, schedule=s,
+                accumulators=optimal_accumulators(1 << 20)))
+            t = _timeit(f, x, y, reps=3)
+            emit(f"blas,dot_{sched},1M", t * 1e6, "us_per_call")
 
-    m = jnp.asarray(rng.normal(size=(192, 192)).astype(np.float32))
-    fact_res = tune.resolve("gemm", (192, 192, 32), jnp.float32,
-                            policy=policy).describe()
-    for name, f in (("geqrf", jax.jit(lambda z: lapack.geqrf(
-                        z, block=32, policy=policy))),
-                    ("getrf", jax.jit(lambda z: lapack.getrf(
-                        z, block=32, policy=policy)))):
-        t = _timeit(f, m, reps=3)
-        emit(f"lapack,{name},192", t * 1e3, "ms_per_call")
-        rows.append({"op": name, "n": 192, "block": 32,
+        m = jnp.asarray(rng.normal(size=(192, 192)).astype(np.float32))
+        fact_res = tune.resolve("gemm", (192, 192, 32), jnp.float32,
+                                policy=policy).describe()
+        # geqrf times the packed factorization core (linalg.qr would add
+        # the full Q accumulation); lu goes through the front-end
+        for name, f in (("geqrf", jax.jit(lambda z: lapack.geqrf(
+                            z, block=32, policy=policy))),
+                        ("lu", jax.jit(lambda z: linalg.lu(z, block=32)))):
+            t = _timeit(f, m, reps=3)
+            emit(f"lapack,{name},192", t * 1e3, "ms_per_call")
+            rows.append({"op": name, "n": 192, "block": 32,
+                         "dtype": "float32", "context": ctx_desc,
+                         "seconds_per_call": t, "resolution": fact_res})
+        s = m @ m.T + 192 * jnp.eye(192)
+        t = _timeit(jax.jit(lambda z: linalg.cholesky(z, block=32)), s,
+                    reps=3)
+        emit("lapack,cholesky,192", t * 1e3, "ms_per_call")
+        rows.append({"op": "cholesky", "n": 192, "block": 32,
+                     "dtype": "float32", "context": ctx_desc,
                      "seconds_per_call": t, "resolution": fact_res})
-    s = m @ m.T + 192 * jnp.eye(192)
-    t = _timeit(jax.jit(lambda z: lapack.potrf(z, block=32, policy=policy)),
-                s, reps=3)
-    emit("lapack,potrf,192", t * 1e3, "ms_per_call")
-    rows.append({"op": "potrf", "n": 192, "block": 32,
-                 "seconds_per_call": t, "resolution": fact_res})
 
     out = os.path.join(os.path.dirname(__file__), "out", "blas.json")
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
         json.dump({"benchmark": "blas", "backend": jax.default_backend(),
-                   "policy": policy, "rows": rows}, f, indent=2)
+                   "policy": policy, "context": ctx_desc, "rows": rows}, f,
+                  indent=2)
     emit("blas,json", out, "path")

@@ -1,7 +1,9 @@
 """Distributed BLAS sweep: mesh shape x matrix size x policy -> trajectory.
 
-Runs the SUMMA :func:`repro.blas.distributed.pdgemm` and the mesh-parallel
-batched factorizations over every mesh shape that fits the device count,
+Runs SUMMA GEMM and the mesh-parallel batched factorizations - through
+the :mod:`repro.linalg` front-end with a mesh-bearing ExecutionContext,
+so the routing layer itself is on the measured path - over every mesh
+shape that fits the device count,
 recording wall time, the resolved kernel config (including the registry's
 mesh key component), and the :func:`repro.core.codesign.plan_pdgemm` model
 terms (compute vs per-hop collective bytes) - so the cross-device
@@ -57,9 +59,9 @@ _OUT_DEFAULT = os.path.join(os.path.dirname(__file__), "out",
 def sweep(gemm_shapes=None, factor_grid=None, policies=POLICIES, reps=1):
     """Returns trajectory rows over mesh x shape x policy; every row
     records the mesh shape and the resolved config."""
+    from repro import linalg
     from repro.blas import distributed as dblas
     from repro.core.codesign import plan_pdgemm
-    from repro.lapack import distributed as dlap
     from repro.tune import dispatch
     from repro.tune.search import measure_wall_time as _timeit
 
@@ -82,12 +84,15 @@ def sweep(gemm_shapes=None, factor_grid=None, policies=POLICIES, reps=1):
             for pol in policies:
                 res = dispatch.resolve("pdgemm", (m, n, k), jnp.float32,
                                        policy=pol, mesh=(px, py))
-                f = jax.jit(lambda x, y, p=pol: dblas.pdgemm(
-                    x, y, mesh, policy=p))
+                ctx = dict(policy=pol, mesh=(px, py))
+                f = jax.jit(lambda x, y, c=dict(ctx): linalg.gemm(
+                    x, y, context=c))
                 t = _timeit(f, a, b, reps=reps)
                 rows.append({
                     "op": "pdgemm", "mesh": [px, py], "mesh_key": mkey,
                     "shape": [m, n, k], "policy": pol,
+                    "dtype": "float32",
+                    "context": linalg.ExecutionContext(**ctx).describe(),
                     "resolution": res.describe(),
                     "seconds_per_call": t,
                     "gflops": 2.0 * m * n * k / t / 1e9,
@@ -104,18 +109,21 @@ def sweep(gemm_shapes=None, factor_grid=None, policies=POLICIES, reps=1):
                 x = x @ np.swapaxes(x, 1, 2) + nsz * np.eye(
                     nsz, dtype=np.float32)
             xj = jnp.asarray(x)
-            fn = {"potrf": dlap.batched_potrf,
-                  "getrf": dlap.batched_getrf}[kind]
+            fn = {"potrf": linalg.batched_cholesky,
+                  "getrf": linalg.batched_lu}[kind]
             for pol in policies:
-                f = jax.jit(lambda v, kk=kind, p=pol: fn(
-                    v, mesh, policy=p).factors)
+                ctx = dict(policy=pol, mesh=(px, py))
+                f = jax.jit(lambda v, c=dict(ctx): fn(
+                    v, context=c).factors)
                 t = _timeit(f, xj, reps=reps)
                 res = dispatch.resolve("gemm", (nsz, nsz, nsz), jnp.float32,
                                        policy=pol)
                 rows.append({
                     "op": f"batched_{kind}", "mesh": [px, py],
                     "mesh_key": mkey, "shape": [batch, nsz, nsz],
-                    "policy": pol, "resolution": res.describe(),
+                    "policy": pol, "dtype": "float32",
+                    "context": linalg.ExecutionContext(**ctx).describe(),
+                    "resolution": res.describe(),
                     "seconds_per_call": t,
                 })
     return rows

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import lapack, tune
+from repro import lapack, linalg, tune
 from repro.core.codesign import FACTOR_FLOP_COEFF as FLOP_COEFF
 from repro.core.codesign import plan_factorization
 from repro.tune.search import measure_wall_time as _timeit
@@ -29,20 +29,24 @@ FACTOR_FN = {"potrf": lapack.batched_potrf, "getrf": lapack.batched_getrf,
 
 
 def sweep(batches=(1, 8, 32), sizes=(32, 64, 128), blocks=(8, 16, 32, None),
-          kinds=("potrf", "getrf", "geqrf"), reps=3, policy="reference"):
+          kinds=("potrf", "getrf", "geqrf"), reps=3, policy="reference",
+          dtype=jnp.float32):
     """Returns a list of row dicts, one per (kind, batch, n, block); every
-    row carries the policy its trailing updates resolved through the
-    repro.tune dispatcher."""
+    row carries the dtype, the resolved ExecutionContext, and the policy
+    its trailing updates resolved through the repro.tune dispatcher."""
     rng = np.random.default_rng(0)
     rows = []
+    dtype = jnp.dtype(dtype)
+    ctx_desc = linalg.ExecutionContext(policy=policy).describe()
     for kind in kinds:
         fn = FACTOR_FN[kind]
         for n in sizes:
             a = rng.normal(size=(max(batches), n, n)).astype(np.float32)
             if kind == "potrf":
                 a = a @ np.swapaxes(a, 1, 2) + n * np.eye(n, dtype=np.float32)
+            a = a.astype(dtype)
             gemm_cfg = tune.resolve(
-                "gemm", (n, n, n), jnp.float32, policy=policy).describe()
+                "gemm", (n, n, n), dtype, policy=policy).describe()
             for b in batches:
                 x = jnp.asarray(a[:b])
                 for block in blocks:
@@ -56,6 +60,8 @@ def sweep(batches=(1, 8, 32), sizes=(32, 64, 128), blocks=(8, 16, 32, None),
                         plan_factorization(n, kind=kind).block,
                         "planned": block is None,
                         "policy": policy,
+                        "dtype": dtype.name,
+                        "context": ctx_desc,
                         "trailing_resolution": gemm_cfg,
                         "seconds_per_call": t,
                         "gflops": flops / t / 1e9,
@@ -82,6 +88,8 @@ def record(rows) -> dict:
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
         "policy": rows[0]["policy"] if rows else None,
+        "dtype": rows[0]["dtype"] if rows else None,
+        "context": rows[0]["context"] if rows else None,
         "rows": rows,
         "summary": summary,
     }

@@ -20,6 +20,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro import linalg
 from repro.tune import dispatch, search
 from repro.tune.registry import Registry
 
@@ -27,18 +28,33 @@ GEMM_SHAPES = [(64, 64, 64), (128, 128, 64), (128, 64, 128)]
 TRSM_SHAPES = [(64, 8), (128, 8)]
 FAST_GEMM = [(32, 32, 32), (64, 64, 64)]
 FAST_TRSM = [(48, 4)]
+# measured sweeps per dtype the kernel path executes on this backend;
+# float64 additionally gets model-seeded entries (no measurement - the
+# default jax config would silently downcast the operands)
+SWEEP_DTYPES = (jnp.float32, jnp.bfloat16)
+SEED_DTYPES = (jnp.float64,)
 
 
 def sweep(registry: Registry, gemm_shapes=None, trsm_shapes=None,
-          top_k: int = 3, reps: int = 2):
-    """Run every sweep into ``registry``; returns trajectory rows."""
+          top_k: int = 3, reps: int = 2, dtypes=SWEEP_DTYPES):
+    """Run every sweep into ``registry`` per dtype; returns trajectory
+    rows. Non-measurable dtypes (float64 without X64) get model-seeded
+    registry entries via :func:`repro.tune.search.seed_registry_from_model`
+    so their tuned lookups hit real configs instead of falling back."""
     rows = []
-    for m, n, k in (gemm_shapes if gemm_shapes is not None else GEMM_SHAPES):
-        rows.append(search.tune_gemm(m, n, k, registry=registry, top_k=top_k,
-                                     reps=reps).to_json())
-    for n, nrhs in (trsm_shapes if trsm_shapes is not None else TRSM_SHAPES):
-        rows.append(search.tune_trsm(n, nrhs, registry=registry,
-                                     reps=reps).to_json())
+    gshapes = gemm_shapes if gemm_shapes is not None else GEMM_SHAPES
+    tshapes = trsm_shapes if trsm_shapes is not None else TRSM_SHAPES
+    for dtype in dtypes:
+        for m, n, k in gshapes:
+            rows.append(search.tune_gemm(m, n, k, dtype=dtype,
+                                         registry=registry, top_k=top_k,
+                                         reps=reps).to_json())
+        for n, nrhs in tshapes:
+            rows.append(search.tune_trsm(n, nrhs, dtype=dtype,
+                                         registry=registry,
+                                         reps=reps).to_json())
+    search.seed_registry_from_model(registry, gemm_shapes=gshapes,
+                                    trsm_shapes=tshapes, dtypes=SEED_DTYPES)
     return rows
 
 
@@ -55,6 +71,9 @@ def record(registry: Registry, rows) -> dict:
         "benchmark": "tune",
         "backend": jax.default_backend(),
         "policy": "tuned",
+        "dtypes": sorted({r["dtype"] for r in rows}),
+        "context": linalg.ExecutionContext(
+            policy="tuned", registry=registry.path).describe(),
         "registry_path": registry.path,
         "registry_entries": len(registry),
         "rows": rows,

@@ -1,7 +1,8 @@
 """Benchmark driver: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only name] [--fast]``
-Prints ``name,value,derived`` CSV rows.
+``PYTHONPATH=src python -m benchmarks.run [--only name] [--fast] [--list]``
+Prints ``name,value,derived`` CSV rows (``--list`` prints the registered
+benches without running anything).
 """
 from __future__ import annotations
 
@@ -29,7 +30,14 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true",
                     help="skip the slow PE stream sweeps")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered benches (name, module) and exit")
     args = ap.parse_args()
+
+    if args.list:
+        for name, modpath in MODULES:
+            print(f"{name:18s} {modpath}")
+        return
 
     def emit(name, value, unit):
         print(f"{name},{value},{unit}", flush=True)

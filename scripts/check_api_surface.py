@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""CI guard for the repro.linalg public surface.
+
+Asserts (1) ``repro.linalg.__all__`` is exactly the frozen list below,
+(2) every routine keeps its dtype-generic, context-scoped signature
+(``dtype`` and ``context`` keyword parameters), and (3) the
+ExecutionContext field set is stable - so an accidental surface break
+(renamed routine, dropped kwarg, new required positional) fails CI
+instead of landing silently. Update the frozen lists *in the same PR* as
+an intentional surface change.
+"""
+import inspect
+import sys
+
+EXPECTED_ALL = [
+    # context machinery
+    "ExecutionContext", "use", "get_context", "set_context", "reset_context",
+    # BLAS level 1
+    "axpy", "dot", "scal", "nrm2", "asum", "iamax", "rot",
+    # BLAS level 2
+    "gemv", "ger", "trsv",
+    # BLAS level 3
+    "gemm", "syrk", "trsm",
+    # LAPACK
+    "cholesky", "lu", "qr", "solve", "lstsq",
+    # batched LAPACK
+    "batched_cholesky", "batched_lu", "batched_qr", "batched_solve",
+    "FactorizationResult",
+]
+
+# routine -> parameters that must exist (beyond the operands)
+EXPECTED_PARAMS = {
+    "gemm": {"a", "b", "c", "alpha", "beta", "transa", "transb", "dtype",
+             "context"},
+    "gemv": {"a", "x", "y", "alpha", "beta", "trans", "dtype", "context"},
+    "syrk": {"a", "c", "alpha", "beta", "lower", "trans", "dtype", "context"},
+    "trsm": {"a", "b", "lower", "unit_diag", "left", "block", "dtype",
+             "context"},
+    "axpy": {"alpha", "x", "y", "dtype", "context"},
+    "dot": {"x", "y", "schedule", "accumulators", "dtype", "context"},
+    "scal": {"alpha", "x", "dtype", "context"},
+    "nrm2": {"x", "dtype", "context"},
+    "asum": {"x", "dtype", "context"},
+    "iamax": {"x", "context"},
+    "rot": {"x", "y", "c", "s", "dtype", "context"},
+    "ger": {"alpha", "x", "y", "a", "dtype", "context"},
+    "trsv": {"a", "b", "lower", "unit_diag", "dtype", "context"},
+    "cholesky": {"a", "block", "dtype", "context"},
+    "lu": {"a", "block", "dtype", "context"},
+    "qr": {"a", "block", "dtype", "context"},
+    "solve": {"a", "b", "block", "dtype", "context"},
+    "lstsq": {"a", "b", "block", "dtype", "context"},
+    "batched_cholesky": {"a", "block", "dtype", "context"},
+    "batched_lu": {"a", "block", "dtype", "context"},
+    "batched_qr": {"a", "block", "dtype", "context"},
+    "batched_solve": {"res", "b", "dtype", "context"},
+}
+
+EXPECTED_CONTEXT_FIELDS = {"policy", "mesh", "registry", "accum_dtype",
+                           "interpret"}
+
+
+def main() -> int:
+    from repro import linalg
+
+    errors = []
+    got_all = list(linalg.__all__)
+    if got_all != EXPECTED_ALL:
+        missing = set(EXPECTED_ALL) - set(got_all)
+        extra = set(got_all) - set(EXPECTED_ALL)
+        errors.append(f"__all__ drifted: missing={sorted(missing)} "
+                      f"extra={sorted(extra)} (order matters too)")
+
+    for name, want in EXPECTED_PARAMS.items():
+        fn = getattr(linalg, name, None)
+        if fn is None:
+            errors.append(f"routine {name} missing from repro.linalg")
+            continue
+        params = set(inspect.signature(fn).parameters)
+        lost = want - params
+        if lost:
+            errors.append(f"{name}: lost parameters {sorted(lost)} "
+                          f"(has {sorted(params)})")
+        if name != "iamax" and "dtype" not in params:
+            errors.append(f"{name}: must stay dtype-generic (dtype kwarg)")
+        if "context" not in params:
+            errors.append(f"{name}: must accept a per-call context override")
+
+    import dataclasses
+    fields = {f.name for f in dataclasses.fields(linalg.ExecutionContext)}
+    if fields != EXPECTED_CONTEXT_FIELDS:
+        errors.append(f"ExecutionContext fields drifted: {sorted(fields)} "
+                      f"!= {sorted(EXPECTED_CONTEXT_FIELDS)}")
+
+    if errors:
+        print("repro.linalg API surface check FAILED:")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"repro.linalg API surface OK ({len(EXPECTED_PARAMS)} routines, "
+          f"{len(EXPECTED_ALL)} exported names)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

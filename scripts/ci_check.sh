@@ -35,6 +35,19 @@ with tempfile.TemporaryDirectory() as d:
 print("tuner smoke OK: sweep -> save -> reload -> registry hit")
 PY
 
+echo "== repro.linalg API surface guard =="
+python scripts/check_api_surface.py
+
+echo "== deprecation shims (DeprecationWarning -> error, our module only) =="
+# the module's pytestmark escalates DeprecationWarning to error for every
+# test in it (the shim warnings attribute to the caller, i.e. that module,
+# via stacklevel), so an unexpected deprecation path in repro.* fails;
+# the -W flag additionally escalates warnings attributed to the module at
+# collection/import time (note: no "tests." prefix - tests/ is not a
+# package, so the module __name__ is bare)
+python -m pytest -q tests/test_linalg_deprecation.py \
+    -W "error::DeprecationWarning:test_linalg_deprecation"
+
 echo "== docs reference check (stale paths must fail) =="
 python - <<'PY'
 import os, re, sys

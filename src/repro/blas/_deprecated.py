@@ -1,0 +1,34 @@
+"""Deprecation machinery for the d-prefixed BLAS shims.
+
+Each old routine warns exactly once per process (per routine name) and
+then keeps delegating silently; ``stacklevel`` points the warning at the
+*caller* of the shim, not at this module. Tests reset the once-set via
+:func:`reset_warned`.
+"""
+from __future__ import annotations
+
+import warnings
+
+_warned: set = set()
+
+
+def warn_once(old: str, new: str) -> None:
+    """One DeprecationWarning per deprecated routine name per process.
+
+    ``stacklevel=3`` skips this helper and the shim body, landing on the
+    shim's caller.
+    """
+    if old in _warned:
+        return
+    _warned.add(old)
+    warnings.warn(
+        f"repro.blas.{old} is deprecated; use repro.linalg.{new}, whose "
+        f"policy/registry/mesh come from the active "
+        f"repro.linalg.ExecutionContext (this shim keeps its old "
+        f"single-device behavior and ignores any context mesh)",
+        DeprecationWarning, stacklevel=3)
+
+
+def reset_warned() -> None:
+    """Forget which shims already warned (tests only)."""
+    _warned.clear()

@@ -86,7 +86,7 @@ def pdgemm(a: jnp.ndarray, b: jnp.ndarray, mesh: Mesh,
     ----------
     a, b : jnp.ndarray
         Global operands, shapes ``(m, k)`` and ``(k, n)``. Any float dtype
-        the single-device :func:`repro.blas.level3.dgemm` accepts
+        the single-device :func:`repro.blas.level3.gemm` accepts
         (float32/float64; bfloat16 storage). Internally zero-padded so m,
         n, k divide the mesh tiling; the pad never leaks into the output.
     mesh : jax.sharding.Mesh
@@ -110,7 +110,7 @@ def pdgemm(a: jnp.ndarray, b: jnp.ndarray, mesh: Mesh,
     Notes
     -----
     Differential oracle: ``tests/test_distributed_blas.py`` checks every
-    mesh in {(1,1), (2,2), (4,2)} x policy against single-device ``dgemm``
+    mesh in {(1,1), (2,2), (4,2)} x policy against single-device ``gemm``
     under the shared ``dtype_tolerances``.
     """
     from repro.tune import dispatch as _tune
@@ -165,14 +165,14 @@ def pdtrsm(a: jnp.ndarray, b: jnp.ndarray, mesh: Mesh, lower: bool = True,
     cannot parallelize; the RHS columns are the embarrassingly parallel
     axis. So T ``(n, n)`` is replicated and B's columns are sharded over
     the flattened ``("x", "y")`` mesh: every device runs the *blocked*
-    single-device :func:`repro.blas.level3.dtrsm` (policy-dispatched, so
+    single-device :func:`repro.blas.level3.trsm` (policy-dispatched, so
     its off-diagonal GEMMs ride the Pallas path) on its column slab.
 
     Parameters
     ----------
     a : (n, n) triangular matrix; b : (n, nrhs) RHS (1-D b is treated as
     one column). ``left=False`` solves X op(T) = B by the usual transpose
-    identity. ``block``/``policy`` are forwarded to the local dtrsm.
+    identity. ``block``/``policy`` are forwarded to the local trsm.
 
     Returns
     -------
@@ -181,14 +181,14 @@ def pdtrsm(a: jnp.ndarray, b: jnp.ndarray, mesh: Mesh, lower: bool = True,
 
     Notes
     -----
-    Oracle: ``tests/test_distributed_blas.py`` vs single-device ``dtrsm``.
+    Oracle: ``tests/test_distributed_blas.py`` vs single-device ``trsm``.
     """
     if not left:
         return pdtrsm(a.T, b.T, mesh, lower=not lower, unit_diag=unit_diag,
                       left=True, block=block, policy=policy,
                       use_kernel=use_kernel, interpret=interpret,
                       registry=registry).T
-    from repro.blas.level3 import dtrsm
+    from repro.blas.level3 import trsm
     px, py = _mesh_xy(mesh)
     ndev = px * py
     vec = b.ndim == 1
@@ -197,9 +197,9 @@ def pdtrsm(a: jnp.ndarray, b: jnp.ndarray, mesh: Mesh, lower: bool = True,
     rhs_p = _pad2(rhs, 1, ndev)                     # zero cols solve to zero
 
     def inner(t, r):
-        return dtrsm(t, r, lower=lower, unit_diag=unit_diag, left=True,
-                     block=block, policy=policy, use_kernel=use_kernel,
-                     interpret=interpret, registry=registry)
+        return trsm(t, r, lower=lower, unit_diag=unit_diag, left=True,
+                    block=block, policy=policy, use_kernel=use_kernel,
+                    interpret=interpret, registry=registry)
 
     f = shard_map(inner, mesh=mesh,
                   in_specs=(P(None, None), P(None, ("x", "y"))),

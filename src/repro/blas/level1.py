@@ -1,16 +1,18 @@
 """Level-1 BLAS in JAX (the paper's section-4.1 workloads).
 
-dtype-generic (the 'd' prefix is kept for LAPACK fidelity). ``ddot`` exposes
-the *schedule* knob the paper's analysis is about: tree / sequential /
-strided-U reductions produce identical values (up to FP reassociation) with
-very different dependence structure; the strided form with U =
-``codesign.optimal_accumulators`` is the TPU-codesign schedule.
+dtype-generic cores under their un-prefixed names (``dot``, ``axpy``, ...);
+``ddot``/``daxpy``/... survive as deprecation shims that forward through
+:mod:`repro.linalg`. ``dot`` exposes the *schedule* knob the paper's
+analysis is about: tree / sequential / strided-U reductions produce
+identical values (up to FP reassociation) with very different dependence
+structure; the strided form with U = ``codesign.optimal_accumulators`` is
+the TPU-codesign schedule.
 
-Level-1 routines are pure jnp (no ``policy`` keyword - there is no
-kernel-shaped core to dispatch); the policy mechanism starts at Level 2.
-All routines accept float32/float64 (and bfloat16 storage) and are
-differential-tested against NumPy oracles in
-``tests/test_differential_blas.py`` and ``tests/test_blas.py``.
+Level-1 routines are pure jnp (no policy - there is no kernel-shaped core
+to dispatch); the policy mechanism starts at Level 2. All routines accept
+float32/float64 (and bfloat16 storage) and are differential-tested against
+NumPy oracles in ``tests/test_differential_blas.py`` and
+``tests/test_blas.py``.
 """
 from __future__ import annotations
 
@@ -18,9 +20,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.blas._deprecated import warn_once
 
-def ddot(x: jnp.ndarray, y: jnp.ndarray, schedule: str = "tree",
-         accumulators: int = 8) -> jnp.ndarray:
+
+def dot(x: jnp.ndarray, y: jnp.ndarray, schedule: str = "tree",
+        accumulators: int = 8) -> jnp.ndarray:
     """Inner product x^T y with an explicit reduction schedule.
 
     Parameters
@@ -64,7 +68,7 @@ def ddot(x: jnp.ndarray, y: jnp.ndarray, schedule: str = "tree",
     raise ValueError(schedule)
 
 
-def daxpy(alpha, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+def axpy(alpha, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     """y <- alpha*x + y.
 
     Parameters
@@ -78,7 +82,7 @@ def daxpy(alpha, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     return alpha * x + y
 
 
-def dscal(alpha, x: jnp.ndarray) -> jnp.ndarray:
+def scal(alpha, x: jnp.ndarray) -> jnp.ndarray:
     """x <- alpha*x (any float dtype/shape).
 
     Oracle: ``tests/test_differential_blas.py``.
@@ -86,7 +90,7 @@ def dscal(alpha, x: jnp.ndarray) -> jnp.ndarray:
     return alpha * x
 
 
-def dnrm2(x: jnp.ndarray) -> jnp.ndarray:
+def nrm2(x: jnp.ndarray) -> jnp.ndarray:
     """Euclidean norm of a vector, overflow-safe (reference-BLAS style).
 
     Scales by max|x| before squaring, so ||x|| is finite whenever the
@@ -95,27 +99,27 @@ def dnrm2(x: jnp.ndarray) -> jnp.ndarray:
     ``np.linalg.norm``, including huge/tiny magnitudes).
     """
     amax = jnp.max(jnp.abs(x))
-    scale = jnp.where(amax > 0, amax, 1.0)
-    return scale * jnp.sqrt(jnp.sum((x / scale) ** 2))
+    scale_ = jnp.where(amax > 0, amax, 1.0)
+    return scale_ * jnp.sqrt(jnp.sum((x / scale_) ** 2))
 
 
-def dasum(x: jnp.ndarray) -> jnp.ndarray:
-    """Sum of absolute values (BLAS dasum). Scalar of x's dtype.
+def asum(x: jnp.ndarray) -> jnp.ndarray:
+    """Sum of absolute values (BLAS asum). Scalar of x's dtype.
 
     Oracle: ``tests/test_differential_blas.py``.
     """
     return jnp.sum(jnp.abs(x))
 
 
-def idamax(x: jnp.ndarray) -> jnp.ndarray:
-    """Index of the first max-|x| element (BLAS idamax, 0-based int).
+def iamax(x: jnp.ndarray) -> jnp.ndarray:
+    """Index of the first max-|x| element (BLAS iamax, 0-based int).
 
     Oracle: ``tests/test_differential_blas.py`` (vs ``np.argmax(|x|)``).
     """
     return jnp.argmax(jnp.abs(x))
 
 
-def drot(x, y, c, s):
+def rot(x, y, c, s):
     """Apply a Givens rotation to a vector pair.
 
     Parameters
@@ -128,3 +132,64 @@ def drot(x, y, c, s):
     Oracle: ``tests/test_differential_blas.py``.
     """
     return c * x + s * y, c * y - s * x
+
+
+# -------------------------- deprecated d-prefixed shims ----------------------
+# Thin forwards through repro.linalg under a *pinned* compat context
+# (mesh=None, accum_dtype=None), so an active context can never change a
+# deprecated call's numerics. One DeprecationWarning per routine. Oracle +
+# warning behavior: tests/test_linalg_deprecation.py.
+
+def _compat():
+    from repro.linalg.context import compat_context
+    return compat_context()
+
+
+def ddot(x, y, schedule: str = "tree", accumulators: int = 8):
+    """Deprecated alias of :func:`repro.linalg.dot`."""
+    warn_once("ddot", "dot")
+    from repro import linalg
+    return linalg.dot(x, y, schedule=schedule, accumulators=accumulators,
+                      context=_compat())
+
+
+def daxpy(alpha, x, y):
+    """Deprecated alias of :func:`repro.linalg.axpy`."""
+    warn_once("daxpy", "axpy")
+    from repro import linalg
+    return linalg.axpy(alpha, x, y, context=_compat())
+
+
+def dscal(alpha, x):
+    """Deprecated alias of :func:`repro.linalg.scal`."""
+    warn_once("dscal", "scal")
+    from repro import linalg
+    return linalg.scal(alpha, x, context=_compat())
+
+
+def dnrm2(x):
+    """Deprecated alias of :func:`repro.linalg.nrm2`."""
+    warn_once("dnrm2", "nrm2")
+    from repro import linalg
+    return linalg.nrm2(x, context=_compat())
+
+
+def dasum(x):
+    """Deprecated alias of :func:`repro.linalg.asum`."""
+    warn_once("dasum", "asum")
+    from repro import linalg
+    return linalg.asum(x, context=_compat())
+
+
+def idamax(x):
+    """Deprecated alias of :func:`repro.linalg.iamax`."""
+    warn_once("idamax", "iamax")
+    from repro import linalg
+    return linalg.iamax(x, context=_compat())
+
+
+def drot(x, y, c, s):
+    """Deprecated alias of :func:`repro.linalg.rot`."""
+    warn_once("drot", "rot")
+    from repro import linalg
+    return linalg.rot(x, y, c, s, context=_compat())

@@ -1,7 +1,9 @@
 """Level-2 BLAS in JAX.
 
-``dgemv`` shares the BLAS-3 policy mechanism: its matvec core resolves
-through :mod:`repro.tune.dispatch` (``reference`` = plain jnp; ``model`` /
+Cores under un-prefixed names; ``dgemv``/``dger``/``dtrsv`` are
+deprecation shims forwarding through :mod:`repro.linalg`. ``gemv`` shares
+the BLAS-3 policy mechanism: its matvec core resolves through
+:mod:`repro.tune.dispatch` (``reference`` = plain jnp; ``model`` /
 ``tuned`` route op(A) x through the Pallas GEMM kernel as an (m, n) x
 (n, 1) product), so Level-2 configs live in the same registry.
 """
@@ -12,12 +14,14 @@ from typing import Optional
 import jax.numpy as jnp
 from jax import lax
 
+from repro.blas._deprecated import warn_once
 
-def dgemv(a: jnp.ndarray, x: jnp.ndarray, beta=0.0, y=None,
-          alpha=1.0, trans: bool = False, policy: Optional[str] = None,
-          use_kernel: Optional[bool] = None, interpret: bool = True,
-          registry=None) -> jnp.ndarray:
-    """y <- alpha*op(A) x + beta*y (BLAS DGEMV).
+
+def gemv(a: jnp.ndarray, x: jnp.ndarray, beta=0.0, y=None,
+         alpha=1.0, trans: bool = False, policy: Optional[str] = None,
+         use_kernel: Optional[bool] = None, interpret: bool = True,
+         registry=None) -> jnp.ndarray:
+    """y <- alpha*op(A) x + beta*y (BLAS GEMV core).
 
     Parameters
     ----------
@@ -38,7 +42,8 @@ def dgemv(a: jnp.ndarray, x: jnp.ndarray, beta=0.0, y=None,
 
     Notes
     -----
-    Oracle: ``tests/test_differential_blas.py`` (vs NumPy matvec over a
+    Public front-end: :func:`repro.linalg.gemv` (context-scoped). Oracle:
+    ``tests/test_differential_blas.py`` (vs NumPy matvec over a
     shape x dtype x trans grid); per-policy agreement in
     ``tests/test_tune.py``.
     """
@@ -52,8 +57,8 @@ def dgemv(a: jnp.ndarray, x: jnp.ndarray, beta=0.0, y=None,
     return out
 
 
-def dger(alpha, x: jnp.ndarray, y: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
-    """A <- alpha * x y^T + A (BLAS DGER rank-1 update).
+def ger(alpha, x: jnp.ndarray, y: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """A <- alpha * x y^T + A (BLAS GER rank-1 update).
 
     Parameters
     ----------
@@ -67,8 +72,8 @@ def dger(alpha, x: jnp.ndarray, y: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
     return a + alpha * jnp.outer(x, y)
 
 
-def dtrsv(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
-          unit_diag: bool = False) -> jnp.ndarray:
+def trsv(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
+         unit_diag: bool = False) -> jnp.ndarray:
     """Solve op(T) x = b for triangular T via a row-sequential scan.
 
     The sequential dependence (x_i needs all earlier x_j) is the paper's
@@ -86,7 +91,7 @@ def dtrsv(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
     Returns
     -------
     x with b's shape. Pure jnp scan - no policy; the blocked,
-    policy-dispatched form is :func:`repro.blas.level3.dtrsm`.
+    policy-dispatched form is :func:`repro.blas.level3.trsm`.
 
     Notes
     -----
@@ -106,3 +111,37 @@ def dtrsv(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
     x0 = jnp.zeros_like(b)
     x, _ = lax.scan(body, x0, order)
     return x
+
+
+# -------------------------- deprecated d-prefixed shims ----------------------
+
+def dgemv(a, x, beta=0.0, y=None, alpha=1.0, trans: bool = False,
+          policy: Optional[str] = None, use_kernel: Optional[bool] = None,
+          interpret: bool = True, registry=None,
+          use_pallas: Optional[bool] = None):
+    """Deprecated alias of :func:`repro.linalg.gemv` (old kwargs mapped to
+    a per-call context). Warning + bitwise-identity oracle:
+    ``tests/test_linalg_deprecation.py``."""
+    warn_once("dgemv", "gemv")
+    from repro import linalg
+    from repro.linalg.context import compat_context
+    return linalg.gemv(a, x, y=y, alpha=alpha, beta=beta, trans=trans,
+                       context=compat_context(policy, use_kernel, interpret,
+                                              registry, use_pallas))
+
+
+def dger(alpha, x, y, a):
+    """Deprecated alias of :func:`repro.linalg.ger`."""
+    warn_once("dger", "ger")
+    from repro import linalg
+    from repro.linalg.context import compat_context
+    return linalg.ger(alpha, x, y, a, context=compat_context())
+
+
+def dtrsv(a, b, lower: bool = True, unit_diag: bool = False):
+    """Deprecated alias of :func:`repro.linalg.trsv`."""
+    warn_once("dtrsv", "trsv")
+    from repro import linalg
+    from repro.linalg.context import compat_context
+    return linalg.trsv(a, b, lower=lower, unit_diag=unit_diag,
+                       context=compat_context())

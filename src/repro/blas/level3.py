@@ -1,14 +1,19 @@
 """Level-3 BLAS in JAX, policy-dispatched onto the Pallas GEMM hot spot.
 
-``dgemm`` is the routine the whole paper orbits (every LAPACK trailing
+``gemm`` is the routine the whole paper orbits (every LAPACK trailing
 update lowers to it). Every kernel-shaped core here resolves through
 :mod:`repro.tune.dispatch`: ``policy="reference"`` is plain jnp,
 ``"model"`` the Pallas MXU kernel at the :func:`repro.core.codesign`
 tiling, ``"tuned"`` the measured registry config (cold start == model).
-``dsyrk`` and ``dtrsm`` thread the same policy through their internal
+``syrk`` and ``trsm`` thread the same policy through their internal
 GEMMs, so a blocked factorization dispatches *every* trailing flop onto
-the one hot path. ``use_kernel=True/False`` remains as a deprecated alias
-for ``policy="model"`` / ``"reference"``.
+the one hot path.
+
+These are the numeric cores; the public, context-scoped front-end is
+:mod:`repro.linalg`. The old d-prefixed names (``dgemm``/``dsyrk``/
+``dtrsm``) are deprecation shims forwarding there, and
+``use_kernel=True/False`` remains a deprecated alias for
+``policy="model"`` / ``"reference"``.
 """
 from __future__ import annotations
 
@@ -17,19 +22,21 @@ from typing import Optional
 import jax.numpy as jnp
 from jax import lax
 
+from repro.blas._deprecated import warn_once
 
-def dgemm(a: jnp.ndarray, b: jnp.ndarray, c: Optional[jnp.ndarray] = None,
-          alpha=1.0, beta=0.0, transa: bool = False, transb: bool = False,
-          policy: Optional[str] = None, use_kernel: Optional[bool] = None,
-          interpret: bool = True, registry=None) -> jnp.ndarray:
-    """C <- alpha * op(A) op(B) + beta * C (BLAS DGEMM).
+
+def gemm(a: jnp.ndarray, b: jnp.ndarray, c: Optional[jnp.ndarray] = None,
+         alpha=1.0, beta=0.0, transa: bool = False, transb: bool = False,
+         policy: Optional[str] = None, use_kernel: Optional[bool] = None,
+         interpret: bool = True, registry=None) -> jnp.ndarray:
+    """C <- alpha * op(A) op(B) + beta * C (BLAS GEMM core).
 
     Parameters
     ----------
     a, b : matrices with op(A) (m, k) and op(B) (k, n); ``transa`` /
         ``transb`` are the BLAS transpose flags. Any float dtype
         (float32/float64; bfloat16 storage, fp32 accumulation in the
-        kernel).
+        kernel - float64 operands accumulate in float64).
     c : (m, n) accumuland for the ``beta`` epilogue, optional.
     policy : {"reference", "model", "tuned"}, optional
         ``reference`` = plain jnp (the oracle path); ``model`` = Pallas
@@ -47,8 +54,9 @@ def dgemm(a: jnp.ndarray, b: jnp.ndarray, c: Optional[jnp.ndarray] = None,
     -----
     This is the hot path the whole stack funnels into - every LAPACK
     trailing update and the distributed SUMMA panels execute here.
-    Oracle: ``tests/test_differential_blas.py`` (shape x dtype x
-    transpose grid vs NumPy); per-policy agreement in
+    Public front-end: :func:`repro.linalg.gemm` (context-scoped, mesh
+    routing). Oracle: ``tests/test_differential_blas.py`` (shape x dtype
+    x transpose grid vs NumPy); per-policy agreement in
     ``tests/test_tune.py``.
     """
     from repro.tune import dispatch as _tune
@@ -63,11 +71,11 @@ def dgemm(a: jnp.ndarray, b: jnp.ndarray, c: Optional[jnp.ndarray] = None,
     return out
 
 
-def dsyrk(a: jnp.ndarray, c: Optional[jnp.ndarray] = None, alpha=1.0,
-          beta=0.0, lower: bool = True, trans: bool = False,
-          policy: Optional[str] = None, use_kernel: Optional[bool] = None,
-          interpret: bool = True, registry=None) -> jnp.ndarray:
-    """C <- alpha op(A) op(A)^T + beta C (BLAS DSYRK), symmetric output.
+def syrk(a: jnp.ndarray, c: Optional[jnp.ndarray] = None, alpha=1.0,
+         beta=0.0, lower: bool = True, trans: bool = False,
+         policy: Optional[str] = None, use_kernel: Optional[bool] = None,
+         interpret: bool = True, registry=None) -> jnp.ndarray:
+    """C <- alpha op(A) op(A)^T + beta C (BLAS SYRK core), symmetric output.
 
     Parameters
     ----------
@@ -76,10 +84,10 @@ def dsyrk(a: jnp.ndarray, c: Optional[jnp.ndarray] = None, alpha=1.0,
     lower : which triangle of C is authoritative; the other is mirrored.
     c : (n, n) accumuland, optional.
     policy : {"reference", "model", "tuned"}, optional
-        The product runs through the same ``dgemm`` kernel path (SYRK
+        The product runs through the same ``gemm`` kernel path (SYRK
         shares the gemm registry entries), so SYRK reaches Pallas under
         the kernel policies; ``use_kernel`` deprecated alias as in
-        :func:`dgemm`.
+        :func:`gemm`.
 
     Returns
     -------
@@ -87,7 +95,8 @@ def dsyrk(a: jnp.ndarray, c: Optional[jnp.ndarray] = None, alpha=1.0,
 
     Notes
     -----
-    Oracle: ``tests/test_differential_blas.py``; per-policy agreement in
+    Public front-end: :func:`repro.linalg.syrk`. Oracle:
+    ``tests/test_differential_blas.py``; per-policy agreement in
     ``tests/test_tune.py``.
     """
     from repro.tune import dispatch as _tune
@@ -96,17 +105,23 @@ def dsyrk(a: jnp.ndarray, c: Optional[jnp.ndarray] = None, alpha=1.0,
                                   registry=registry)
     if c is not None:
         full = full + beta * c
+    return mirror_triangle(full, lower)
+
+
+def mirror_triangle(full: jnp.ndarray, lower: bool) -> jnp.ndarray:
+    """SYRK epilogue: keep the authoritative triangle of ``full`` and
+    mirror it across the diagonal (shared by the local and SUMMA paths)."""
     n = full.shape[0]
     i, j = jnp.mgrid[0:n, 0:n]
     mask = (i >= j) if lower else (i <= j)
     return jnp.where(mask, full, full.T)
 
 
-def dtrsm(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
-          unit_diag: bool = False, left: bool = True,
-          block: Optional[int] = None, policy: Optional[str] = None,
-          use_kernel: Optional[bool] = None, interpret: bool = True,
-          registry=None) -> jnp.ndarray:
+def trsm(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
+         unit_diag: bool = False, left: bool = True,
+         block: Optional[int] = None, policy: Optional[str] = None,
+         use_kernel: Optional[bool] = None, interpret: bool = True,
+         registry=None) -> jnp.ndarray:
     """Solve op(T) X = B (left=True) or X op(T) = B, T triangular, blocked.
 
     Diagonal blocks use the sequential substitution scan (the serial
@@ -134,16 +149,17 @@ def dtrsm(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
 
     Notes
     -----
-    Oracle: ``tests/test_differential_blas.py`` (vs
+    Public front-end: :func:`repro.linalg.trsm` (context-scoped, pdtrsm
+    under a mesh). Oracle: ``tests/test_differential_blas.py`` (vs
     ``scipy.linalg.solve_triangular`` over lower/upper x unit/non-unit);
     per-policy agreement in ``tests/test_tune.py``.
     """
     if not left:
         # X T = B  <=>  T^T X^T = B^T
-        return dtrsm(a.T, b.T, lower=not lower, unit_diag=unit_diag,
-                     left=True, block=block, policy=policy,
-                     use_kernel=use_kernel, interpret=interpret,
-                     registry=registry).T
+        return trsm(a.T, b.T, lower=not lower, unit_diag=unit_diag,
+                    left=True, block=block, policy=policy,
+                    use_kernel=use_kernel, interpret=interpret,
+                    registry=registry).T
     n = a.shape[0]
     if block is None:
         from repro.tune import dispatch as _tune
@@ -163,11 +179,11 @@ def dtrsm(a: jnp.ndarray, b: jnp.ndarray, lower: bool = True,
         i1 = min(i0 + block, n)
         rhs = b[i0:i1]
         if lower and i0 > 0:
-            rhs = rhs - dgemm(a[i0:i1, :i0], x[:i0], policy=pol,
-                              interpret=interpret, registry=registry)
+            rhs = rhs - gemm(a[i0:i1, :i0], x[:i0], policy=pol,
+                             interpret=interpret, registry=registry)
         elif not lower and i1 < n:
-            rhs = rhs - dgemm(a[i0:i1, i1:], x[i1:], policy=pol,
-                              interpret=interpret, registry=registry)
+            rhs = rhs - gemm(a[i0:i1, i1:], x[i1:], policy=pol,
+                             interpret=interpret, registry=registry)
         xi = _trsm_unblocked(a[i0:i1, i0:i1], rhs, lower=lower,
                              unit_diag=unit_diag)
         x = x.at[i0:i1].set(xi)
@@ -188,3 +204,50 @@ def _trsm_unblocked(a: jnp.ndarray, b: jnp.ndarray, lower: bool,
 
     x, _ = lax.scan(body, jnp.zeros_like(b), order)
     return x
+
+
+# -------------------------- deprecated d-prefixed shims ----------------------
+
+def dgemm(a, b, c=None, alpha=1.0, beta=0.0, transa: bool = False,
+          transb: bool = False, policy: Optional[str] = None,
+          use_kernel: Optional[bool] = None, interpret: bool = True,
+          registry=None, use_pallas: Optional[bool] = None):
+    """Deprecated alias of :func:`repro.linalg.gemm` (old kwargs mapped to
+    a local, per-call context). Warning + bitwise-identity oracle:
+    ``tests/test_linalg_deprecation.py``."""
+    warn_once("dgemm", "gemm")
+    from repro import linalg
+    from repro.linalg.context import compat_context
+    return linalg.gemm(a, b, c=c, alpha=alpha, beta=beta, transa=transa,
+                       transb=transb,
+                       context=compat_context(policy, use_kernel, interpret,
+                                              registry, use_pallas))
+
+
+def dsyrk(a, c=None, alpha=1.0, beta=0.0, lower: bool = True,
+          trans: bool = False, policy: Optional[str] = None,
+          use_kernel: Optional[bool] = None, interpret: bool = True,
+          registry=None, use_pallas: Optional[bool] = None):
+    """Deprecated alias of :func:`repro.linalg.syrk`."""
+    warn_once("dsyrk", "syrk")
+    from repro import linalg
+    from repro.linalg.context import compat_context
+    return linalg.syrk(a, c=c, alpha=alpha, beta=beta, lower=lower,
+                       trans=trans,
+                       context=compat_context(policy, use_kernel, interpret,
+                                              registry, use_pallas))
+
+
+def dtrsm(a, b, lower: bool = True, unit_diag: bool = False,
+          left: bool = True, block: Optional[int] = None,
+          policy: Optional[str] = None, use_kernel: Optional[bool] = None,
+          interpret: bool = True, registry=None,
+          use_pallas: Optional[bool] = None):
+    """Deprecated alias of :func:`repro.linalg.trsm`."""
+    warn_once("dtrsm", "trsm")
+    from repro import linalg
+    from repro.linalg.context import compat_context
+    return linalg.trsm(a, b, lower=lower, unit_diag=unit_diag, left=left,
+                       block=block,
+                       context=compat_context(policy, use_kernel, interpret,
+                                              registry, use_pallas))

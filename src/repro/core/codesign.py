@@ -74,6 +74,24 @@ def optimal_accumulators(n: float, latency: float = VPU_ADD_LATENCY,
     return int(best)
 
 
+
+def _dtype_bytes(dtype, dtype_bytes: int) -> int:
+    """Planner dtype plumbing: an explicit ``dtype`` overrides the raw
+    ``dtype_bytes`` count, so every planner can be called dtype-generically
+    (float32/float64/bfloat16) without the caller computing itemsizes."""
+    if dtype is None:
+        return dtype_bytes
+    import numpy as np
+    return int(np.dtype(dtype).itemsize)
+
+
+def _acc_bytes(dtype_bytes: int) -> int:
+    """Bytes/elem of the kernel's VMEM accumulator: per-precision, matching
+    kernels.gemm.accumulator_dtype (f64 operands -> f64 accumulator, all
+    narrower dtypes -> f32)."""
+    return 8 if dtype_bytes >= 8 else 4
+
+
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
@@ -101,7 +119,7 @@ class GemmPlan:
 
 def plan_gemm(m: int, n: int, k: int, dtype_bytes: int = 2,
               vmem_budget: int = VMEM_BYTES,
-              min_grid_steps: int = 4) -> GemmPlan:
+              min_grid_steps: int = 4, dtype=None) -> GemmPlan:
     """Choose (bm, bn, bk) for C[m,n] += A[m,k] B[k,n] on the MXU.
 
     Policy (each clause is one paper concept):
@@ -113,7 +131,11 @@ def plan_gemm(m: int, n: int, k: int, dtype_bytes: int = 2,
         reaches steady state (fig. 2 saturation).
       * Maximize bm*bn (arithmetic intensity ~ harmonic mean of block dims),
         then bk.
+
+    ``dtype`` (optional) overrides ``dtype_bytes`` with the dtype's
+    itemsize - the dtype-generic entry point.
     """
+    dtype_bytes = _dtype_bytes(dtype, dtype_bytes)
     pm, pn, pk = (_round_up(max(d, 1), MXU) for d in (m, n, k))
     best: Optional[GemmPlan] = None
     cands = [128, 256, 512, 1024]
@@ -127,8 +149,9 @@ def plan_gemm(m: int, n: int, k: int, dtype_bytes: int = 2,
                 if bk > pk and bk != MXU:
                     continue
                 bm_, bn_, bk_ = min(bm, pm), min(bn, pn), min(bk, pk)
-                # double-buffered A and B blocks + fp32 C accumulator
-                vmem = 2 * (bm_ * bk_ + bk_ * bn_) * dtype_bytes + bm_ * bn_ * 4
+                # double-buffered A and B blocks + per-precision C accumulator
+                vmem = 2 * (bm_ * bk_ + bk_ * bn_) * dtype_bytes \
+                    + bm_ * bn_ * _acc_bytes(dtype_bytes)
                 if vmem > vmem_budget:
                     continue
                 # grid covers the block-padded problem (kernel pads inputs
@@ -147,7 +170,8 @@ def plan_gemm(m: int, n: int, k: int, dtype_bytes: int = 2,
                     best = cand
     if best is None:  # degenerate tiny problem: single MXU tile
         bm_, bn_, bk_ = min(MXU, pm), min(MXU, pn), min(MXU, pk)
-        vmem = 2 * (bm_ * bk_ + bk_ * bn_) * dtype_bytes + bm_ * bn_ * 4
+        vmem = 2 * (bm_ * bk_ + bk_ * bn_) * dtype_bytes \
+            + bm_ * bn_ * _acc_bytes(dtype_bytes)
         ai = (2 * bm_ * bn_ * bk_) / ((bm_ * bk_ + bk_ * bn_ + bm_ * bn_) * dtype_bytes)
         best = GemmPlan(bm_, bn_, bk_, 1,
                         (-(-m // bm_), -(-n // bn_), -(-k // bk_)), vmem, ai)
@@ -155,17 +179,19 @@ def plan_gemm(m: int, n: int, k: int, dtype_bytes: int = 2,
 
 
 def plan_from_blocks(m: int, n: int, k: int, bm: int, bn: int, bk: int,
-                     dtype_bytes: int = 2) -> GemmPlan:
+                     dtype_bytes: int = 2, dtype=None) -> GemmPlan:
     """Rebuild a full :class:`GemmPlan` from explicit block dims.
 
     This is how registry entries (``{"bm","bn","bk"}``) and sweep
     candidates become executable plans: grid, VMEM footprint, and
     arithmetic intensity are re-derived exactly as :func:`plan_gemm`
-    derives them for its own picks.
+    derives them for its own picks. ``dtype`` overrides ``dtype_bytes``.
     """
+    dtype_bytes = _dtype_bytes(dtype, dtype_bytes)
     bm_, bn_, bk_ = (max(int(b), 1) for b in (bm, bn, bk))
     grid = (-(-m // bm_), -(-n // bn_), -(-k // bk_))
-    vmem = 2 * (bm_ * bk_ + bk_ * bn_) * dtype_bytes + bm_ * bn_ * 4
+    vmem = 2 * (bm_ * bk_ + bk_ * bn_) * dtype_bytes \
+        + bm_ * bn_ * _acc_bytes(dtype_bytes)
     ai = (2 * bm_ * bn_ * bk_) / ((bm_ * bk_ + bk_ * bn_) * dtype_bytes
                                   + bm_ * bn_ * dtype_bytes / max(grid[2], 1))
     return GemmPlan(bm_, bn_, bk_, optimal_accumulators(bk_ // MXU, max_u=8),
@@ -206,7 +232,7 @@ class PdgemmPlan:
 
 
 def plan_pdgemm(m: int, n: int, k: int, px: int, py: int,
-                dtype_bytes: int = 4) -> PdgemmPlan:
+                dtype_bytes: int = 4, dtype=None) -> PdgemmPlan:
     """Plan the SUMMA ``pdgemm`` on a (px, py) mesh.
 
     Per step (one of ``px * py`` fine k-panels) each device receives an
@@ -221,6 +247,7 @@ def plan_pdgemm(m: int, n: int, k: int, px: int, py: int,
     analogue of fig. 2's pipeline-fill saturation.
     """
     from repro.distributed.collectives import ring_bcast_bytes
+    dtype_bytes = _dtype_bytes(dtype, dtype_bytes)
     px, py = max(int(px), 1), max(int(py), 1)
     steps = px * py
     m_l = -(-max(m, 1) // px)
@@ -314,7 +341,7 @@ def _factorization_time(n: int, nb: int, kind: str, dtype_bytes: int,
 def plan_factorization(n: int, kind: str = "potrf", dtype_bytes: int = 4,
                        batch: int = 1,
                        candidates: Tuple[int, ...] = (8, 16, 32, 64, 128),
-                       ) -> FactorizationPlan:
+                       dtype=None) -> FactorizationPlan:
     """Pick the panel width NB for a blocked right-looking factorization.
 
     Same trade-off as the paper's pipeline-depth equation: the panel is the
@@ -325,6 +352,7 @@ def plan_factorization(n: int, kind: str = "potrf", dtype_bytes: int = 4,
     """
     if kind not in _FACTOR_FLOP_COEFF:
         raise ValueError(f"unknown factorization kind: {kind!r}")
+    dtype_bytes = _dtype_bytes(dtype, dtype_bytes)
     n = max(int(n), 1)
     best_nb, best_t = None, None
     for nb in candidates:
@@ -354,7 +382,8 @@ class TrsmPlan:
 
 
 def plan_trsm(n: int, nrhs: int = 1, dtype_bytes: int = 4,
-              candidates: Tuple[int, ...] = (16, 32, 64, 128)) -> TrsmPlan:
+              candidates: Tuple[int, ...] = (16, 32, 64, 128),
+              dtype=None) -> TrsmPlan:
     """Pick the diagonal-block width for the blocked TRSM.
 
     Same structure as :func:`plan_factorization`: the diagonal substitution
@@ -362,7 +391,9 @@ def plan_trsm(n: int, nrhs: int = 1, dtype_bytes: int = 4,
     block-wide AXPY at VPU rate - work that grows with the block); the
     off-diagonal updates are GEMMs whose per-panel pipeline fill shrinks as
     the block grows. The modeled minimum is eq. 3's p_opt in software.
+    ``dtype`` overrides ``dtype_bytes``.
     """
+    dtype_bytes = _dtype_bytes(dtype, dtype_bytes)
     n = max(int(n), 1)
     nrhs = max(int(nrhs), 1)
     chain = _PANEL_CHAIN_CYCLES["getrf"] / MXU_CLOCK   # pivotless div chain

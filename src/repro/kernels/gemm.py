@@ -2,7 +2,8 @@
 
 The paper reconfigures 4 multipliers + 3 adders into a fused multiply-reduce
 (DOT4). The MXU *is* that structure scaled to a 128x128 systolic array; this
-kernel expresses C = A B as MXU-tile FMAs with an fp32 VMEM accumulator, and
+kernel expresses C = A B as MXU-tile FMAs with a per-precision VMEM
+accumulator (fp32 for float32/bfloat16 operands, fp64 for float64), and
 takes its tiling from :func:`repro.core.codesign.plan_gemm` - block shapes
 are the pipeline-depth analogue (HBM->VMEM grid pipelining; see DESIGN.md
 section 2).
@@ -24,7 +25,7 @@ from repro.core.codesign import GemmPlan, plan_gemm
 from repro.kernels.compat import CompilerParams
 
 
-def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int, acc_dtype):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -32,11 +33,19 @@ def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
-                            preferred_element_type=jnp.float32)
+                            preferred_element_type=acc_dtype)
 
     @pl.when(k == nk - 1)
     def _flush():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def accumulator_dtype(dtype) -> jnp.dtype:
+    """Per-precision accumulator width (the paper's per-pipeline depths):
+    float64 operands accumulate in float64, everything narrower (float32,
+    bfloat16) in float32."""
+    return jnp.dtype(jnp.float64) if jnp.dtype(dtype) == jnp.float64 \
+        else jnp.dtype(jnp.float32)
 
 
 def gemm(a: jnp.ndarray, b: jnp.ndarray, plan: Optional[GemmPlan] = None,
@@ -57,8 +66,9 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, plan: Optional[GemmPlan] = None,
     a_p = jnp.pad(a, ((0, pm - m), (0, pk - k))) if (pm, pk) != (m, k) else a
     b_p = jnp.pad(b, ((0, pk - k), (0, pn - n))) if (pk, pn) != (k, n) else b
     nk = pk // bk
+    acc_dtype = accumulator_dtype(a.dtype)
     out = pl.pallas_call(
-        functools.partial(_gemm_kernel, nk=nk),
+        functools.partial(_gemm_kernel, nk=nk, acc_dtype=acc_dtype),
         grid=(pm // bm, pn // bn, nk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
@@ -66,7 +76,7 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, plan: Optional[GemmPlan] = None,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((pm, pn), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,

@@ -12,7 +12,9 @@ import jax.numpy as jnp
 
 
 def gemm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+    from repro.kernels.gemm import accumulator_dtype
+    pet = accumulator_dtype(a.dtype)   # f64 accumulates in f64, rest in f32
+    return jnp.dot(a, b, preferred_element_type=pet).astype(a.dtype)
 
 
 def dotp(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:

@@ -4,7 +4,7 @@ The ROADMAP's batched-workload scenario: many independent small/medium
 factorizations (mixture-of-experts solves, per-head whitening, ensemble
 Kalman updates) executed as ONE blocked computation. ``vmap`` lifts the
 blocked right-looking routines of :mod:`repro.lapack` - whose trailing
-updates all dispatch through :func:`repro.blas.level3.dgemm` - so a batch
+updates all dispatch through :func:`repro.blas.level3.gemm` - so a batch
 of trailing updates lowers onto batched GEMM on the Pallas hot path, and
 the panel hazard chains of the whole batch run in lockstep instead of
 serially.
@@ -23,7 +23,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.blas.level3 import dtrsm
+from repro.blas.level3 import trsm as _trsm
 from repro.lapack import cholesky, lu, qr
 from repro.lapack.cholesky import default_block
 from repro.tune.policy import resolve_policy
@@ -55,14 +55,16 @@ class FactorizationResult:
         return self.factors.shape[0]
 
 
-def _resolve_block(kmax: int, block: Optional[int], kind: str) -> int:
-    return default_block(kmax, kind) if block is None else int(block)
+def _resolve_block(kmax: int, block: Optional[int], kind: str,
+                   dtype=None) -> int:
+    return default_block(kmax, kind, dtype) if block is None else int(block)
 
 
 def batched_potrf(a: jnp.ndarray, block: Optional[int] = None,
                   policy: Optional[str] = None,
                   use_kernel: Optional[bool] = None,
-                  interpret: bool = True) -> FactorizationResult:
+                  interpret: bool = True,
+                  registry=None) -> FactorizationResult:
     """Cholesky of a (B, n, n) SPD batch; factors holds L (lower).
 
     float32/float64 (NaNs per non-SPD item, LAPACK-style). ``policy``
@@ -74,16 +76,18 @@ def batched_potrf(a: jnp.ndarray, block: Optional[int] = None,
     """
     assert a.ndim == 3 and a.shape[1] == a.shape[2], a.shape
     pol = resolve_policy(policy, use_kernel)
-    nb = _resolve_block(a.shape[1], block, "potrf")
+    nb = _resolve_block(a.shape[1], block, "potrf", a.dtype)
     f = jax.vmap(lambda x: cholesky.potrf(x, block=nb, policy=pol,
-                                          interpret=interpret))
+                                          interpret=interpret,
+                                          registry=registry))
     return FactorizationResult(f(a), None, None, "potrf", nb)
 
 
 def batched_getrf(a: jnp.ndarray, block: Optional[int] = None,
                   policy: Optional[str] = None,
                   use_kernel: Optional[bool] = None,
-                  interpret: bool = True) -> FactorizationResult:
+                  interpret: bool = True,
+                  registry=None) -> FactorizationResult:
     """LU with partial pivoting of a (B, m, n) batch.
 
     Returns packed L\\U factors + (B, min(m, n)) int32 ipiv. Same
@@ -94,9 +98,9 @@ def batched_getrf(a: jnp.ndarray, block: Optional[int] = None,
     """
     assert a.ndim == 3, a.shape
     pol = resolve_policy(policy, use_kernel)
-    nb = _resolve_block(min(a.shape[1], a.shape[2]), block, "getrf")
+    nb = _resolve_block(min(a.shape[1], a.shape[2]), block, "getrf", a.dtype)
     f = jax.vmap(lambda x: lu.getrf(x, block=nb, policy=pol,
-                                    interpret=interpret))
+                                    interpret=interpret, registry=registry))
     packed, piv = f(a)
     return FactorizationResult(packed, piv, None, "getrf", nb)
 
@@ -104,7 +108,8 @@ def batched_getrf(a: jnp.ndarray, block: Optional[int] = None,
 def batched_geqrf(a: jnp.ndarray, block: Optional[int] = None,
                   policy: Optional[str] = None,
                   use_kernel: Optional[bool] = None,
-                  interpret: bool = True) -> FactorizationResult:
+                  interpret: bool = True,
+                  registry=None) -> FactorizationResult:
     """Householder QR of a (B, m, n) batch (packed R/V + tau per item).
 
     Same policy/block contract as :func:`batched_potrf`. Oracle:
@@ -113,9 +118,9 @@ def batched_geqrf(a: jnp.ndarray, block: Optional[int] = None,
     """
     assert a.ndim == 3, a.shape
     pol = resolve_policy(policy, use_kernel)
-    nb = _resolve_block(min(a.shape[1], a.shape[2]), block, "geqrf")
+    nb = _resolve_block(min(a.shape[1], a.shape[2]), block, "geqrf", a.dtype)
     f = jax.vmap(lambda x: qr.geqrf(x, block=nb, policy=pol,
-                                    interpret=interpret))
+                                    interpret=interpret, registry=registry))
     packed, tau = f(a)
     return FactorizationResult(packed, None, tau, "geqrf", nb)
 
@@ -123,7 +128,7 @@ def batched_geqrf(a: jnp.ndarray, block: Optional[int] = None,
 def batched_solve(res: FactorizationResult, b: jnp.ndarray,
                   policy: Optional[str] = None,
                   use_kernel: Optional[bool] = None,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: bool = True, registry=None) -> jnp.ndarray:
     """Solve A_i x_i = b_i for every batch item from a FactorizationResult.
 
     b: (B, n) or (B, n, k). potrf solves the SPD system L L^T x = b; getrf
@@ -138,8 +143,8 @@ def batched_solve(res: FactorizationResult, b: jnp.ndarray,
     pol = resolve_policy(policy, use_kernel)
 
     def trsm(t, r, **kw):
-        return dtrsm(t, r, left=True, policy=pol,
-                     interpret=interpret, **kw)
+        return _trsm(t, r, left=True, policy=pol, interpret=interpret,
+                     registry=registry, **kw)
 
     if res.kind == "potrf":
         def solve1(l, r):

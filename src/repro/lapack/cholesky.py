@@ -1,4 +1,4 @@
-"""DPOTRF - Cholesky factorization (lower), unblocked and blocked.
+"""POTRF - Cholesky factorization (lower), unblocked and blocked.
 
 Blocked right-looking form: POTRF(diag) + TRSM(panel) + SYRK(trailing).
 Every trailing flop dispatches through :mod:`repro.blas.level3`, whose
@@ -7,7 +7,8 @@ kernel configs resolve via :mod:`repro.tune.dispatch`: ``policy="model"``
 the Pallas MXU kernel (interpret mode on CPU); ``"tuned"`` uses the
 registry's measured config. The default panel width comes from
 :func:`repro.core.codesign.plan_factorization` - the same roofline +
-pipeline-depth model that tiles the GEMM itself.
+pipeline-depth model that tiles the GEMM itself. Public front-end:
+:func:`repro.linalg.cholesky`.
 """
 from __future__ import annotations
 
@@ -16,12 +17,17 @@ from typing import Optional
 import jax.numpy as jnp
 from jax import lax
 
-from repro.blas.level3 import dgemm, dtrsm
+from repro.blas.level3 import gemm, trsm
 
 
-def default_block(n: int, kind: str) -> int:
+def default_block(n: int, kind: str, dtype=None) -> int:
+    """Model-picked panel width NB for a size-n factorization.
+
+    ``dtype`` (optional) makes the plan dtype-aware: the roofline terms
+    price operand bytes at that dtype's width (float32 when omitted).
+    """
     from repro.core.codesign import plan_factorization
-    return plan_factorization(n, kind=kind).block
+    return plan_factorization(n, kind=kind, dtype=dtype).block
 
 
 def potrf_unblocked(a: jnp.ndarray) -> jnp.ndarray:
@@ -61,7 +67,7 @@ def potrf_unblocked(a: jnp.ndarray) -> jnp.ndarray:
 
 def potrf(a: jnp.ndarray, block: Optional[int] = None,
           policy: Optional[str] = None, use_kernel: Optional[bool] = None,
-          interpret: bool = True) -> jnp.ndarray:
+          interpret: bool = True, registry=None) -> jnp.ndarray:
     """Blocked right-looking POTRF: panel = hazards, trailing = GEMM.
 
     Parameters
@@ -69,12 +75,15 @@ def potrf(a: jnp.ndarray, block: Optional[int] = None,
     a : (n, n) SPD matrix (float32/float64; NaNs on non-SPD input,
         LAPACK-style).
     block : panel width NB; ``None`` takes
-        :func:`repro.core.codesign.plan_factorization`'s model pick.
+        :func:`repro.core.codesign.plan_factorization`'s model pick at
+        a's dtype.
     policy : {"reference", "model", "tuned"}, optional
         Every trailing update (panel TRSM + trailing GEMM) dispatches
         through :mod:`repro.blas.level3`, so the kernel policies put all
         trailing flops on the Pallas MXU path; ``use_kernel`` is the
         deprecated alias (True == "model").
+    registry : tuned-config registry forwarded to every trailing update
+        (``None`` = the process default).
 
     Returns
     -------
@@ -90,7 +99,7 @@ def potrf(a: jnp.ndarray, block: Optional[int] = None,
     pol = resolve_policy(policy, use_kernel)
     n = a.shape[0]
     if block is None:
-        block = default_block(n, "potrf")
+        block = default_block(n, "potrf", a.dtype)
     if n <= block:
         return potrf_unblocked(a)
     for j0 in range(0, n, block):
@@ -100,12 +109,12 @@ def potrf(a: jnp.ndarray, block: Optional[int] = None,
         if j0 + nb < n:
             l11 = a[j0:j0 + nb, j0:j0 + nb]
             # L21 = A21 L11^{-T}
-            l21 = dtrsm(l11, a[j0 + nb:, j0:j0 + nb].T, lower=True,
-                        unit_diag=False, left=True, policy=pol,
-                        interpret=interpret).T
+            l21 = trsm(l11, a[j0 + nb:, j0:j0 + nb].T, lower=True,
+                       unit_diag=False, left=True, policy=pol,
+                       interpret=interpret, registry=registry).T
             a = a.at[j0 + nb:, j0:j0 + nb].set(l21)
-            # trailing SYRK: A22 -= L21 L21^T (the DGEMM hot path)
+            # trailing SYRK: A22 -= L21 L21^T (the GEMM hot path)
             a = a.at[j0 + nb:, j0 + nb:].add(
-                -dgemm(l21, l21, transb=True, policy=pol,
-                       interpret=interpret))
+                -gemm(l21, l21, transb=True, policy=pol,
+                      interpret=interpret, registry=registry))
     return jnp.tril(a)

@@ -64,7 +64,8 @@ def _shard_batched(mesh: Mesh, fn, a: jnp.ndarray, n_out: int):
 def batched_potrf(a: jnp.ndarray, mesh: Mesh, block: Optional[int] = None,
                   policy: Optional[str] = None,
                   use_kernel: Optional[bool] = None,
-                  interpret: bool = True) -> FactorizationResult:
+                  interpret: bool = True,
+                  registry=None) -> FactorizationResult:
     """Cholesky of a (B, n, n) SPD batch, batch-sharded over ``mesh``.
 
     Parameters
@@ -90,12 +91,13 @@ def batched_potrf(a: jnp.ndarray, mesh: Mesh, block: Optional[int] = None,
     """
     assert a.ndim == 3 and a.shape[1] == a.shape[2], a.shape
     pol = resolve_policy(policy, use_kernel)
-    nb = _resolve_block(a.shape[1], block, "potrf")
+    nb = _resolve_block(a.shape[1], block, "potrf", a.dtype)
     a_p, b0 = _pad_batch(a, _ndev(mesh))
 
     def local(x):
         return (_batched.batched_potrf(x, block=nb, policy=pol,
-                                       interpret=interpret).factors,)
+                                       interpret=interpret,
+                                       registry=registry).factors,)
 
     (factors,) = _shard_batched(mesh, local, a_p, 1)
     return FactorizationResult(factors[:b0], None, None, "potrf", nb)
@@ -104,7 +106,8 @@ def batched_potrf(a: jnp.ndarray, mesh: Mesh, block: Optional[int] = None,
 def batched_getrf(a: jnp.ndarray, mesh: Mesh, block: Optional[int] = None,
                   policy: Optional[str] = None,
                   use_kernel: Optional[bool] = None,
-                  interpret: bool = True) -> FactorizationResult:
+                  interpret: bool = True,
+                  registry=None) -> FactorizationResult:
     """LU with partial pivoting of a (B, m, n) batch, batch-sharded.
 
     Shape/dtype/policy contract matches
@@ -114,12 +117,12 @@ def batched_getrf(a: jnp.ndarray, mesh: Mesh, block: Optional[int] = None,
     """
     assert a.ndim == 3, a.shape
     pol = resolve_policy(policy, use_kernel)
-    nb = _resolve_block(min(a.shape[1], a.shape[2]), block, "getrf")
+    nb = _resolve_block(min(a.shape[1], a.shape[2]), block, "getrf", a.dtype)
     a_p, b0 = _pad_batch(a, _ndev(mesh))
 
     def local(x):
         r = _batched.batched_getrf(x, block=nb, policy=pol,
-                                   interpret=interpret)
+                                   interpret=interpret, registry=registry)
         return r.factors, r.pivots
 
     factors, piv = _shard_batched(mesh, local, a_p, 2)
@@ -129,7 +132,8 @@ def batched_getrf(a: jnp.ndarray, mesh: Mesh, block: Optional[int] = None,
 def batched_geqrf(a: jnp.ndarray, mesh: Mesh, block: Optional[int] = None,
                   policy: Optional[str] = None,
                   use_kernel: Optional[bool] = None,
-                  interpret: bool = True) -> FactorizationResult:
+                  interpret: bool = True,
+                  registry=None) -> FactorizationResult:
     """Householder QR of a (B, m, n) batch, batch-sharded.
 
     Contract matches :func:`repro.lapack.batched.batched_geqrf` (packed
@@ -137,12 +141,12 @@ def batched_geqrf(a: jnp.ndarray, mesh: Mesh, block: Optional[int] = None,
     """
     assert a.ndim == 3, a.shape
     pol = resolve_policy(policy, use_kernel)
-    nb = _resolve_block(min(a.shape[1], a.shape[2]), block, "geqrf")
+    nb = _resolve_block(min(a.shape[1], a.shape[2]), block, "geqrf", a.dtype)
     a_p, b0 = _pad_batch(a, _ndev(mesh))
 
     def local(x):
         r = _batched.batched_geqrf(x, block=nb, policy=pol,
-                                   interpret=interpret)
+                                   interpret=interpret, registry=registry)
         return r.factors, r.tau
 
     factors, tau = _shard_batched(mesh, local, a_p, 2)
@@ -152,7 +156,7 @@ def batched_geqrf(a: jnp.ndarray, mesh: Mesh, block: Optional[int] = None,
 def batched_solve(res: FactorizationResult, b: jnp.ndarray, mesh: Mesh,
                   policy: Optional[str] = None,
                   use_kernel: Optional[bool] = None,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: bool = True, registry=None) -> jnp.ndarray:
     """Solve A_i x_i = b_i for a batch-sharded FactorizationResult.
 
     ``res`` is a result of any driver in this module (or the single-device
@@ -210,7 +214,7 @@ def batched_solve(res: FactorizationResult, b: jnp.ndarray, mesh: Mesh,
         lt = meta[0] if (tau is not None and piv is None) else None
         lres = FactorizationResult(f, lp, lt, res.kind, res.block)
         return _batched.batched_solve(lres, r, policy=pol,
-                                      interpret=interpret)
+                                      interpret=interpret, registry=registry)
 
     x = shard_map(local, mesh=mesh, in_specs=tuple(in_specs),
                   out_specs=spec, check_rep=False)(*operands)

@@ -1,4 +1,4 @@
-"""DGETRF - LU with partial pivoting, unblocked and blocked, in JAX.
+"""GETRF - LU with partial pivoting, unblocked and blocked, in JAX.
 
 Section-4.2 workload #2: the column-scaling divisions are the serial divider
 stream ("the occurrence of division ... is similar to the square root/divider
@@ -11,7 +11,7 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 from jax import lax
 
-from repro.blas.level3 import dgemm, dtrsm
+from repro.blas.level3 import gemm, trsm
 from repro.lapack.cholesky import default_block
 
 
@@ -58,14 +58,17 @@ def getrf_unblocked(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 def getrf(a: jnp.ndarray, block: Optional[int] = None,
           policy: Optional[str] = None, use_kernel: Optional[bool] = None,
-          interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+          interpret: bool = True,
+          registry=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Blocked right-looking LU with partial pivoting (LAPACK DGETRF).
 
     Parameters
     ----------
     a : (m, n) matrix (float32/float64).
     block : panel width NB; ``None`` takes
-        ``plan_factorization(kind="getrf")``'s model pick.
+        ``plan_factorization(kind="getrf")``'s model pick at a's dtype.
+    registry : tuned-config registry forwarded to every trailing update
+        (``None`` = the process default).
     policy : {"reference", "model", "tuned"}, optional
         Trailing updates (TRSM for U12, GEMM for A22) dispatch through
         :mod:`repro.blas.level3`, resolved by :mod:`repro.tune.dispatch`:
@@ -90,7 +93,7 @@ def getrf(a: jnp.ndarray, block: Optional[int] = None,
     n, nc = a.shape
     kmax = min(n, nc)
     if block is None:
-        block = default_block(kmax, "getrf")
+        block = default_block(kmax, "getrf", a.dtype)
     if kmax <= block:
         return getrf_unblocked(a)
     pivs = []
@@ -123,13 +126,13 @@ def getrf(a: jnp.ndarray, block: Optional[int] = None,
         if j0 + nb < nc:
             # U12 = L11^{-1} A12 ; A22 -= L21 U12  (trsm + GEMM)
             l11 = a[j0:j0 + nb, j0:j0 + nb]
-            u12 = dtrsm(l11, a[j0:j0 + nb, j0 + nb:], lower=True,
-                        unit_diag=True, left=True, policy=pol,
-                        interpret=interpret)
+            u12 = trsm(l11, a[j0:j0 + nb, j0 + nb:], lower=True,
+                       unit_diag=True, left=True, policy=pol,
+                       interpret=interpret, registry=registry)
             a = a.at[j0:j0 + nb, j0 + nb:].set(u12)
             a = a.at[j0 + nb:, j0 + nb:].add(
-                -dgemm(a[j0 + nb:, j0:j0 + nb], u12, policy=pol,
-                       interpret=interpret))
+                -gemm(a[j0 + nb:, j0:j0 + nb], u12, policy=pol,
+                      interpret=interpret, registry=registry))
     return a, jnp.concatenate(pivs)
 
 

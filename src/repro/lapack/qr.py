@@ -1,4 +1,4 @@
-"""DGEQRF - Householder QR, unblocked and blocked (compact-WY), in JAX.
+"""GEQRF - Householder QR, unblocked and blocked (compact-WY), in JAX.
 
 The paper's section-4.2 workload: the panel path carries the serial
 sqrt (column norm) -> div (vector scale) hazard chain; the trailing update is
@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.blas.level3 import dgemm
+from repro.blas.level3 import gemm
 from repro.lapack.cholesky import default_block
 
 
@@ -101,7 +101,8 @@ def _larft(v: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
 
 def geqrf(a: jnp.ndarray, block: Optional[int] = None,
           policy: Optional[str] = None, use_kernel: Optional[bool] = None,
-          interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+          interpret: bool = True,
+          registry=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Blocked Householder QR, compact WY (LAPACK DGEQRF).
 
     Python loop over static panel boundaries -> still a single jittable
@@ -111,10 +112,12 @@ def geqrf(a: jnp.ndarray, block: Optional[int] = None,
     ----------
     a : (m, n) matrix (float32/float64).
     block : panel width NB; ``None`` takes
-        ``plan_factorization(kind="geqrf")``'s model pick.
+        ``plan_factorization(kind="geqrf")``'s model pick at a's dtype.
+    registry : tuned-config registry forwarded to every trailing update
+        (``None`` = the process default).
     policy : {"reference", "model", "tuned"}, optional
         The trailing compact-WY triple product is three GEMMs dispatched
-        through :func:`repro.blas.level3.dgemm`, resolved by
+        through :func:`repro.blas.level3.gemm`, resolved by
         :mod:`repro.tune.dispatch` (``"model"`` - the deprecated
         ``use_kernel=True`` - is the Pallas MXU kernel, ``"tuned"`` the
         registry config).
@@ -135,7 +138,7 @@ def geqrf(a: jnp.ndarray, block: Optional[int] = None,
     m, n = a.shape
     kmax = min(m, n)
     if block is None:
-        block = default_block(kmax, "geqrf")
+        block = default_block(kmax, "geqrf", a.dtype)
     if kmax <= block:
         return geqrf_unblocked(a)
     taus = []
@@ -167,12 +170,12 @@ def geqrf(a: jnp.ndarray, block: Optional[int] = None,
                           1.0, V)
             T = _larft(V, tau)
             C = a[:, j0 + nb:]
-            W = dgemm(V, C, transa=True, policy=pol,
-                      interpret=interpret)            # (nb, rest)   GEMM
+            W = gemm(V, C, transa=True, policy=pol, interpret=interpret,
+                     registry=registry)               # (nb, rest)   GEMM
             W = T.T @ W                               # small (nb x nb) GEMM
             a = a.at[:, j0 + nb:].set(
-                C - dgemm(V, W, policy=pol,
-                          interpret=interpret))       # GEMM
+                C - gemm(V, W, policy=pol, interpret=interpret,
+                         registry=registry))          # GEMM
     return a, jnp.concatenate(taus)
 
 
@@ -198,12 +201,13 @@ def q_from_geqrf(packed: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
 
 def qr(a: jnp.ndarray, block: Optional[int] = None,
        policy: Optional[str] = None, use_kernel: Optional[bool] = None,
-       interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+       interpret: bool = True,
+       registry=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Convenience thin-QR: returns (Q (m, min(m,n)), R (min(m,n), n))
     from :func:`geqrf` + :func:`q_from_geqrf`; same
     block/policy/``use_kernel`` contract as :func:`geqrf`."""
     packed, tau = geqrf(a, block=block, policy=policy, use_kernel=use_kernel,
-                        interpret=interpret)
+                        interpret=interpret, registry=registry)
     q = q_from_geqrf(packed, tau)
     r = jnp.triu(packed)[: min(a.shape), :]
     return q[:, : min(a.shape)], r

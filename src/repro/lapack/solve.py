@@ -1,4 +1,4 @@
-"""DGESV-style dense solvers built on the factorizations.
+"""GESV-style dense solvers built on the factorizations.
 
 Both drivers thread the tuner policy (``reference`` | ``model`` |
 ``tuned``; ``use_kernel`` deprecated alias) through every factorization
@@ -11,14 +11,14 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.blas.level3 import dtrsm
+from repro.blas.level3 import trsm
 from repro.lapack.lu import apply_ipiv, getrf
 from repro.lapack.qr import geqrf, q_from_geqrf
 
 
 def gesv(a: jnp.ndarray, b: jnp.ndarray, block: Optional[int] = None,
          policy: Optional[str] = None, use_kernel: Optional[bool] = None,
-         interpret: bool = True) -> jnp.ndarray:
+         interpret: bool = True, registry=None) -> jnp.ndarray:
     """Solve A X = B via LU with partial pivoting (LAPACK DGESV).
 
     Parameters
@@ -40,19 +40,20 @@ def gesv(a: jnp.ndarray, b: jnp.ndarray, block: Optional[int] = None,
     """
     from repro.tune.policy import resolve_policy
     pol = resolve_policy(policy, use_kernel)
-    packed, piv = getrf(a, block=block, policy=pol, interpret=interpret)
+    packed, piv = getrf(a, block=block, policy=pol, interpret=interpret,
+                        registry=registry)
     rhs = b if b.ndim == 2 else b[:, None]
     rhs = apply_ipiv(rhs, piv)
-    y = dtrsm(packed, rhs, lower=True, unit_diag=True, left=True,
-              policy=pol, interpret=interpret)
-    x = dtrsm(packed, y, lower=False, unit_diag=False, left=True,
-              policy=pol, interpret=interpret)
+    y = trsm(packed, rhs, lower=True, unit_diag=True, left=True,
+             policy=pol, interpret=interpret, registry=registry)
+    x = trsm(packed, y, lower=False, unit_diag=False, left=True,
+             policy=pol, interpret=interpret, registry=registry)
     return x if b.ndim == 2 else x[:, 0]
 
 
 def lstsq_qr(a: jnp.ndarray, b: jnp.ndarray, block: Optional[int] = None,
              policy: Optional[str] = None, use_kernel: Optional[bool] = None,
-             interpret: bool = True) -> jnp.ndarray:
+             interpret: bool = True, registry=None) -> jnp.ndarray:
     """Least-squares min ||A x - b|| via QR: x = R^{-1} Q^T b.
 
     Parameters
@@ -74,11 +75,12 @@ def lstsq_qr(a: jnp.ndarray, b: jnp.ndarray, block: Optional[int] = None,
     from repro.tune.policy import resolve_policy
     pol = resolve_policy(policy, use_kernel)
     m, n = a.shape
-    packed, tau = geqrf(a, block=block, policy=pol, interpret=interpret)
+    packed, tau = geqrf(a, block=block, policy=pol, interpret=interpret,
+                        registry=registry)
     q = q_from_geqrf(packed, tau)
     rhs = b if b.ndim == 2 else b[:, None]
     qtb = q.T @ rhs
     r = jnp.triu(packed)[:n, :n]
-    x = dtrsm(r, qtb[:n], lower=False, unit_diag=False, left=True,
-              policy=pol, interpret=interpret)
+    x = trsm(r, qtb[:n], lower=False, unit_diag=False, left=True,
+             policy=pol, interpret=interpret, registry=registry)
     return x if b.ndim == 2 else x[:, 0]

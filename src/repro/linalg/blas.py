@@ -1,0 +1,261 @@
+"""dtype-generic BLAS front-end, routed by the active ExecutionContext.
+
+Every routine here:
+
+* accepts float32/float64 operands (bfloat16 storage where the kernel
+  path supports it) and an explicit ``dtype=`` cast,
+* resolves policy / registry / interpret / accumulation dtype from the
+  active :class:`repro.linalg.ExecutionContext` (``context=`` overrides
+  per call),
+* routes to the distributed backend when the context carries a mesh
+  (``gemm`` -> SUMMA :func:`repro.blas.distributed.pdgemm`, ``trsm`` ->
+  :func:`repro.blas.distributed.pdtrsm`, ``syrk`` through ``pdgemm``);
+  routines without a mesh backend (vector ops, ``gemv``, batched GEMM)
+  run locally under any context,
+* supports a leading batch axis on the matrix routines (3-D operands are
+  vmapped over the local path).
+
+The numeric cores live in :mod:`repro.blas.level1`/``level2``/``level3``;
+this layer only resolves the context and casts dtypes, so a call under the
+default context is bit-identical to the deprecated d-prefixed routine it
+replaces.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.blas import level1 as _l1
+from repro.blas import level2 as _l2
+from repro.blas import level3 as _l3
+from repro.linalg.context import (current, resolved_accum_dtype,
+                                  resolved_interpret, resolved_mesh,
+                                  resolved_policy, resolved_registry)
+
+
+def _dtypes(ctx, dtype, *arrays):
+    """(storage dtype, compute dtype) for this call, or (None, None).
+
+    (None, None) - the passthrough fast path - means no explicit ``dtype``
+    and no context accumulation dtype: operands reach the numeric core
+    untouched, so results are bitwise what the core produces (the
+    deprecation shims rely on this). Otherwise: storage = the explicit
+    ``dtype`` or the result type of *all* operands (accumulands like
+    ``c``/``y`` participate in the promotion, as they would in plain jnp);
+    compute = the context's accumulation dtype (upcast) or the storage
+    dtype.
+    """
+    acc = resolved_accum_dtype(ctx)
+    if dtype is None and acc is None:
+        return None, None
+    arrs = [a for a in arrays if a is not None]
+    store = jnp.dtype(dtype) if dtype is not None else jnp.result_type(*arrs)
+    comp = jnp.dtype(acc) if acc is not None else store
+    return store, comp
+
+
+def _cast(x, to):
+    if x is None:
+        return None
+    x = jnp.asarray(x)
+    if to is None or x.dtype == to:
+        return x
+    return x.astype(to)
+
+
+def _kw(ctx):
+    """Context fields -> the kwargs every numeric core takes."""
+    return dict(policy=resolved_policy(ctx), interpret=resolved_interpret(ctx),
+                registry=resolved_registry(ctx))
+
+
+# -------------------------------- level 3 -----------------------------------
+
+def gemm(a, b, c=None, alpha=1.0, beta=0.0, transa: bool = False,
+         transb: bool = False, dtype=None, context=None) -> jnp.ndarray:
+    """C <- alpha * op(A) op(B) + beta * C, any supported dtype.
+
+    2-D operands run the policy-dispatched local kernel path; with a mesh
+    in the active context they run SUMMA ``pdgemm`` instead. 3-D operands
+    (leading batch axis) vmap the local path. Oracle:
+    ``tests/test_linalg.py`` / ``tests/test_differential_blas.py``.
+    """
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, a, b, c)
+    a_, b_, c_ = _cast(a, comp), _cast(b, comp), _cast(c, comp)
+    if a_.ndim == 3:
+        kw = _kw(ctx)
+        f = lambda x, y: _l3.gemm(x, y, transa=transa, transb=transb, **kw)
+        out = jax.vmap(f)(a_, b_)
+        out = alpha * out
+        if c_ is not None:
+            out = out + beta * c_
+        return _cast(out, store)
+    mesh = resolved_mesh(ctx)
+    if mesh is not None:
+        from repro.blas import distributed as _dist
+        op_a = a_.T if transa else a_
+        op_b = b_.T if transb else b_
+        out = _dist.pdgemm(op_a, op_b, mesh, c=c_, alpha=alpha, beta=beta,
+                           **_kw(ctx))
+        return _cast(out, store)
+    out = _l3.gemm(a_, b_, c=c_, alpha=alpha, beta=beta, transa=transa,
+                   transb=transb, **_kw(ctx))
+    return _cast(out, store)
+
+
+def syrk(a, c=None, alpha=1.0, beta=0.0, lower: bool = True,
+         trans: bool = False, dtype=None, context=None) -> jnp.ndarray:
+    """C <- alpha op(A) op(A)^T + beta C, symmetric output.
+
+    Under a mesh the product runs through SUMMA ``pdgemm`` before the
+    triangle mirror; locally it shares the GEMM kernel path (and its
+    registry entries).
+    """
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, a, c)
+    a_, c_ = _cast(a, comp), _cast(c, comp)
+    mesh = resolved_mesh(ctx)
+    if mesh is not None and a_.ndim == 2:
+        from repro.blas import distributed as _dist
+        op_a = a_.T if trans else a_
+        full = alpha * _dist.pdgemm(op_a, op_a.T, mesh, **_kw(ctx))
+        if c_ is not None:
+            full = full + beta * c_
+        return _cast(_l3.mirror_triangle(full, lower), store)
+    kw = _kw(ctx)
+    if a_.ndim == 3:
+        f = lambda x, y: _l3.syrk(x, c=y, alpha=alpha, beta=beta,
+                                  lower=lower, trans=trans, **kw)
+        out = jax.vmap(f)(a_, c_) if c_ is not None else jax.vmap(
+            lambda x: _l3.syrk(x, alpha=alpha, lower=lower, trans=trans,
+                               **kw))(a_)
+        return _cast(out, store)
+    out = _l3.syrk(a_, c=c_, alpha=alpha, beta=beta, lower=lower,
+                   trans=trans, **kw)
+    return _cast(out, store)
+
+
+def trsm(a, b, lower: bool = True, unit_diag: bool = False,
+         left: bool = True, block: Optional[int] = None, dtype=None,
+         context=None) -> jnp.ndarray:
+    """Solve op(T) X = B (or X op(T) = B), blocked, any supported dtype.
+
+    Under a mesh the right-hand-side columns are sharded via ``pdtrsm``;
+    locally the off-diagonal GEMM updates follow the context policy onto
+    the kernel path. 3-D operands vmap the local path.
+    """
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, a, b)
+    a_, b_ = _cast(a, comp), _cast(b, comp)
+    kw = _kw(ctx)
+    if a_.ndim == 3:
+        f = lambda t, r: _l3.trsm(t, r, lower=lower, unit_diag=unit_diag,
+                                  left=left, block=block, **kw)
+        return _cast(jax.vmap(f)(a_, b_), store)
+    mesh = resolved_mesh(ctx)
+    if mesh is not None:
+        from repro.blas import distributed as _dist
+        out = _dist.pdtrsm(a_, b_, mesh, lower=lower, unit_diag=unit_diag,
+                           left=left, block=block, **kw)
+        return _cast(out, store)
+    out = _l3.trsm(a_, b_, lower=lower, unit_diag=unit_diag, left=left,
+                   block=block, **kw)
+    return _cast(out, store)
+
+
+# -------------------------------- level 2 -----------------------------------
+
+def gemv(a, x, y=None, alpha=1.0, beta=0.0, trans: bool = False,
+         dtype=None, context=None) -> jnp.ndarray:
+    """y <- alpha*op(A) x + beta*y. Kernel policies run op(A) x through
+    the Pallas GEMM path (shared registry entries); no mesh backend -
+    always local. 3-D a / 2-D x vmap over the batch axis."""
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, a, x, y)
+    a_, x_, y_ = _cast(a, comp), _cast(x, comp), _cast(y, comp)
+    kw = _kw(ctx)
+    if a_.ndim == 3:
+        f = lambda m, v: _l2.gemv(m, v, trans=trans, **kw)
+        out = alpha * jax.vmap(f)(a_, x_)
+        if y_ is not None:
+            out = out + beta * y_
+        return _cast(out, store)
+    out = _l2.gemv(a_, x_, y=y_, alpha=alpha, beta=beta, trans=trans, **kw)
+    return _cast(out, store)
+
+
+def ger(alpha, x, y, a, dtype=None, context=None) -> jnp.ndarray:
+    """A <- alpha * x y^T + A (rank-1 update, pure jnp)."""
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, x, y, a)
+    out = _l2.ger(alpha, _cast(x, comp), _cast(y, comp), _cast(a, comp))
+    return _cast(out, store)
+
+
+def trsv(a, b, lower: bool = True, unit_diag: bool = False, dtype=None,
+         context=None) -> jnp.ndarray:
+    """Solve op(T) x = b via the row-sequential scan (the divider-hazard
+    chain); the blocked, policy-dispatched form is :func:`trsm`."""
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, a, b)
+    out = _l2.trsv(_cast(a, comp), _cast(b, comp), lower=lower,
+                   unit_diag=unit_diag)
+    return _cast(out, store)
+
+
+# -------------------------------- level 1 -----------------------------------
+
+def dot(x, y, schedule: str = "tree", accumulators: int = 8, dtype=None,
+        context=None) -> jnp.ndarray:
+    """Inner product with an explicit reduction schedule
+    (tree/sequential/strided) - see :func:`repro.blas.level1.dot`.
+    ``accum_dtype`` in the context upcasts the whole reduction."""
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, x, y)
+    out = _l1.dot(_cast(x, comp), _cast(y, comp), schedule=schedule,
+                  accumulators=accumulators)
+    return _cast(out, store)
+
+
+def axpy(alpha, x, y, dtype=None, context=None) -> jnp.ndarray:
+    """y <- alpha*x + y."""
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, x, y)
+    return _cast(_l1.axpy(alpha, _cast(x, comp), _cast(y, comp)), store)
+
+
+def scal(alpha, x, dtype=None, context=None) -> jnp.ndarray:
+    """x <- alpha*x."""
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, x)
+    return _cast(_l1.scal(alpha, _cast(x, comp)), store)
+
+
+def nrm2(x, dtype=None, context=None) -> jnp.ndarray:
+    """Overflow-safe Euclidean norm."""
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, x)
+    return _cast(_l1.nrm2(_cast(x, comp)), store)
+
+
+def asum(x, dtype=None, context=None) -> jnp.ndarray:
+    """Sum of absolute values."""
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, x)
+    return _cast(_l1.asum(_cast(x, comp)), store)
+
+
+def iamax(x, context=None) -> jnp.ndarray:
+    """Index of the first max-|x| element (0-based int; no dtype cast)."""
+    return _l1.iamax(jnp.asarray(x))
+
+
+def rot(x, y, c, s, dtype=None, context=None):
+    """Apply a Givens rotation: (c*x + s*y, c*y - s*x)."""
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, x, y)
+    gx, gy = _l1.rot(_cast(x, comp), _cast(y, comp), c, s)
+    return _cast(gx, store), _cast(gy, store)

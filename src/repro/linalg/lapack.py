@@ -1,0 +1,192 @@
+"""dtype-generic LAPACK front-end, routed by the active ExecutionContext.
+
+``cholesky`` / ``lu`` / ``qr`` / ``solve`` (+ ``lstsq``) accept one matrix
+(2-D) or a leading batch axis (3-D, delegated to the batched drivers);
+the explicit ``batched_*`` forms return the shared
+:class:`repro.lapack.batched.FactorizationResult` pytree. When the active
+context carries a mesh, the batched forms route to the batch-sharded
+drivers in :mod:`repro.lapack.distributed`; single-matrix factorizations
+run locally under any context (there is no distributed single-matrix
+path), with their trailing updates still policy-dispatched through
+:mod:`repro.tune`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.lapack import batched as _batched
+from repro.lapack import cholesky as _chol
+from repro.lapack import lu as _lu
+from repro.lapack import qr as _qr
+from repro.lapack import solve as _solve
+from repro.lapack.batched import FactorizationResult
+from repro.linalg.blas import _cast, _dtypes, _kw
+from repro.linalg.context import current, resolved_mesh
+
+
+def _batched_route(ctx, local_fn, dist_fn, a, **kw):
+    mesh = resolved_mesh(ctx)
+    if mesh is not None:
+        return dist_fn(a, mesh, **kw)
+    return local_fn(a, **kw)
+
+
+def _cast_result(res: FactorizationResult, store) -> FactorizationResult:
+    factors = _cast(res.factors, store)
+    tau = None if res.tau is None else _cast(res.tau, store)
+    return dataclasses.replace(res, factors=factors, tau=tau)
+
+
+# ------------------------------ factorizations ------------------------------
+
+def cholesky(a, block: Optional[int] = None, dtype=None,
+             context=None) -> jnp.ndarray:
+    """Lower-triangular Cholesky factor of an SPD matrix (or batch).
+
+    2-D input returns L with A = L L^T; 3-D input returns the (B, n, n)
+    factor batch (via :func:`batched_cholesky`, mesh-routed). Non-SPD
+    input produces NaNs, LAPACK-style. Oracle: ``tests/test_linalg.py``.
+    """
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, a)
+    a_ = _cast(a, comp)
+    if a_.ndim == 3:
+        return _cast(batched_cholesky(a_, block=block, context=ctx).factors,
+                     store)
+    out = _chol.potrf(a_, block=block, **_kw(ctx))
+    return _cast(out, store)
+
+
+def lu(a, block: Optional[int] = None, dtype=None,
+       context=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """LU with partial pivoting: (packed L\\U, int32 ipiv).
+
+    3-D input factorizes the batch (mesh-routed) and returns
+    ((B, m, n) packed, (B, k) ipiv).
+    """
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, a)
+    a_ = _cast(a, comp)
+    if a_.ndim == 3:
+        res = batched_lu(a_, block=block, context=ctx)
+        return _cast(res.factors, store), res.pivots
+    packed, piv = _lu.getrf(a_, block=block, **_kw(ctx))
+    return _cast(packed, store), piv
+
+
+def qr(a, block: Optional[int] = None, dtype=None,
+       context=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Thin QR: (Q (m, min(m, n)), R (min(m, n), n)).
+
+    3-D input returns batched (Q, R) via :func:`batched_qr` (mesh-routed)
+    plus a local per-item Q accumulation.
+    """
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, a)
+    a_ = _cast(a, comp)
+    if a_.ndim == 3:
+        res = batched_qr(a_, block=block, context=ctx)
+        kmin = min(a_.shape[1], a_.shape[2])
+
+        def one(packed, tau):
+            q = _qr.q_from_geqrf(packed, tau)
+            return q[:, :kmin], jnp.triu(packed)[:kmin, :]
+
+        q, r = jax.vmap(one)(res.factors, res.tau)
+        return _cast(q, store), _cast(r, store)
+    q, r = _qr.qr(a_, block=block, **_kw(ctx))
+    return _cast(q, store), _cast(r, store)
+
+
+def solve(a, b, block: Optional[int] = None, dtype=None,
+          context=None) -> jnp.ndarray:
+    """Solve A X = B via pivoted LU (LAPACK GESV).
+
+    2-D ``a`` solves one system; 3-D ``a`` factorizes and solves the batch
+    (``b`` (B, n) or (B, n, k)), routed to the batch-sharded drivers under
+    a mesh context.
+    """
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, a, b)
+    a_, b_ = _cast(a, comp), _cast(b, comp)
+    if a_.ndim == 3:
+        res = batched_lu(a_, block=block, context=ctx)
+        return _cast(batched_solve(res, b_, context=ctx), store)
+    out = _solve.gesv(a_, b_, block=block, **_kw(ctx))
+    return _cast(out, store)
+
+
+def lstsq(a, b, block: Optional[int] = None, dtype=None,
+          context=None) -> jnp.ndarray:
+    """Least-squares min ||A x - b|| via QR (m >= n, full column rank).
+
+    3-D ``a`` solves the batch through :func:`batched_qr` +
+    :func:`batched_solve` (mesh-routed under a mesh context).
+    """
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, a, b)
+    a_, b_ = _cast(a, comp), _cast(b, comp)
+    if a_.ndim == 3:
+        res = batched_qr(a_, block=block, context=ctx)
+        return _cast(batched_solve(res, b_, context=ctx), store)
+    out = _solve.lstsq_qr(a_, b_, block=block, **_kw(ctx))
+    return _cast(out, store)
+
+
+# ------------------------------ batched drivers -----------------------------
+
+def batched_cholesky(a, block: Optional[int] = None, dtype=None,
+                     context=None) -> FactorizationResult:
+    """Cholesky of a (B, n, n) SPD batch -> FactorizationResult("potrf").
+
+    Routes to :func:`repro.lapack.distributed.batched_potrf` when the
+    context carries a mesh (batch axis sharded, zero collectives).
+    """
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, a)
+    from repro.lapack import distributed as _dist
+    res = _batched_route(ctx, _batched.batched_potrf, _dist.batched_potrf,
+                         _cast(a, comp), block=block, **_kw(ctx))
+    return _cast_result(res, store)
+
+
+def batched_lu(a, block: Optional[int] = None, dtype=None,
+               context=None) -> FactorizationResult:
+    """Pivoted LU of a (B, m, n) batch -> FactorizationResult("getrf")."""
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, a)
+    from repro.lapack import distributed as _dist
+    res = _batched_route(ctx, _batched.batched_getrf, _dist.batched_getrf,
+                         _cast(a, comp), block=block, **_kw(ctx))
+    return _cast_result(res, store)
+
+
+def batched_qr(a, block: Optional[int] = None, dtype=None,
+               context=None) -> FactorizationResult:
+    """Householder QR of a (B, m, n) batch -> FactorizationResult("geqrf")."""
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, a)
+    from repro.lapack import distributed as _dist
+    res = _batched_route(ctx, _batched.batched_geqrf, _dist.batched_geqrf,
+                         _cast(a, comp), block=block, **_kw(ctx))
+    return _cast_result(res, store)
+
+
+def batched_solve(res: FactorizationResult, b, dtype=None,
+                  context=None) -> jnp.ndarray:
+    """Solve A_i x_i = b_i from any FactorizationResult (mesh-routed)."""
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, res.factors, b)
+    res_ = _cast_result(res, comp)
+    b_ = _cast(b, comp)
+    mesh = resolved_mesh(ctx)
+    if mesh is not None:
+        from repro.lapack import distributed as _dist
+        out = _dist.batched_solve(res_, b_, mesh, **_kw(ctx))
+    else:
+        out = _batched.batched_solve(res_, b_, **_kw(ctx))
+    return _cast(out, store)

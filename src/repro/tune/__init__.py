@@ -16,7 +16,9 @@ This package is that loop, persisted:
 
 Policy semantics
 ================
-Every BLAS-3 / blocked-LAPACK entry point takes ``policy``:
+The public way to pick a policy is the :mod:`repro.linalg`
+ExecutionContext (``linalg.use(policy=...)``); underneath, every BLAS-3 /
+blocked-LAPACK numeric core takes ``policy``:
 
 ``"reference"``
     Plain jnp (``a @ b``, scan substitutions). No Pallas, no registry.
@@ -74,11 +76,12 @@ from repro.tune import dispatch, policy, registry, search
 from repro.tune.dispatch import Resolution, dispatch as dispatch_op, resolve
 from repro.tune.policy import POLICIES, default_policy, resolve_policy
 from repro.tune.registry import KernelConfig, Registry, default_registry
-from repro.tune.search import tune_gemm, tune_trsm
+from repro.tune.search import (seed_registry_from_model, tune_gemm,
+                               tune_trsm)
 
 __all__ = [
     "POLICIES", "KernelConfig", "Registry", "Resolution",
     "default_policy", "default_registry", "dispatch", "dispatch_op",
     "policy", "registry", "resolve", "resolve_policy", "search",
-    "tune_gemm", "tune_trsm",
+    "seed_registry_from_model", "tune_gemm", "tune_trsm",
 ]

@@ -188,8 +188,8 @@ def dispatch(op: str, *args, policy: Optional[str] = None,
     if op == "trsm":
         a, b = args
         from repro.blas import level3               # lazy: avoid import cycle
-        return level3.dtrsm(a, b, policy=policy, use_kernel=use_kernel,
-                            interpret=interpret, registry=registry, **kw)
+        return level3.trsm(a, b, policy=policy, use_kernel=use_kernel,
+                           interpret=interpret, registry=registry, **kw)
     if op == "pdgemm":
         a, b = args
         from repro.blas import distributed          # lazy: avoid import cycle

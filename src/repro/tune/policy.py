@@ -19,6 +19,7 @@ KERNEL_POLICIES = ("model", "tuned")
 
 _ENV_POLICY = "REPRO_TUNE_POLICY"
 _warned_use_kernel = False
+_warned_use_pallas = False
 
 
 def default_policy() -> str:
@@ -32,14 +33,16 @@ def default_policy() -> str:
 
 
 def resolve_policy(policy: Optional[str] = None,
-                   use_kernel: Optional[bool] = None) -> str:
-    """Collapse (policy, deprecated use_kernel) into one policy string.
+                   use_kernel: Optional[bool] = None,
+                   use_pallas: Optional[bool] = None) -> str:
+    """Collapse (policy, deprecated use_kernel/use_pallas) into one policy.
 
-    An explicit ``policy`` always wins. ``use_kernel`` maps True ->
-    ``"model"`` and False -> ``"reference"`` (its exact pre-tuner
-    semantics). With neither given, :func:`default_policy` applies.
+    An explicit ``policy`` always wins. ``use_kernel`` (and its older
+    spelling ``use_pallas``) map True -> ``"model"`` and False ->
+    ``"reference"`` (their exact pre-tuner semantics); each alias warns
+    once per process. With none given, :func:`default_policy` applies.
     """
-    global _warned_use_kernel
+    global _warned_use_kernel, _warned_use_pallas
     if policy is not None:
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; expected one of "
@@ -53,6 +56,14 @@ def resolve_policy(policy: Optional[str] = None,
                 stacklevel=3)
             _warned_use_kernel = True
         return "model" if use_kernel else "reference"
+    if use_pallas is not None:
+        if not _warned_use_pallas:
+            warnings.warn(
+                "use_pallas is deprecated; pass policy='model' (True) or "
+                "policy='reference' (False) instead", DeprecationWarning,
+                stacklevel=3)
+            _warned_use_pallas = True
+        return "model" if use_pallas else "reference"
     return default_policy()
 
 

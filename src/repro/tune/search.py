@@ -152,6 +152,39 @@ def tune_gemm(m: int, n: int, k: int, dtype=jnp.float32,
                         "bk": model_pick.bk})
 
 
+def seed_registry_from_model(registry: Optional[Registry] = None,
+                             gemm_shapes: Sequence[Tuple[int, int, int]] = (),
+                             trsm_shapes: Sequence[Tuple[int, int]] = (),
+                             dtypes: Sequence = (jnp.float32,),
+                             backend: Optional[str] = None) -> int:
+    """Record the *model's* pick for every (op, shape, dtype) as a real
+    registry entry (``source="model"``, unmeasured).
+
+    This is how non-swept dtypes (float64, bfloat16) get first-class
+    registry entries instead of silently falling back at lookup time:
+    the analytic planners are dtype-aware (operand bytes change the VMEM
+    and roofline terms), so each dtype gets its own seeded config, and a
+    later measured sweep simply overwrites the entry in place. Returns
+    the number of entries recorded.
+    """
+    reg = registry if registry is not None else default_registry()
+    backend = backend or jax.default_backend()
+    count = 0
+    for dtype in dtypes:
+        dt = jnp.dtype(dtype)
+        for m, n, k in gemm_shapes:
+            p = plan_gemm(m, n, k, dtype_bytes=dt.itemsize)
+            reg.record("gemm", (m, n, k), dt, backend,
+                       {"bm": p.bm, "bn": p.bn, "bk": p.bk}, source="model")
+            count += 1
+        for n, nrhs in trsm_shapes:
+            p = plan_trsm(n, nrhs, dtype_bytes=dt.itemsize)
+            reg.record("trsm", (n, nrhs), dt, backend,
+                       {"block": p.block}, source="model")
+            count += 1
+    return count
+
+
 def trsm_candidates(n: int, nrhs: int, dtype_bytes: int = 4,
                     blocks: Sequence[int] = (16, 32, 64, 128)) -> List[int]:
     """Model pick first, then the remaining distinct feasible widths."""
@@ -187,7 +220,7 @@ def tune_trsm(n: int, nrhs: int = 8, dtype=jnp.float32,
     measured = []
     best_i, best_t = 0, None
     for i, blk in enumerate(cands):
-        f = jax.jit(lambda tt, bb, nb=blk: level3.dtrsm(
+        f = jax.jit(lambda tt, bb, nb=blk: level3.trsm(
             tt, bb, lower=True, block=nb, policy="reference"))
         sec = _timeit(f, t, b, reps=reps)
         measured.append({"block": blk, "seconds": sec})

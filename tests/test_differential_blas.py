@@ -156,3 +156,70 @@ def test_dtrsm_grid_vs_scipy(rng, assert_close, n, nrhs, block, lower, left,
         ref = scipy.linalg.solve_triangular(_f64(t).T, _f64(b).T,
                                             lower=not lower).T
     assert_close(got, ref, scale=4.0)
+
+
+# ------------------ dtype-generic repro.linalg front-end --------------------
+# Float64 legs need JAX_ENABLE_X64 and run in tests/test_linalg.py's
+# subprocess grid; the in-process grid covers every dtype the default
+# config supports.
+
+from conftest import LINALG_DTYPES
+
+from repro import linalg
+
+
+@pytest.mark.parametrize("dtype", LINALG_DTYPES)
+@pytest.mark.parametrize("ta,tb", [(False, False), (True, True)])
+@pytest.mark.parametrize("m,n,k", SHAPES_MM)
+def test_linalg_gemm_dtype_grid(rng, assert_close, m, n, k, ta, tb, dtype):
+    a = _mk(rng, (k, m) if ta else (m, k), dtype)
+    b = _mk(rng, (n, k) if tb else (k, n), dtype)
+    got = linalg.gemm(a, b, transa=ta, transb=tb)
+    assert got.dtype == jnp.dtype(dtype)
+    ref = (_f64(a).T if ta else _f64(a)) @ (_f64(b).T if tb else _f64(b))
+    assert_close(got, ref, scale=max(1.0, k / 16))
+
+
+@pytest.mark.parametrize("dtype", LINALG_DTYPES)
+@pytest.mark.parametrize("trans", [False, True])
+def test_linalg_gemv_dtype_grid(rng, assert_close, trans, dtype):
+    a = _mk(rng, (24, 36), dtype)
+    x = _mk(rng, 24 if trans else 36, dtype)
+    got = linalg.gemv(a, x, trans=trans)
+    assert_close(got, (_f64(a).T if trans else _f64(a)) @ _f64(x),
+                 scale=2.0)
+
+
+@pytest.mark.parametrize("dtype", LINALG_DTYPES)
+@pytest.mark.parametrize("lower", [False, True])
+def test_linalg_trsm_dtype_grid(rng, assert_close, lower, dtype):
+    n = 24
+    a = _mk(rng, (n, n), dtype)
+    t = (jnp.tril(a) if lower else jnp.triu(a)) + 4 * jnp.eye(n, dtype=dtype)
+    b = _mk(rng, (n, 5), dtype)
+    got = linalg.trsm(t, b, lower=lower, block=8)
+    ref = scipy.linalg.solve_triangular(_f64(t), _f64(b), lower=lower)
+    assert_close(got, ref, scale=8.0)
+
+
+@pytest.mark.parametrize("dtype", LINALG_DTYPES)
+def test_linalg_level1_dtype_grid(rng, assert_close, dtype):
+    x, y = _mk(rng, 129, dtype), _mk(rng, 129, dtype)
+    assert_close(linalg.dot(x, y), np.dot(_f64(x), _f64(y)), scale=4.0)
+    assert_close(linalg.axpy(0.5, x, y), 0.5 * _f64(x) + _f64(y))
+    s = _mk(rng, (8, 12), dtype)
+    assert_close(linalg.syrk(s), _f64(s) @ _f64(s).T, scale=2.0)
+
+
+@pytest.mark.parametrize("pol", ["reference", "model", "tuned"])
+def test_linalg_policy_context_equals_kwarg_path(rng, pol):
+    """linalg under use(policy=...) must be bitwise the old per-call
+    policy= threading (the shims' path)."""
+    import warnings as _w
+    a, b = _mk(rng, (24, 12), np.float32), _mk(rng, (12, 18), np.float32)
+    with linalg.use(policy=pol):
+        new = linalg.gemm(a, b)
+    with _w.catch_warnings():
+        _w.simplefilter("ignore", DeprecationWarning)
+        old = blas.dgemm(a, b, policy=pol)
+    assert np.array_equal(np.asarray(new), np.asarray(old))

@@ -239,3 +239,50 @@ def test_plan_factorization_defaults_are_sane():
         assert small.block == 16  # single panel -> unblocked path
     with pytest.raises(ValueError):
         plan_factorization(64, kind="svd")
+
+
+# ------------------ dtype-generic repro.linalg front-end --------------------
+# Round-trips of the batched drivers through the new context-scoped API in
+# every in-process dtype (float64 runs in tests/test_linalg.py's x64
+# subprocess grid); tolerances from the shared dtype_tolerances helper.
+
+from conftest import LINALG_DTYPES  # noqa: F401  (shared dtype grid)
+
+from repro import linalg
+
+
+@pytest.mark.parametrize("dtype", LINALG_DTYPES)
+def test_linalg_batched_cholesky_roundtrip_dtypes(rng, assert_close, dtype):
+    s = _spd_batch(rng, 4, 16).astype(dtype)
+    res = linalg.batched_cholesky(s, block=8)
+    assert res.factors.dtype == jnp.dtype(dtype)
+    assert_close(jnp.einsum("bij,bkj->bik", res.factors, res.factors),
+                 np.asarray(s.astype(jnp.float32), np.float64), scale=16.0)
+
+
+@pytest.mark.parametrize("dtype", LINALG_DTYPES)
+def test_linalg_batched_lu_roundtrip_dtypes(rng, assert_close, dtype):
+    a = _batch(rng, 4, 16, 16).astype(dtype)
+    res = linalg.batched_lu(a, block=8)
+    assert_close(lapack.reconstruct(res),
+                 np.asarray(a.astype(jnp.float32), np.float64), scale=16.0)
+
+
+@pytest.mark.parametrize("dtype", LINALG_DTYPES)
+def test_linalg_batched_qr_roundtrip_dtypes(rng, assert_close, dtype):
+    a = _batch(rng, 3, 20, 12).astype(dtype)
+    res = linalg.batched_qr(a, block=8)
+    assert res.kind == "geqrf" and res.tau.dtype == jnp.dtype(dtype)
+    assert_close(lapack.reconstruct(res),
+                 np.asarray(a.astype(jnp.float32), np.float64), scale=16.0)
+
+
+@pytest.mark.parametrize("pol", ["reference", "model", "tuned"])
+def test_linalg_batched_solve_policy_grid(rng, pol):
+    B, n = 3, 16
+    a = _batch(rng, B, n, n) + 8 * jnp.eye(n)
+    b = jnp.asarray(rng.normal(size=(B, n)).astype(np.float32))
+    with linalg.use(policy=pol):
+        x = linalg.batched_solve(linalg.batched_lu(a, block=8), b)
+    resid = jnp.einsum("bij,bj->bi", a, x) - b
+    assert float(jnp.max(jnp.abs(resid))) < 2e-3

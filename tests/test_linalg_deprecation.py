@@ -1,0 +1,158 @@
+"""Every d-prefixed shim must warn (once, at the caller) and stay bitwise
+identical to its repro.linalg equivalent under the default context.
+
+This module runs with DeprecationWarnings escalated to errors (the
+``filterwarnings`` mark below - `scripts/ci_check.sh` runs it as a
+dedicated step), so a shim that warns *twice*, or any stray deprecation
+path in the library, fails loudly. ``pytest.warns`` captures the expected
+first warning of each routine.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import blas, linalg
+from repro.blas import _deprecated
+from repro.tune import policy as tune_policy
+
+pytestmark = pytest.mark.filterwarnings("error::DeprecationWarning")
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warning_state():
+    """Each test sees shims that have not warned yet (context reset is
+    the shared conftest autouse fixture)."""
+    _deprecated.reset_warned()
+    yield
+    _deprecated.reset_warned()
+
+
+def _mk(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32)).astype(dtype)
+
+
+def _pairs(rng):
+    """(shim name, shim call thunk, linalg call thunk) for every shim."""
+    x, y = _mk(rng, 33), _mk(rng, 33)
+    a, b = _mk(rng, (12, 8)), _mk(rng, (8, 10))
+    c = _mk(rng, (12, 10))
+    sq = _mk(rng, (12, 12))
+    t = jnp.tril(sq) + 4 * jnp.eye(12)
+    rhs = _mk(rng, (12, 3))
+    u7 = _mk(rng, 8)
+    g1, g2 = _mk(rng, 12), _mk(rng, 10)
+    return [
+        ("ddot", lambda: blas.ddot(x, y, schedule="strided"),
+         lambda: linalg.dot(x, y, schedule="strided")),
+        ("daxpy", lambda: blas.daxpy(1.5, x, y),
+         lambda: linalg.axpy(1.5, x, y)),
+        ("dscal", lambda: blas.dscal(-2.0, x),
+         lambda: linalg.scal(-2.0, x)),
+        ("dnrm2", lambda: blas.dnrm2(x), lambda: linalg.nrm2(x)),
+        ("dasum", lambda: blas.level1.dasum(x), lambda: linalg.asum(x)),
+        ("idamax", lambda: blas.idamax(x), lambda: linalg.iamax(x)),
+        ("drot", lambda: blas.level1.drot(x, y, 0.6, 0.8)[0],
+         lambda: linalg.rot(x, y, 0.6, 0.8)[0]),
+        ("dgemv", lambda: blas.dgemv(a, u7, alpha=1.5),
+         lambda: linalg.gemv(a, u7, alpha=1.5)),
+        ("dger", lambda: blas.dger(0.5, g1, g2, c),
+         lambda: linalg.ger(0.5, g1, g2, c)),
+        ("dtrsv", lambda: blas.dtrsv(t, x[:12]),
+         lambda: linalg.trsv(t, x[:12])),
+        ("dgemm", lambda: blas.dgemm(a, b, c=c, alpha=2.0, beta=-1.0),
+         lambda: linalg.gemm(a, b, c=c, alpha=2.0, beta=-1.0)),
+        ("dsyrk", lambda: blas.dsyrk(a, lower=False),
+         lambda: linalg.syrk(a, lower=False)),
+        ("dtrsm", lambda: blas.dtrsm(t, rhs, block=4),
+         lambda: linalg.trsm(t, rhs, block=4)),
+    ]
+
+
+def test_every_shim_warns_once_and_is_bitwise_identical(rng):
+    for name, old, new in _pairs(rng):
+        _deprecated.reset_warned()
+        with pytest.warns(DeprecationWarning,
+                          match=rf"repro\.blas\.{name} is deprecated"):
+            got = old()
+        want = new()
+        assert np.array_equal(np.asarray(got), np.asarray(want)), name
+        # second call: silent (once-per-routine). filterwarnings=error
+        # would raise here if the shim warned again.
+        got2 = old()
+        assert np.array_equal(np.asarray(got2), np.asarray(want)), name
+
+
+def test_warning_points_at_caller(rng):
+    a, b = _mk(rng, (6, 4)), _mk(rng, (4, 5))
+    with pytest.warns(DeprecationWarning) as rec:
+        blas.dgemm(a, b)
+    ours = [w for w in rec.list if "repro.blas.dgemm" in str(w.message)]
+    assert ours and ours[0].filename == __file__, \
+        "stacklevel must point at the shim's caller"
+
+
+def test_shims_follow_policy_kwargs_bitwise(rng):
+    """Old policy/use_kernel kwargs keep their exact semantics through
+    the shim -> linalg bridge (kernel path included)."""
+    a, b = _mk(rng, (24, 12)), _mk(rng, (12, 18))
+    with pytest.warns(DeprecationWarning):
+        old_model = blas.dgemm(a, b, policy="model")
+    new_model = linalg.gemm(a, b, context=dict(policy="model"))
+    assert np.array_equal(np.asarray(old_model), np.asarray(new_model))
+    # use_kernel alias: its own DeprecationWarning + model-path numerics
+    tune_policy._warned_use_kernel = False
+    with pytest.warns(DeprecationWarning, match="use_kernel is deprecated"):
+        old_uk = blas.dgemm(a, b, use_kernel=True)
+    assert np.array_equal(np.asarray(old_uk), np.asarray(new_model))
+    tune_policy._warned_use_kernel = True  # leave the once-flag quiet
+
+
+def test_use_pallas_alias_warns_and_maps(rng):
+    """The older use_pallas spelling is a warned alias too, with exactly
+    use_kernel's semantics (True == policy='model')."""
+    a, b = _mk(rng, (24, 12)), _mk(rng, (12, 18))
+    want = linalg.gemm(a, b, context=dict(policy="model"))
+    tune_policy._warned_use_pallas = False
+    with pytest.warns(DeprecationWarning) as rec:   # dgemm shim warns too
+        got = blas.dgemm(a, b, use_pallas=True)
+    assert any("use_pallas is deprecated" in str(w.message) for w in rec)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert tune_policy.resolve_policy(None, None, False) == "reference"
+    assert tune_policy.resolve_policy("tuned", None, True) == "tuned"
+    tune_policy._warned_use_pallas = True
+
+
+def test_shims_ignore_active_accum_dtype(rng):
+    """Level-1/2 shims pin accum_dtype=None: an active accumulation
+    context must not change a deprecated call's numerics."""
+    x = _mk(rng, 2048, jnp.bfloat16)
+    y = _mk(rng, 2048, jnp.bfloat16)
+    from repro.blas import level1
+    want = level1.dot(x, y, schedule="sequential")   # operand-dtype core
+    with linalg.use(accum_dtype=jnp.float32):
+        with pytest.warns(DeprecationWarning):
+            got = blas.ddot(x, y, schedule="sequential")
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    m = _mk(rng, (6, 4), jnp.bfloat16)
+    v = _mk(rng, 4, jnp.bfloat16)
+    want_v = level1.axpy(0.5, v, v)
+    with linalg.use(accum_dtype=jnp.float32):
+        with pytest.warns(DeprecationWarning):
+            got_v = blas.daxpy(0.5, v, v)
+        with pytest.warns(DeprecationWarning):
+            got_g = blas.dger(1.0, m[:, 0], v, m)
+    assert np.array_equal(np.asarray(got_v), np.asarray(want_v))
+    assert got_g.dtype == jnp.bfloat16
+
+
+def test_shims_ignore_active_mesh_context(rng):
+    """Deprecated routines stay local (mesh pinned to None) even under a
+    mesh-bearing context - their pre-linalg contract."""
+    a, b = _mk(rng, (8, 6)), _mk(rng, (6, 7))
+    want = linalg.gemm(a, b)
+    with linalg.use(mesh=(2, 2)):   # no devices needed: shim must not route
+        with pytest.warns(DeprecationWarning):
+            got = blas.dgemm(a, b)
+    assert np.array_equal(np.asarray(got), np.asarray(want))

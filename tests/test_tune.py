@@ -302,3 +302,40 @@ def test_tune_trsm_writes_registry(tmp_registry):
     hit = tmp_registry.lookup("trsm", (32, 4), jnp.float32,
                               jax.default_backend())
     assert hit == res.best
+
+
+def test_seed_registry_from_model_per_dtype(tmp_registry):
+    """Model-seeded entries give non-swept dtypes real registry hits."""
+    n = search.seed_registry_from_model(
+        tmp_registry, gemm_shapes=[(64, 64, 64)], trsm_shapes=[(64, 8)],
+        dtypes=(jnp.float32, jnp.float64, jnp.bfloat16), backend="cpu")
+    assert n == 6 and len(tmp_registry) == 6
+    for dt in (jnp.float32, jnp.float64, jnp.bfloat16):
+        hit = tmp_registry.lookup("gemm", (64, 64, 64), dt, "cpu")
+        assert hit is not None and hit.source == "model"
+        r = dispatch.resolve("gemm", (64, 64, 64), dt, policy="tuned",
+                             registry=tmp_registry, backend="cpu")
+        assert r.source == "registry"
+        rt = dispatch.resolve("trsm", (64, 8), dt, policy="tuned",
+                              registry=tmp_registry, backend="cpu")
+        assert rt.source == "registry" and rt.block >= 1
+    # a later measured sweep overwrites the seeded entry in place
+    import jax
+    if jax.default_backend() == "cpu":
+        res = search.tune_gemm(64, 64, 64, registry=tmp_registry, top_k=1,
+                               reps=1)
+        hit = tmp_registry.lookup("gemm", (64, 64, 64), jnp.float32, "cpu")
+        assert hit.source == "sweep" and hit == res.best
+
+
+def test_planners_accept_dtype_directly():
+    from repro.core import codesign
+    p32 = codesign.plan_gemm(256, 256, 256, dtype=jnp.float32)
+    pb = codesign.plan_gemm(256, 256, 256, dtype_bytes=4)
+    assert (p32.bm, p32.bn, p32.bk) == (pb.bm, pb.bn, pb.bk)
+    p64 = codesign.plan_gemm(2048, 2048, 2048, dtype=jnp.float64)
+    assert p64.vmem_bytes <= codesign.VMEM_BYTES
+    t = codesign.plan_trsm(128, 8, dtype=jnp.float64)
+    assert t.block >= 1
+    f = codesign.plan_factorization(256, kind="potrf", dtype=jnp.float64)
+    assert f.block >= 1

@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import lapack, linalg, tune
-from repro.core.codesign import optimal_accumulators
+from repro import arch, lapack, linalg, tune
+from repro.core.codesign import FACTOR_FLOP_COEFF, optimal_accumulators
 from repro.tune.search import measure_wall_time
 
 
@@ -38,6 +38,7 @@ def run(emit, policy: str = "reference", dtype=jnp.float32):
         emit(f"blas,gemm,{n}", 2 * n ** 3 / t / 1e9, "gflops")
         rows.append({"op": "gemm", "n": n, "dtype": dtype.name,
                      "context": ctx_desc, "seconds_per_call": t,
+                     **arch.bench_metrics(2 * n ** 3 / t / 1e9),
                      "resolution": tune.resolve("gemm", (n, n, n), dtype,
                                                 policy=policy).describe()})
 
@@ -60,16 +61,22 @@ def run(emit, policy: str = "reference", dtype=jnp.float32):
                         ("lu", jax.jit(lambda z: linalg.lu(z, block=32)))):
             t = _timeit(f, m, reps=3)
             emit(f"lapack,{name},192", t * 1e3, "ms_per_call")
+            coeff = FACTOR_FLOP_COEFF[{"geqrf": "geqrf",
+                                       "lu": "getrf"}[name]]
             rows.append({"op": name, "n": 192, "block": 32,
                          "dtype": "float32", "context": ctx_desc,
-                         "seconds_per_call": t, "resolution": fact_res})
+                         "seconds_per_call": t, "resolution": fact_res,
+                         **arch.bench_metrics(
+                             coeff * 192 ** 3 / t / 1e9)})
         s = m @ m.T + 192 * jnp.eye(192)
         t = _timeit(jax.jit(lambda z: linalg.cholesky(z, block=32)), s,
                     reps=3)
         emit("lapack,cholesky,192", t * 1e3, "ms_per_call")
         rows.append({"op": "cholesky", "n": 192, "block": 32,
                      "dtype": "float32", "context": ctx_desc,
-                     "seconds_per_call": t, "resolution": fact_res})
+                     "seconds_per_call": t, "resolution": fact_res,
+                     **arch.bench_metrics(
+                         FACTOR_FLOP_COEFF["potrf"] * 192 ** 3 / t / 1e9)})
 
     out = os.path.join(os.path.dirname(__file__), "out", "blas.json")
     os.makedirs(os.path.dirname(out), exist_ok=True)

@@ -59,9 +59,10 @@ _OUT_DEFAULT = os.path.join(os.path.dirname(__file__), "out",
 def sweep(gemm_shapes=None, factor_grid=None, policies=POLICIES, reps=1):
     """Returns trajectory rows over mesh x shape x policy; every row
     records the mesh shape and the resolved config."""
+    from repro import arch as _arch
     from repro import linalg
     from repro.blas import distributed as dblas
-    from repro.core.codesign import plan_pdgemm
+    from repro.core.codesign import FACTOR_FLOP_COEFF, plan_pdgemm
     from repro.tune import dispatch
     from repro.tune.search import measure_wall_time as _timeit
 
@@ -95,7 +96,7 @@ def sweep(gemm_shapes=None, factor_grid=None, policies=POLICIES, reps=1):
                     "context": linalg.ExecutionContext(**ctx).describe(),
                     "resolution": res.describe(),
                     "seconds_per_call": t,
-                    "gflops": 2.0 * m * n * k / t / 1e9,
+                    **_arch.bench_metrics(2.0 * m * n * k / t / 1e9),
                     "model": {"compute_s": plan.compute_s,
                               "collective_s": plan.collective_s,
                               "collective_bytes": plan.collective_bytes,
@@ -118,6 +119,7 @@ def sweep(gemm_shapes=None, factor_grid=None, policies=POLICIES, reps=1):
                 t = _timeit(f, xj, reps=reps)
                 res = dispatch.resolve("gemm", (nsz, nsz, nsz), jnp.float32,
                                        policy=pol)
+                flops = batch * FACTOR_FLOP_COEFF[kind] * nsz ** 3
                 rows.append({
                     "op": f"batched_{kind}", "mesh": [px, py],
                     "mesh_key": mkey, "shape": [batch, nsz, nsz],
@@ -125,6 +127,7 @@ def sweep(gemm_shapes=None, factor_grid=None, policies=POLICIES, reps=1):
                     "context": linalg.ExecutionContext(**ctx).describe(),
                     "resolution": res.describe(),
                     "seconds_per_call": t,
+                    **_arch.bench_metrics(flops / t / 1e9),
                 })
     return rows
 

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import lapack, linalg, tune
+from repro import arch, lapack, linalg, tune
 from repro.core.codesign import FACTOR_FLOP_COEFF as FLOP_COEFF
 from repro.core.codesign import plan_factorization
 from repro.tune.search import measure_wall_time as _timeit
@@ -53,7 +53,7 @@ def sweep(batches=(1, 8, 32), sizes=(32, 64, 128), blocks=(8, 16, 32, None),
                     f = jax.jit(lambda m, k=kind, nb=block: FACTOR_FN[k](
                         m, block=nb, policy=policy).factors)
                     t = _timeit(f, x, reps=reps)
-                    flops = b * FLOP_COEFF[kind] * 2.0 * n ** 3
+                    flops = b * FLOP_COEFF[kind] * n ** 3
                     rows.append({
                         "kind": kind, "batch": b, "n": n,
                         "block": block if block is not None else
@@ -64,7 +64,7 @@ def sweep(batches=(1, 8, 32), sizes=(32, 64, 128), blocks=(8, 16, 32, None),
                         "context": ctx_desc,
                         "trailing_resolution": gemm_cfg,
                         "seconds_per_call": t,
-                        "gflops": flops / t / 1e9,
+                        **arch.bench_metrics(flops / t / 1e9),
                     })
     return rows
 

@@ -10,10 +10,15 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import arch
 from repro.core import isa, pe
 
 
 def run(emit, n: int = 48):
+    machine = arch.get("paper-pe")        # the PE under test
+    emit("machine", machine.name, "name")
+    emit("machine,peak", machine.peak_gflops_per_w(), "gflops_per_w")
+    emit("machine,peak", machine.peak_gflops_per_mm2(), "gflops_per_mm2")
     depths = [2, 4, 6, 8, 12, 16, 24]
     streams = {
         "dgemm": isa.compile_dgemm(n, n, n, unroll=4),

@@ -20,7 +20,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro import linalg
+from repro import arch, linalg
 from repro.tune import dispatch, search
 from repro.tune.registry import Registry
 
@@ -46,13 +46,17 @@ def sweep(registry: Registry, gemm_shapes=None, trsm_shapes=None,
     tshapes = trsm_shapes if trsm_shapes is not None else TRSM_SHAPES
     for dtype in dtypes:
         for m, n, k in gshapes:
-            rows.append(search.tune_gemm(m, n, k, dtype=dtype,
-                                         registry=registry, top_k=top_k,
-                                         reps=reps).to_json())
+            r = search.tune_gemm(m, n, k, dtype=dtype, registry=registry,
+                                 top_k=top_k, reps=reps).to_json()
+            r.update(arch.bench_metrics(
+                2.0 * m * n * k / max(r["best"]["measured_s"], 1e-12) / 1e9))
+            rows.append(r)
         for n, nrhs in tshapes:
-            rows.append(search.tune_trsm(n, nrhs, dtype=dtype,
-                                         registry=registry,
-                                         reps=reps).to_json())
+            r = search.tune_trsm(n, nrhs, dtype=dtype, registry=registry,
+                                 reps=reps).to_json()
+            r.update(arch.bench_metrics(
+                n * n * nrhs / max(r["best"]["measured_s"], 1e-12) / 1e9))
+            rows.append(r)
     search.seed_registry_from_model(registry, gemm_shapes=gshapes,
                                     trsm_shapes=tshapes, dtypes=SEED_DTYPES)
     return rows

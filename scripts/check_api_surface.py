@@ -57,13 +57,69 @@ EXPECTED_PARAMS = {
 }
 
 EXPECTED_CONTEXT_FIELDS = {"policy", "mesh", "registry", "accum_dtype",
-                           "interpret"}
+                           "interpret", "machine"}
+
+EXPECTED_ARCH_ALL = [
+    # spec types
+    "MachineSpec", "FPUSpec", "MemorySpec", "PEGeometry", "PowerAreaSpec",
+    "OP_CLASSES",
+    # registry
+    "get", "register", "names", "DEFAULT_MACHINE",
+    # ambient machine scoping
+    "current_machine", "machine_scope", "set_default_machine",
+    "resolve_machine", "machine_key_component",
+    # built-in specs
+    "TPU_LIKE", "PAPER_PE", "CPU_HOST",
+    # benchmark helper
+    "bench_metrics",
+]
+
+# spec dataclass -> frozen field set (registry keys and serialized files
+# depend on these names; change them only with a schema bump)
+EXPECTED_ARCH_FIELDS = {
+    "MachineSpec": {"name", "fpu", "memory", "pe", "power_area",
+                    "native_dtype"},
+    "FPUSpec": {"depths", "t_p", "t_o", "gamma", "acc_overhead"},
+    "MemorySpec": {"hbm_bw", "vmem_bytes", "ici_bw", "hbm_bytes",
+                   "pipeline_fill_s"},
+    "PEGeometry": {"mxu", "sublane", "lane", "vreg_budget", "peak_flops"},
+    "PowerAreaSpec": {"pj_per_flop", "pj_per_byte_hbm", "static_w",
+                      "area_mm2"},
+}
+
+EXPECTED_MACHINE_NAMES = {"tpu-like", "paper-pe", "cpu-host"}
+
+
+def check_arch(errors) -> None:
+    import dataclasses
+
+    from repro import arch
+
+    got_all = list(arch.__all__)
+    if got_all != EXPECTED_ARCH_ALL:
+        missing = set(EXPECTED_ARCH_ALL) - set(got_all)
+        extra = set(got_all) - set(EXPECTED_ARCH_ALL)
+        errors.append(f"arch.__all__ drifted: missing={sorted(missing)} "
+                      f"extra={sorted(extra)} (order matters too)")
+    for cls_name, want in EXPECTED_ARCH_FIELDS.items():
+        cls = getattr(arch, cls_name, None)
+        if cls is None:
+            errors.append(f"repro.arch lost {cls_name}")
+            continue
+        fields = {f.name for f in dataclasses.fields(cls)}
+        if fields != want:
+            errors.append(f"arch.{cls_name} fields drifted: "
+                          f"{sorted(fields)} != {sorted(want)}")
+    if not EXPECTED_MACHINE_NAMES <= set(arch.names()):
+        errors.append(f"built-in machines missing: "
+                      f"{sorted(EXPECTED_MACHINE_NAMES - set(arch.names()))}")
 
 
 def main() -> int:
     from repro import linalg
 
     errors = []
+    check_arch(errors)
     got_all = list(linalg.__all__)
     if got_all != EXPECTED_ALL:
         missing = set(EXPECTED_ALL) - set(got_all)
@@ -97,8 +153,9 @@ def main() -> int:
         for e in errors:
             print(f"  - {e}")
         return 1
-    print(f"repro.linalg API surface OK ({len(EXPECTED_PARAMS)} routines, "
-          f"{len(EXPECTED_ALL)} exported names)")
+    print(f"repro.linalg + repro.arch API surface OK "
+          f"({len(EXPECTED_PARAMS)} routines, {len(EXPECTED_ALL)} linalg + "
+          f"{len(EXPECTED_ARCH_ALL)} arch exported names)")
     return 0
 
 

@@ -1,0 +1,113 @@
+#!/usr/bin/env python
+"""CI guard: default-machine planner outputs are frozen.
+
+The ``repro.arch`` refactor replaced the codesign layer's module constants
+with a swappable :class:`repro.arch.MachineSpec`; the contract is that the
+default machine (``"tpu-like"``) reproduces the pre-refactor constants
+*bit-for-bit*. This script evaluates every planner over a fixed
+shape x dtype-bytes grid and compares the full plan tuples against the
+committed golden file - any numerical drift in the default path fails CI.
+
+Usage:
+    python scripts/check_golden_plans.py           # check (CI mode)
+    python scripts/check_golden_plans.py --write   # regenerate the golden
+                                                   # (intentional changes
+                                                   # only, same PR)
+"""
+import json
+import os
+import sys
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden_default_plans.json")
+
+GEMM_SHAPES = [(128, 128, 128), (300, 300, 300), (512, 512, 512),
+               (1024, 1024, 1024), (4096, 4096, 4096), (8, 8192, 8192)]
+TRSM_SHAPES = [(64, 1), (512, 8), (2048, 32)]
+FACTOR_NS = [64, 256, 2048]
+PDGEMM_MESHES = [(1, 1), (2, 2), (4, 2)]
+DTYPE_BYTES = [2, 4, 8]
+
+
+def compute():
+    from repro.core import codesign as cd
+
+    out = {"constants": {
+        "PEAK_BF16_FLOPS": cd.PEAK_BF16_FLOPS, "HBM_BW": cd.HBM_BW,
+        "ICI_BW": cd.ICI_BW, "VMEM_BYTES": cd.VMEM_BYTES, "MXU": cd.MXU,
+        "SUBLANE": cd.SUBLANE, "LANE": cd.LANE,
+        "VPU_ADD_LATENCY": cd.VPU_ADD_LATENCY,
+        "VREG_BUDGET": cd.VREG_BUDGET, "ACC_OVERHEAD": cd.ACC_OVERHEAD,
+        "PIPELINE_FILL_S": cd.PIPELINE_FILL_S, "MXU_CLOCK": cd.MXU_CLOCK,
+        "VPU_FLOPS": cd.VPU_FLOPS,
+    }, "gemm": {}, "trsm": {}, "factorization": {}, "pdgemm": {}}
+    for m, n, k in GEMM_SHAPES:
+        for db in DTYPE_BYTES:
+            p = cd.plan_gemm(m, n, k, dtype_bytes=db)
+            out["gemm"][f"{m}x{n}x{k}|{db}"] = {
+                "bm": p.bm, "bn": p.bn, "bk": p.bk,
+                "accumulators": p.accumulators, "grid": list(p.grid),
+                "vmem_bytes": p.vmem_bytes,
+                "arithmetic_intensity": p.arithmetic_intensity,
+                "compute_bound": p.compute_bound}
+    for n, nrhs in TRSM_SHAPES:
+        for db in DTYPE_BYTES:
+            t = cd.plan_trsm(n, nrhs, dtype_bytes=db)
+            out["trsm"][f"{n}x{nrhs}|{db}"] = {
+                "block": t.block, "panel_time": t.panel_time,
+                "trailing_time": t.trailing_time}
+    for kind in ("potrf", "getrf", "geqrf"):
+        for n in FACTOR_NS:
+            for db in DTYPE_BYTES:
+                f = cd.plan_factorization(n, kind=kind, dtype_bytes=db)
+                out["factorization"][f"{kind}|{n}|{db}"] = {
+                    "block": f.block, "panel_time": f.panel_time,
+                    "trailing_time": f.trailing_time,
+                    "gemm": [f.gemm.bm, f.gemm.bn, f.gemm.bk]}
+    for px, py in PDGEMM_MESHES:
+        for db in DTYPE_BYTES:
+            p = cd.plan_pdgemm(4096, 4096, 4096, px, py, dtype_bytes=db)
+            out["pdgemm"][f"x{px}y{py}|{db}"] = {
+                "steps": p.steps, "k_fine": p.k_fine,
+                "local": [p.local.bm, p.local.bn, p.local.bk],
+                "compute_s": p.compute_s, "collective_s": p.collective_s,
+                "collective_bytes": p.collective_bytes}
+    return out
+
+
+def main() -> int:
+    got = compute()
+    if "--write" in sys.argv:
+        with open(GOLDEN, "w") as f:
+            json.dump(got, f, indent=1, sort_keys=True)
+        n = sum(len(v) for v in got.values())
+        print(f"wrote {n} golden entries to {GOLDEN}")
+        return 0
+    try:
+        with open(GOLDEN) as f:
+            want = json.load(f)
+    except OSError as e:
+        print(f"golden plan file missing ({e}); regenerate with --write")
+        return 1
+    errors = []
+    for section, entries in want.items():
+        for key, w in entries.items():
+            g = got.get(section, {}).get(key)
+            if g != w:
+                errors.append(f"{section}[{key}]: {g!r} != golden {w!r}")
+    if errors:
+        print("default-machine planner outputs drifted from the golden "
+              "(the tpu-like spec must stay bit-identical to the "
+              "pre-arch constants):")
+        for e in errors[:20]:
+            print(f"  - {e}")
+        if len(errors) > 20:
+            print(f"  ... and {len(errors) - 20} more")
+        return 1
+    n = sum(len(v) for v in want.values())
+    print(f"golden default-machine plans OK ({n} entries bitwise-identical)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,8 +35,33 @@ with tempfile.TemporaryDirectory() as d:
 print("tuner smoke OK: sweep -> save -> reload -> registry hit")
 PY
 
-echo "== repro.linalg API surface guard =="
+echo "== repro.linalg + repro.arch API surface guard =="
 python scripts/check_api_surface.py
+
+echo "== golden default-machine planner outputs (bitwise vs pre-arch) =="
+python scripts/check_golden_plans.py
+
+echo "== machine smoke (spec round-trip + non-default machine resolves) =="
+python - <<'PY'
+import json, tempfile, os
+import jax.numpy as jnp
+from repro import arch, tune
+
+# JSON round-trip through a real file
+with tempfile.TemporaryDirectory() as d:
+    p = os.path.join(d, "m.json")
+    arch.get("paper-pe").save(p)
+    assert arch.MachineSpec.load(p) == arch.get("paper-pe")
+# a non-default machine must actually change planner decisions somewhere
+r_def = tune.resolve("gemm", (2048, 2048, 2048), jnp.float32, policy="model")
+r_pe = tune.resolve("gemm", (2048, 2048, 2048), jnp.float32, policy="model",
+                    machine=arch.get("paper-pe"))
+assert r_def.machine == "tpu-like" and r_pe.machine == "paper-pe"
+assert (r_def.gemm_plan.bm, r_def.gemm_plan.bn, r_def.gemm_plan.bk) != \
+    (r_pe.gemm_plan.bm, r_pe.gemm_plan.bn, r_pe.gemm_plan.bk), \
+    "machine swap did not change the GEMM tiling"
+print("machine smoke OK: round-trip + machine-dependent resolution")
+PY
 
 echo "== deprecation shims (DeprecationWarning -> error, our module only) =="
 # the module's pytestmark escalates DeprecationWarning to error for every

@@ -1,0 +1,62 @@
+"""repro.arch - first-class machine/FPU architecture specs.
+
+The paper scores FPU micro-architectures (pipeline depths, PE structure,
+memory hierarchy) in Gflops/W and Gflops/mm^2; this package is that design
+space as a value type. A frozen :class:`MachineSpec` composes
+:class:`FPUSpec` + :class:`MemorySpec` + :class:`PEGeometry` +
+:class:`PowerAreaSpec`, serializes to JSON, and lives in a named registry::
+
+    from repro import arch, linalg
+
+    m = arch.get("paper-pe")               # or "tpu-like" (default), "cpu-host"
+    plan = codesign.plan_gemm(4096, 4096, 4096, machine=m)
+
+    with linalg.use(machine=m):            # machine flows context ->
+        l = linalg.cholesky(spd)           #   planner -> tuner key -> kernel
+
+    arch.register(my_spec)                 # custom designs join the registry
+    m.gflops_per_w(achieved_gflops)        # the paper's scoring axes
+    m.save("my_machine.json"); arch.MachineSpec.load("my_machine.json")
+
+Every planner in :mod:`repro.core.codesign`, the tuner in
+:mod:`repro.tune`, and every benchmark takes (or records) a machine; the
+default machine ``"tpu-like"`` reproduces the historical module-constant
+behavior bit-for-bit. See ``docs/machines.md``.
+"""
+from repro.arch.registry import (CPU_HOST, DEFAULT_MACHINE, PAPER_PE,
+                                 TPU_LIKE, current_machine, get,
+                                 machine_key_component, machine_scope,
+                                 names, register, resolve_machine,
+                                 set_default_machine)
+from repro.arch.spec import (OP_CLASSES, FPUSpec, MachineSpec, MemorySpec,
+                             PEGeometry, PowerAreaSpec)
+
+__all__ = [
+    # spec types
+    "MachineSpec", "FPUSpec", "MemorySpec", "PEGeometry", "PowerAreaSpec",
+    "OP_CLASSES",
+    # registry
+    "get", "register", "names", "DEFAULT_MACHINE",
+    # ambient machine scoping
+    "current_machine", "machine_scope", "set_default_machine",
+    "resolve_machine", "machine_key_component",
+    # built-in specs
+    "TPU_LIKE", "PAPER_PE", "CPU_HOST",
+    # benchmark helper
+    "bench_metrics",
+]
+
+
+def bench_metrics(gflops: float, machine=None,
+                  hbm_bytes_per_s: float = 0.0) -> dict:
+    """The per-row machine fields every benchmark records.
+
+    Returns ``{"machine", "gflops", "gflops_per_w", "gflops_per_mm2"}``
+    for an achieved FLOP rate under ``machine`` (default: the ambient
+    current machine) - modeled scores, the paper's two comparison axes.
+    """
+    m = resolve_machine(machine)
+    g = float(gflops)
+    return {"machine": m.name, "gflops": g,
+            "gflops_per_w": m.gflops_per_w(g, hbm_bytes_per_s),
+            "gflops_per_mm2": m.gflops_per_mm2(g)}

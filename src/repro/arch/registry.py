@@ -1,0 +1,204 @@
+"""Named machine registry + the ambient "current machine" scope.
+
+Built-in machines:
+
+``"tpu-like"``
+    The default. Numerically identical to the historical module constants
+    in :mod:`repro.core.codesign` (TPU v5e assumptions), so every planner
+    output under the default machine is bit-identical to the
+    pre-``repro.arch`` behavior. Native dtype bfloat16 - the width the
+    peak is quoted at and the planners' dtype default.
+``"paper-pe"``
+    The paper's PE/APE-based accelerator: the section-5 pipeline depths
+    (mul 5 / add 4 / div 12 / sqrt 14), the Hartstein-Puzak technology
+    constants of :mod:`repro.core.characterization`, a small local
+    memory, double-precision native, and the power/area point at which
+    the paper reports its 1.1-1.5x Gflops/W and 1.9-2.1x Gflops/mm^2
+    advantage over custom BLAS/LAPACK realizations.
+``"cpu-host"``
+    A host-CPU-shaped machine (SIMD lanes instead of a systolic array,
+    DDR-class bandwidth) - the container this repo actually runs on.
+
+The *current* machine is dynamically scoped (contextvars, so threads and
+asyncio tasks are isolated): :func:`machine_scope` nests, and
+:func:`set_default_machine` replaces the process default under every
+scope. ``repro.linalg`` routines enter a scope from their resolved
+ExecutionContext, so every nested planner/tuner resolution - trailing
+updates inside a blocked factorization included - sees the context's
+machine without any kwarg threading.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Iterator, Optional, Tuple, Union
+
+from repro.arch.spec import (FPUSpec, MachineSpec, MemorySpec, PEGeometry,
+                             PowerAreaSpec)
+
+DEFAULT_MACHINE = "tpu-like"
+
+# --------------------------- built-in machines ------------------------------
+
+TPU_LIKE = MachineSpec(
+    name="tpu-like",
+    native_dtype="bfloat16",
+    fpu=FPUSpec(
+        # fixed-silicon effective latencies; add=6 is the dependent
+        # FP-add chain latency the accumulator planner fills (eq. 3)
+        depths={"mul": 5, "add": 6, "div": 12, "sqrt": 14},
+        t_p={"mul": 60.0, "add": 40.0, "div": 160.0, "sqrt": 200.0},
+        t_o=1.0,
+        gamma={"mul": 0.5, "add": 0.5, "div": 0.8, "sqrt": 0.9},
+        acc_overhead=0.75,
+    ),
+    memory=MemorySpec(hbm_bw=819e9, vmem_bytes=96 * 2 ** 20, ici_bw=50e9,
+                      hbm_bytes=16 * 2 ** 30, pipeline_fill_s=2e-6),
+    pe=PEGeometry(mxu=128, sublane=8, lane=128, vreg_budget=64,
+                  peak_flops=197e12),
+    power_area=PowerAreaSpec(
+        pj_per_flop={"mul": 0.55, "add": 0.25, "div": 4.0, "sqrt": 5.0},
+        pj_per_byte_hbm=30.0, static_w=60.0, area_mm2=300.0),
+)
+
+PAPER_PE = MachineSpec(
+    name="paper-pe",
+    native_dtype="float64",
+    fpu=FPUSpec(
+        # section-5 experimental optimum: deep hazard-free mul/add pipes,
+        # shallow serial div/sqrt pipes
+        depths={"mul": 5, "add": 4, "div": 12, "sqrt": 14},
+        t_p={"mul": 60.0, "add": 40.0, "div": 160.0, "sqrt": 200.0},
+        t_o=1.0,
+        gamma={"mul": 0.5, "add": 0.5, "div": 0.8, "sqrt": 0.9},
+        acc_overhead=0.75,
+    ),
+    memory=MemorySpec(hbm_bw=256e9, vmem_bytes=4 * 2 ** 20, ici_bw=25e9,
+                      hbm_bytes=8 * 2 ** 30, pipeline_fill_s=1e-6),
+    pe=PEGeometry(mxu=32, sublane=4, lane=32, vreg_budget=32,
+                  peak_flops=8e12),
+    power_area=PowerAreaSpec(
+        pj_per_flop={"mul": 0.5, "add": 0.3, "div": 3.0, "sqrt": 3.5},
+        pj_per_byte_hbm=25.0, static_w=1.1, area_mm2=6.1),
+)
+
+CPU_HOST = MachineSpec(
+    name="cpu-host",
+    native_dtype="float32",
+    fpu=FPUSpec(
+        depths={"mul": 4, "add": 4, "div": 14, "sqrt": 18},
+        t_p={"mul": 60.0, "add": 40.0, "div": 160.0, "sqrt": 200.0},
+        t_o=1.0,
+        gamma={"mul": 0.5, "add": 0.5, "div": 0.8, "sqrt": 0.9},
+        acc_overhead=0.5,
+    ),
+    memory=MemorySpec(hbm_bw=80e9, vmem_bytes=2 * 2 ** 20, ici_bw=10e9,
+                      hbm_bytes=64 * 2 ** 30, pipeline_fill_s=5e-6),
+    pe=PEGeometry(mxu=16, sublane=1, lane=16, vreg_budget=32,
+                  peak_flops=2e12),
+    power_area=PowerAreaSpec(
+        pj_per_flop={"mul": 8.0, "add": 6.0, "div": 30.0, "sqrt": 40.0},
+        pj_per_byte_hbm=60.0, static_w=30.0, area_mm2=200.0),
+)
+
+_REGISTRY: Dict[str, MachineSpec] = {
+    m.name: m for m in (TPU_LIKE, PAPER_PE, CPU_HOST)
+}
+
+
+def register(spec: MachineSpec, overwrite: bool = False) -> MachineSpec:
+    """Add a machine to the named registry (``overwrite=True`` to replace)."""
+    if not isinstance(spec, MachineSpec):
+        raise TypeError(f"register() takes a MachineSpec, "
+                        f"got {type(spec).__name__}")
+    if spec.name in _REGISTRY and not overwrite:
+        raise ValueError(f"machine {spec.name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> MachineSpec:
+    """Look up a registered machine by name; ``ValueError`` (listing the
+    known names) on an unknown one."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown machine {name!r}; registered machines: "
+                         f"{names()}") from None
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ------------------------- ambient current machine --------------------------
+
+_process_default: Optional[MachineSpec] = None
+_scope: "contextvars.ContextVar[Optional[MachineSpec]]" = \
+    contextvars.ContextVar("repro_arch_machine", default=None)
+
+
+def _as_spec(machine: Union[MachineSpec, str, None]) -> Optional[MachineSpec]:
+    if machine is None or isinstance(machine, MachineSpec):
+        return machine
+    if isinstance(machine, str):
+        return get(machine)
+    raise TypeError(f"machine must be a MachineSpec, a registered name, or "
+                    f"None; got {type(machine).__name__}")
+
+
+def current_machine() -> MachineSpec:
+    """The active machine: innermost :func:`machine_scope`, else the
+    :func:`set_default_machine` process default, else ``"tpu-like"``."""
+    scoped = _scope.get()
+    if scoped is not None:
+        return scoped
+    if _process_default is not None:
+        return _process_default
+    return _REGISTRY[DEFAULT_MACHINE]
+
+
+@contextlib.contextmanager
+def machine_scope(machine: Union[MachineSpec, str, None]) -> Iterator[MachineSpec]:
+    """Scope the current machine: ``with arch.machine_scope("paper-pe"):``.
+
+    ``None`` pins the scope back to the process default (an explicit
+    reset for code that must ignore enclosing scopes). Note that
+    ``repro.linalg`` routines only enter a scope when their context sets
+    a machine - a default-context call *inherits* whatever scope is
+    active, so wrapping linalg calls in ``machine_scope`` works the way
+    an ambient scope should.
+    """
+    token = _scope.set(_as_spec(machine))
+    try:
+        yield current_machine()
+    finally:
+        _scope.reset(token)
+
+
+def set_default_machine(machine: Union[MachineSpec, str, None]) -> MachineSpec:
+    """Replace the process-default machine (``None`` resets to
+    ``"tpu-like"``); scopes layer on top."""
+    global _process_default
+    _process_default = _as_spec(machine)
+    return current_machine()
+
+
+def resolve_machine(machine: Union[MachineSpec, str, None] = None) -> MachineSpec:
+    """A ``machine=`` argument as a MachineSpec: names looked up, ``None``
+    resolved to the ambient :func:`current_machine`. The one helper every
+    planner/tuner entry point shares."""
+    if machine is None:
+        return current_machine()
+    spec = _as_spec(machine)
+    return spec if spec is not None else current_machine()
+
+
+def machine_key_component(machine: Union[MachineSpec, str, None]) -> Optional[str]:
+    """The tune-registry key component for a machine: ``None`` for the
+    default machine (so pre-arch registry files keep resolving unchanged),
+    the machine name otherwise. Recording and lookup must share this rule,
+    or tuned entries land in a different namespace than dispatch reads."""
+    mach = resolve_machine(machine)
+    return None if mach.name == DEFAULT_MACHINE else mach.name

@@ -41,15 +41,19 @@ import dataclasses
 import math
 from typing import Dict
 
+from repro import arch as _arch
+from repro.arch import FPUSpec
 from repro.core.pipeline_model import OP_CLASSES, PipeParams, p_opt, p_opt_int
 
-# Default technology constants (relative units).  t_p is the latch-free logic
-# delay of each unit; double-precision div/sqrt logic is much deeper than
-# mul/add (iterative units); t_o is per-stage latch overhead. Values follow the
-# FO4-style ratios used by Hartstein-Puzak [19]: t_p/t_o = 55/0.5 per pipe, and
-# relative unit depths mul:add:div:sqrt from standard FPU designs.
-T_O = 1.0                       # latch overhead (FO4)
-T_P = {"mul": 60.0, "add": 40.0, "div": 160.0, "sqrt": 200.0}
+# Default technology constants (relative units) = the "paper-pe" machine's
+# FPUSpec.  t_p is the latch-free logic delay of each unit; double-precision
+# div/sqrt logic is much deeper than mul/add (iterative units); t_o is
+# per-stage latch overhead. Values follow the FO4-style ratios used by
+# Hartstein-Puzak [19]. Every characterize_* function takes ``fpu=`` (an
+# :class:`repro.arch.FPUSpec`) to characterize against a different machine.
+_PAPER_FPU = _arch.get("paper-pe").fpu
+T_O = _PAPER_FPU.t_o            # latch overhead (FO4)
+T_P = dict(_PAPER_FPU.t_p)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,13 +90,16 @@ class WorkloadProfile:
         }
 
 
-def _pipes(nm=0, hm=0, na=0, ha=0, nd=0, hd=0, ns=0, hs=0, gamma=0.5) -> Dict[str, PipeParams]:
+def _pipes(nm=0, hm=0, na=0, ha=0, nd=0, hd=0, ns=0, hs=0, gamma=0.5,
+           fpu: FPUSpec = None) -> Dict[str, PipeParams]:
+    """Per-class PipeParams at a census; ``fpu`` supplies the technology
+    constants (t_p / t_o), defaulting to the paper-pe spec."""
+    f = fpu if fpu is not None else _PAPER_FPU
     g = gamma if isinstance(gamma, dict) else {k: gamma for k in OP_CLASSES}
     return {
-        "mul": PipeParams(n_i=nm, n_h=hm, gamma=g["mul"], t_p=T_P["mul"], t_o=T_O),
-        "add": PipeParams(n_i=na, n_h=ha, gamma=g["add"], t_p=T_P["add"], t_o=T_O),
-        "div": PipeParams(n_i=nd, n_h=hd, gamma=g["div"], t_p=T_P["div"], t_o=T_O),
-        "sqrt": PipeParams(n_i=ns, n_h=hs, gamma=g["sqrt"], t_p=T_P["sqrt"], t_o=T_O),
+        k: PipeParams(n_i=n, n_h=h, gamma=g[k], t_p=f.t_p[k], t_o=f.t_o)
+        for k, n, h in (("mul", nm, hm), ("add", na, ha),
+                        ("div", nd, hd), ("sqrt", ns, hs))
     }
 
 
@@ -100,7 +107,8 @@ def _pipes(nm=0, hm=0, na=0, ha=0, nd=0, hd=0, ns=0, hs=0, gamma=0.5) -> Dict[st
 # BLAS level 1-3 (paper section 4.1)
 # ---------------------------------------------------------------------------
 
-def characterize_ddot(n: int, schedule: str = "tree", accumulators: int = 1) -> WorkloadProfile:
+def characterize_ddot(n: int, schedule: str = "tree", accumulators: int = 1,
+                      fpu: FPUSpec = None) -> WorkloadProfile:
     """Inner product of two n-vectors (paper fig. 5).
 
     muls: n, all independent -> N_HM = 0 ("considering only dependency
@@ -134,11 +142,12 @@ def characterize_ddot(n: int, schedule: str = "tree", accumulators: int = 1) -> 
         crit = 1 + per_chain + math.ceil(math.log2(max(u, 2)))
     else:
         raise ValueError(f"unknown schedule {schedule!r}")
-    pipes = _pipes(nm=n_mul, hm=0, na=n_add, ha=h_add)
+    pipes = _pipes(nm=n_mul, hm=0, na=n_add, ha=h_add, fpu=fpu)
     return WorkloadProfile("ddot", pipes, flops=2.0 * n - 1, critical_path=crit)
 
 
-def characterize_dgemv(m: int, n: int, schedule: str = "tree", accumulators: int = 1) -> WorkloadProfile:
+def characterize_dgemv(m: int, n: int, schedule: str = "tree", accumulators: int = 1,
+                       fpu: FPUSpec = None) -> WorkloadProfile:
     """y = A x, A m-by-n: m independent inner products of length n.
 
     Independent rows interleave freely, so the *effective* hazard count per
@@ -146,7 +155,8 @@ def characterize_dgemv(m: int, n: int, schedule: str = "tree", accumulators: int
     paper models this as the compiler-driven hazard reduction. We keep the
     conservative per-row census and expose interleaving via `accumulators`.
     """
-    row = characterize_ddot(n, schedule=schedule, accumulators=accumulators)
+    row = characterize_ddot(n, schedule=schedule, accumulators=accumulators,
+                            fpu=fpu)
     pipes = {
         k: dataclasses.replace(pp, n_i=pp.n_i * m, n_h=pp.n_h * m)
         for k, pp in row.pipes.items()
@@ -154,7 +164,8 @@ def characterize_dgemv(m: int, n: int, schedule: str = "tree", accumulators: int
     return WorkloadProfile("dgemv", pipes, flops=m * (2.0 * n - 1), critical_path=row.critical_path)
 
 
-def characterize_dgemm(m: int, n: int, k: int, unroll: int = 4) -> WorkloadProfile:
+def characterize_dgemm(m: int, n: int, k: int, unroll: int = 4,
+                       fpu: FPUSpec = None) -> WorkloadProfile:
     """C = A B: m*n inner products of length k (paper eq. 10).
 
     "due to compiler optimizations the dependency hazards reduce" [23]: with
@@ -165,7 +176,7 @@ def characterize_dgemm(m: int, n: int, k: int, unroll: int = 4) -> WorkloadProfi
     n_add = m * n * (k - 1)
     base_h = m * n * max(k - 2, 0)          # sequential chains per C element
     h_add = base_h / max(unroll, 1)
-    pipes = _pipes(nm=n_mul, hm=0, na=n_add, ha=h_add)
+    pipes = _pipes(nm=n_mul, hm=0, na=n_add, ha=h_add, fpu=fpu)
     return WorkloadProfile("dgemm", pipes, flops=2.0 * m * n * k, critical_path=1 + (k - 1))
 
 
@@ -173,7 +184,8 @@ def characterize_dgemm(m: int, n: int, k: int, unroll: int = 4) -> WorkloadProfi
 # LAPACK (paper section 4.2)
 # ---------------------------------------------------------------------------
 
-def characterize_dgeqrf(n: int, unroll: int = 4) -> WorkloadProfile:
+def characterize_dgeqrf(n: int, unroll: int = 4,
+                        fpu: FPUSpec = None) -> WorkloadProfile:
     """Householder QR of an n-by-n matrix (DGEQRF).
 
     Counts (standard, e.g. Golub & Van Loan):
@@ -195,12 +207,13 @@ def characterize_dgeqrf(n: int, unroll: int = 4) -> WorkloadProfile:
     h_sqrt = max(n_sqrt - 1.0, 0.0)                       # fully serial
     pipes = _pipes(nm=n_mul, hm=0, na=n_add, ha=h_add, nd=n_div, hd=h_div,
                    ns=n_sqrt, hs=h_sqrt,
-                   gamma={"mul": 0.5, "add": 0.5, "div": 0.8, "sqrt": 0.9})
+                   gamma=dict((fpu or _PAPER_FPU).gamma), fpu=fpu)
     return WorkloadProfile("dgeqrf", pipes, flops=(4.0 / 3.0) * nf**3,
                            critical_path=3.0 * nf)
 
 
-def characterize_dgetrf(n: int, unroll: int = 4) -> WorkloadProfile:
+def characterize_dgetrf(n: int, unroll: int = 4,
+                        fpu: FPUSpec = None) -> WorkloadProfile:
     """LU with partial pivoting (DGETRF): ~n^3/3 mul+add, n(n-1)/2 serial divs.
 
     "the occurrence of division instruction in the program is similar to the
@@ -214,12 +227,13 @@ def characterize_dgetrf(n: int, unroll: int = 4) -> WorkloadProfile:
     h_add = n_add * 0.5 / max(unroll, 1)
     h_div = 0.8 * n_div
     pipes = _pipes(nm=n_mul, hm=0, na=n_add, ha=h_add, nd=n_div, hd=h_div,
-                   gamma={"mul": 0.5, "add": 0.5, "div": 0.8, "sqrt": 0.9})
+                   gamma=dict((fpu or _PAPER_FPU).gamma), fpu=fpu)
     return WorkloadProfile("dgetrf", pipes, flops=(2.0 / 3.0) * nf**3,
                            critical_path=2.0 * nf)
 
 
-def characterize_dpotrf(n: int, unroll: int = 4) -> WorkloadProfile:
+def characterize_dpotrf(n: int, unroll: int = 4,
+                        fpu: FPUSpec = None) -> WorkloadProfile:
     """Cholesky (DPOTRF): ~n^3/6 mul+add, n(n+1)/2 div, n serial sqrts."""
     nf = float(n)
     n_mul = nf**3 / 6.0
@@ -228,7 +242,7 @@ def characterize_dpotrf(n: int, unroll: int = 4) -> WorkloadProfile:
     n_sqrt = nf
     pipes = _pipes(nm=n_mul, hm=0, na=n_add, ha=n_add * 0.5 / max(unroll, 1),
                    nd=n_div, hd=0.8 * n_div, ns=n_sqrt, hs=max(n_sqrt - 1, 0),
-                   gamma={"mul": 0.5, "add": 0.5, "div": 0.8, "sqrt": 0.9})
+                   gamma=dict((fpu or _PAPER_FPU).gamma), fpu=fpu)
     return WorkloadProfile("dpotrf", pipes, flops=nf**3 / 3.0, critical_path=2.0 * nf)
 
 

@@ -26,7 +26,12 @@ analytically (DESIGN.md section 2 maps each one):
    compute with reduce-scatter) - same fill/overhead trade-off; used by
    train/grad.py.
 
-Hardware constants target TPU v5e and are recorded here as assumptions.
+Every planner takes ``machine=`` (a :class:`repro.arch.MachineSpec`;
+``None`` = the ambient :func:`repro.arch.current_machine`, default
+``"tpu-like"``), so the whole codesign layer is parameterized by a
+swappable machine instead of import-time globals. The module-level
+constants below are the ``"tpu-like"`` spec's values - kept so existing
+callers and the default-machine planner outputs stay bit-identical.
 """
 from __future__ import annotations
 
@@ -34,55 +39,89 @@ import dataclasses
 import math
 from typing import Dict, Optional, Tuple
 
-# ----------------------------- TPU v5e constants ---------------------------
-PEAK_BF16_FLOPS = 197e12          # per chip
-HBM_BW = 819e9                    # bytes/s per chip
-ICI_BW = 50e9                     # bytes/s per link (task constants)
-VMEM_BYTES = 96 * 2 ** 20         # usable VMEM budget we plan against
-MXU = 128                         # systolic array edge
-SUBLANE = 8                       # VPU sublanes (fp32)
-LANE = 128                        # VPU lanes
-VPU_ADD_LATENCY = 6               # cycles, dependent-add chain (assumption)
-VREG_BUDGET = 64                  # architectural vector registers
-ACC_OVERHEAD = 0.75               # c_o: issue slots of bookkeeping per extra
-                                  # accumulator (loop counters, final moves)
+from repro import arch as _arch
+from repro.arch import MachineSpec
+
+# ------------------- TPU v5e constants (= the "tpu-like" spec) --------------
+_TPU = _arch.get(_arch.DEFAULT_MACHINE)
+PEAK_BF16_FLOPS = _TPU.pe.peak_flops      # per chip
+HBM_BW = _TPU.memory.hbm_bw               # bytes/s per chip
+ICI_BW = _TPU.memory.ici_bw               # bytes/s per link (task constants)
+VMEM_BYTES = _TPU.memory.vmem_bytes       # usable VMEM budget we plan against
+MXU = _TPU.pe.mxu                         # systolic array edge
+SUBLANE = _TPU.pe.sublane                 # VPU sublanes (fp32)
+LANE = _TPU.pe.lane                       # VPU lanes
+VPU_ADD_LATENCY = _TPU.fpu.add_latency    # cycles, dependent-add chain
+VREG_BUDGET = _TPU.pe.vreg_budget         # architectural vector registers
+ACC_OVERHEAD = _TPU.fpu.acc_overhead      # c_o: issue slots of bookkeeping
+                                          # per extra accumulator
+PIPELINE_FILL_S = _TPU.memory.pipeline_fill_s   # per grid-step fill (fig. 2)
 
 
-def reduction_cost(n: float, u: int, latency: float = VPU_ADD_LATENCY,
-                   overhead: float = ACC_OVERHEAD) -> float:
-    """Issue-slot cost of reducing n elements with u parallel accumulators."""
+# every planner resolves machine= through the one shared arch helper
+_machine = _arch.resolve_machine
+
+
+def resolve_dtype_bytes(dtype=None, dtype_bytes: Optional[int] = None,
+                        machine: Optional[MachineSpec] = None) -> int:
+    """The one shared dtype-width default for every planner.
+
+    Precedence: an explicit ``dtype`` (itemsize), then an explicit
+    ``dtype_bytes``, then the machine's native compute dtype (bfloat16 ->
+    2 for ``"tpu-like"``, float64 -> 8 for ``"paper-pe"``). This replaces
+    the historical per-planner defaults (``plan_gemm`` assumed 2 while
+    ``plan_factorization``/``plan_trsm`` assumed 4).
+    """
+    if dtype is not None:
+        import numpy as np
+        try:
+            return int(np.dtype(dtype).itemsize)
+        except TypeError:
+            import jax.numpy as jnp
+            return int(jnp.dtype(dtype).itemsize)
+    if dtype_bytes is not None:
+        return int(dtype_bytes)
+    return _machine(machine).dtype_bytes()
+
+
+def reduction_cost(n: float, u: int, latency: Optional[float] = None,
+                   overhead: Optional[float] = None,
+                   machine: Optional[MachineSpec] = None) -> float:
+    """Issue-slot cost of reducing n elements with u parallel accumulators.
+
+    ``latency``/``overhead`` default to the machine's dependent-add chain
+    latency and accumulator bookkeeping cost.
+    """
+    m = _machine(machine)
+    latency = m.fpu.add_latency if latency is None else latency
+    overhead = m.fpu.acc_overhead if overhead is None else overhead
     u = max(1, int(u))
     steady = n * max(1.0, latency / u)
     combine = latency * math.ceil(math.log2(u)) if u > 1 else 0.0
     return steady + combine + overhead * u
 
 
-def optimal_accumulators(n: float, latency: float = VPU_ADD_LATENCY,
-                         overhead: float = ACC_OVERHEAD,
-                         max_u: int = VREG_BUDGET // 2,
-                         power_of_two: bool = True) -> int:
+def optimal_accumulators(n: float, latency: Optional[float] = None,
+                         overhead: Optional[float] = None,
+                         max_u: Optional[int] = None,
+                         power_of_two: bool = True,
+                         machine: Optional[MachineSpec] = None) -> int:
     """U minimizing :func:`reduction_cost` - the eq.-3 analogue on TPU.
 
     For large n the optimum is U ~ latency (fill the add pipe); for tiny n
     the combine tree + overhead terms pull it back - same shape as the
-    paper's fig. 3 curves.
+    paper's fig. 3 curves. Defaults (latency, overhead, register budget)
+    come from ``machine``.
     """
+    m = _machine(machine)
+    latency = m.fpu.add_latency if latency is None else latency
+    overhead = m.fpu.acc_overhead if overhead is None else overhead
+    max_u = m.pe.vreg_budget // 2 if max_u is None else max_u
     candidates = range(1, max_u + 1)
     if power_of_two:
         candidates = [1 << k for k in range(0, max_u.bit_length()) if (1 << k) <= max_u]
     best = min(candidates, key=lambda u: reduction_cost(n, u, latency, overhead))
     return int(best)
-
-
-
-def _dtype_bytes(dtype, dtype_bytes: int) -> int:
-    """Planner dtype plumbing: an explicit ``dtype`` overrides the raw
-    ``dtype_bytes`` count, so every planner can be called dtype-generically
-    (float32/float64/bfloat16) without the caller computing itemsizes."""
-    if dtype is None:
-        return dtype_bytes
-    import numpy as np
-    return int(np.dtype(dtype).itemsize)
 
 
 def _acc_bytes(dtype_bytes: int) -> int:
@@ -102,7 +141,12 @@ def _round_down_pow2(x: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class GemmPlan:
-    """Pallas GEMM tiling picked by the model."""
+    """Pallas GEMM tiling picked by the model.
+
+    ``ridge`` is the machine's compute/memory roofline knee
+    (peak_flops / hbm_bw); it defaults to the "tpu-like" value so plans
+    built without a machine keep the historical semantics.
+    """
 
     bm: int
     bn: int
@@ -111,20 +155,22 @@ class GemmPlan:
     grid: Tuple[int, int, int]
     vmem_bytes: int
     arithmetic_intensity: float   # flops / HBM byte at this tiling
+    ridge: float = PEAK_BF16_FLOPS / HBM_BW
 
     @property
     def compute_bound(self) -> bool:
-        return self.arithmetic_intensity >= PEAK_BF16_FLOPS / HBM_BW
+        return self.arithmetic_intensity >= self.ridge
 
 
-def plan_gemm(m: int, n: int, k: int, dtype_bytes: int = 2,
-              vmem_budget: int = VMEM_BYTES,
-              min_grid_steps: int = 4, dtype=None) -> GemmPlan:
+def plan_gemm(m: int, n: int, k: int, dtype_bytes: Optional[int] = None,
+              vmem_budget: Optional[int] = None,
+              min_grid_steps: int = 4, dtype=None,
+              machine: Optional[MachineSpec] = None) -> GemmPlan:
     """Choose (bm, bn, bk) for C[m,n] += A[m,k] B[k,n] on the MXU.
 
     Policy (each clause is one paper concept):
-      * MXU alignment: all block dims multiples of 128 (clamped to the
-        padded problem) - systolic-array full-tile occupancy.
+      * MXU alignment: all block dims multiples of the machine's systolic
+        edge (clamped to the padded problem) - full-tile occupancy.
       * VMEM capacity: A-, B-blocks double-buffered + fp32 accumulator block
         must fit the budget - the RF/LM capacity constraint of the PE/APE.
       * Grid length >= min_grid_steps so the HBM->VMEM software pipeline
@@ -132,21 +178,26 @@ def plan_gemm(m: int, n: int, k: int, dtype_bytes: int = 2,
       * Maximize bm*bn (arithmetic intensity ~ harmonic mean of block dims),
         then bk.
 
-    ``dtype`` (optional) overrides ``dtype_bytes`` with the dtype's
-    itemsize - the dtype-generic entry point.
+    ``dtype`` overrides ``dtype_bytes``; both default to the machine's
+    native dtype (:func:`resolve_dtype_bytes`). ``machine`` parameterizes
+    the alignment, capacity, and roofline terms.
     """
-    dtype_bytes = _dtype_bytes(dtype, dtype_bytes)
-    pm, pn, pk = (_round_up(max(d, 1), MXU) for d in (m, n, k))
+    mach = _machine(machine)
+    dtype_bytes = resolve_dtype_bytes(dtype, dtype_bytes, mach)
+    vmem_budget = mach.memory.vmem_bytes if vmem_budget is None else vmem_budget
+    mxu = mach.pe.mxu
+    ridge = mach.pe.peak_flops / mach.memory.hbm_bw
+    pm, pn, pk = (_round_up(max(d, 1), mxu) for d in (m, n, k))
     best: Optional[GemmPlan] = None
-    cands = [128, 256, 512, 1024]
+    cands = [mxu, 2 * mxu, 4 * mxu, 8 * mxu]
     for bm in cands:
-        if bm > pm and bm != MXU:
+        if bm > pm and bm != mxu:
             continue
         for bn in cands:
-            if bn > pn and bn != MXU:
+            if bn > pn and bn != mxu:
                 continue
-            for bk in (512, 1024, 2048, 256, 128):
-                if bk > pk and bk != MXU:
+            for bk in (4 * mxu, 8 * mxu, 16 * mxu, 2 * mxu, mxu):
+                if bk > pk and bk != mxu:
                     continue
                 bm_, bn_, bk_ = min(bm, pm), min(bn, pn), min(bk, pk)
                 # double-buffered A and B blocks + per-precision C accumulator
@@ -158,28 +209,31 @@ def plan_gemm(m: int, n: int, k: int, dtype_bytes: int = 2,
                 # to block multiples, not just MXU multiples)
                 grid = (-(-m // bm_), -(-n // bn_), -(-k // bk_))
                 steps = grid[0] * grid[1] * grid[2]
-                if steps < min_grid_steps and (bm_, bn_, bk_) != (MXU, MXU, MXU):
+                if steps < min_grid_steps and (bm_, bn_, bk_) != (mxu, mxu, mxu):
                     continue
                 ai = (2 * bm_ * bn_ * bk_) / ((bm_ * bk_ + bk_ * bn_) * dtype_bytes
                                               + bm_ * bn_ * dtype_bytes / max(grid[2], 1))
                 cand = GemmPlan(bm_, bn_, bk_,
-                                optimal_accumulators(bk_ // MXU, max_u=8),
-                                grid, vmem, ai)
+                                optimal_accumulators(bk_ // mxu, max_u=8,
+                                                     machine=mach),
+                                grid, vmem, ai, ridge)
                 key = (cand.arithmetic_intensity, bk_)
                 if best is None or key > (best.arithmetic_intensity, best.bk):
                     best = cand
     if best is None:  # degenerate tiny problem: single MXU tile
-        bm_, bn_, bk_ = min(MXU, pm), min(MXU, pn), min(MXU, pk)
+        bm_, bn_, bk_ = min(mxu, pm), min(mxu, pn), min(mxu, pk)
         vmem = 2 * (bm_ * bk_ + bk_ * bn_) * dtype_bytes \
             + bm_ * bn_ * _acc_bytes(dtype_bytes)
         ai = (2 * bm_ * bn_ * bk_) / ((bm_ * bk_ + bk_ * bn_ + bm_ * bn_) * dtype_bytes)
         best = GemmPlan(bm_, bn_, bk_, 1,
-                        (-(-m // bm_), -(-n // bn_), -(-k // bk_)), vmem, ai)
+                        (-(-m // bm_), -(-n // bn_), -(-k // bk_)), vmem, ai,
+                        ridge)
     return best
 
 
 def plan_from_blocks(m: int, n: int, k: int, bm: int, bn: int, bk: int,
-                     dtype_bytes: int = 2, dtype=None) -> GemmPlan:
+                     dtype_bytes: Optional[int] = None, dtype=None,
+                     machine: Optional[MachineSpec] = None) -> GemmPlan:
     """Rebuild a full :class:`GemmPlan` from explicit block dims.
 
     This is how registry entries (``{"bm","bn","bk"}``) and sweep
@@ -187,15 +241,18 @@ def plan_from_blocks(m: int, n: int, k: int, bm: int, bn: int, bk: int,
     arithmetic intensity are re-derived exactly as :func:`plan_gemm`
     derives them for its own picks. ``dtype`` overrides ``dtype_bytes``.
     """
-    dtype_bytes = _dtype_bytes(dtype, dtype_bytes)
+    mach = _machine(machine)
+    dtype_bytes = resolve_dtype_bytes(dtype, dtype_bytes, mach)
     bm_, bn_, bk_ = (max(int(b), 1) for b in (bm, bn, bk))
     grid = (-(-m // bm_), -(-n // bn_), -(-k // bk_))
     vmem = 2 * (bm_ * bk_ + bk_ * bn_) * dtype_bytes \
         + bm_ * bn_ * _acc_bytes(dtype_bytes)
     ai = (2 * bm_ * bn_ * bk_) / ((bm_ * bk_ + bk_ * bn_) * dtype_bytes
                                   + bm_ * bn_ * dtype_bytes / max(grid[2], 1))
-    return GemmPlan(bm_, bn_, bk_, optimal_accumulators(bk_ // MXU, max_u=8),
-                    grid, vmem, ai)
+    return GemmPlan(bm_, bn_, bk_,
+                    optimal_accumulators(bk_ // mach.pe.mxu, max_u=8,
+                                         machine=mach),
+                    grid, vmem, ai, mach.pe.peak_flops / mach.memory.hbm_bw)
 
 
 # ----------------------------- distributed GEMM ----------------------------
@@ -210,7 +267,7 @@ class PdgemmPlan:
     each a local GEMM (``local`` - planned exactly like the single-device
     kernel) fed by ring broadcasts whose per-hop bytes are priced against
     the inter-chip link, the way :mod:`repro.core.roofline` prices
-    collective bytes against ``ICI_BW``.
+    collective bytes against the machine's ICI bandwidth.
     """
 
     px: int
@@ -219,7 +276,7 @@ class PdgemmPlan:
     k_fine: int                   # k-panel width per step
     local: GemmPlan               # tiling of one local panel update
     compute_s: float              # per-device GEMM flops under the roofline
-    collective_s: float           # per-device ring-broadcast bytes / ICI_BW
+    collective_s: float           # per-device ring-broadcast bytes / ici_bw
     collective_bytes: int         # on-wire bytes per device, all steps
 
     @property
@@ -232,7 +289,8 @@ class PdgemmPlan:
 
 
 def plan_pdgemm(m: int, n: int, k: int, px: int, py: int,
-                dtype_bytes: int = 4, dtype=None) -> PdgemmPlan:
+                dtype_bytes: Optional[int] = None, dtype=None,
+                machine: Optional[MachineSpec] = None) -> PdgemmPlan:
     """Plan the SUMMA ``pdgemm`` on a (px, py) mesh.
 
     Per step (one of ``px * py`` fine k-panels) each device receives an
@@ -240,43 +298,53 @@ def plan_pdgemm(m: int, n: int, k: int, px: int, py: int,
     (:func:`repro.distributed.collectives.ring_bcast`), then runs a local
     ``(m/px, k_fine) @ (k_fine, n/py)`` update on the Pallas path. The
     collective term sums the per-hop bytes of both rings
-    (``ring_bcast_bytes``) over all steps against ``ICI_BW``; the compute
-    term is the local flops under the single-device roofline at the
-    ``local`` tiling. ``modeled_time`` is their max (overlap assumed), so
-    the plan exposes where the mesh stops paying - the cross-device
-    analogue of fig. 2's pipeline-fill saturation.
+    (``ring_bcast_bytes``) over all steps against the machine's ICI
+    bandwidth; the compute term is the local flops under the
+    single-device roofline at the ``local`` tiling. ``modeled_time`` is
+    their max (overlap assumed), so the plan exposes where the mesh stops
+    paying - the cross-device analogue of fig. 2's pipeline-fill
+    saturation.
     """
     from repro.distributed.collectives import ring_bcast_bytes
-    dtype_bytes = _dtype_bytes(dtype, dtype_bytes)
+    mach = _machine(machine)
+    dtype_bytes = resolve_dtype_bytes(dtype, dtype_bytes, mach)
     px, py = max(int(px), 1), max(int(py), 1)
     steps = px * py
     m_l = -(-max(m, 1) // px)
     n_l = -(-max(n, 1) // py)
     k_f = max(-(-max(k, 1) // steps), 1)
-    local = plan_gemm(m_l, n_l, k_f, dtype_bytes=dtype_bytes)
+    local = plan_gemm(m_l, n_l, k_f, dtype_bytes=dtype_bytes, machine=mach)
     flops = 2.0 * m_l * n_l * k_f * steps
-    rate = min(PEAK_BF16_FLOPS, local.arithmetic_intensity * HBM_BW)
-    compute_s = flops / rate + steps * PIPELINE_FILL_S
+    rate = min(mach.pe.peak_flops,
+               local.arithmetic_intensity * mach.memory.hbm_bw)
+    compute_s = flops / rate + steps * mach.memory.pipeline_fill_s
     a_panel = m_l * k_f * dtype_bytes
     b_panel = k_f * n_l * dtype_bytes
     coll_bytes = steps * (ring_bcast_bytes(a_panel, py)
                           + ring_bcast_bytes(b_panel, px))
     return PdgemmPlan(px, py, steps, k_f, local, compute_s,
-                      coll_bytes / ICI_BW, coll_bytes)
+                      coll_bytes / mach.memory.ici_bw, coll_bytes)
 
 
 # ------------------------- blocked-factorization plans ----------------------
 # Serial-chain cycles exposed per panel column: the paper's section-4.2
-# hazard profile per routine (DEFAULT_DEPTHS in core.pe: div 12, sqrt 14).
-# potrf: sqrt then a dependent div per column; getrf: pivot-compare + div;
-# geqrf: norm-sqrt, alpha-add, div scale, tau div.
-_PANEL_CHAIN_CYCLES = {"potrf": 14 + 12, "getrf": 6 + 12, "geqrf": 14 + 6 + 2 * 12}
+# hazard profile per routine, priced at the machine's per-class pipeline
+# depths. potrf: sqrt then a dependent div per column; getrf: pivot-compare
+# (adder) + div; geqrf: norm-sqrt, alpha-add, div scale, tau div.
+def _panel_chain_cycles(mach: MachineSpec) -> Dict[str, int]:
+    d = mach.fpu.depths
+    return {"potrf": d["sqrt"] + d["div"],
+            "getrf": d["add"] + d["div"],
+            "geqrf": d["sqrt"] + d["add"] + 2 * d["div"]}
+
+
+_PANEL_CHAIN_CYCLES = _panel_chain_cycles(_TPU)
 # flops(n) ~ coeff * n^3 for the square factorization. Public alias below:
 # benchmarks derive Gflop/s from the same table the model plans with.
 _FACTOR_FLOP_COEFF = {"potrf": 1.0 / 3.0, "getrf": 2.0 / 3.0, "geqrf": 4.0 / 3.0}
 FACTOR_FLOP_COEFF = _FACTOR_FLOP_COEFF
-MXU_CLOCK = PEAK_BF16_FLOPS / (2 * MXU * MXU)   # cycles/s implied by peak
-VPU_FLOPS = MXU_CLOCK * SUBLANE * LANE          # vector (non-MXU) peak
+MXU_CLOCK = _TPU.pe.mxu_clock             # cycles/s implied by peak
+VPU_FLOPS = _TPU.pe.vpu_flops             # vector (non-MXU) peak
 
 
 @dataclasses.dataclass(frozen=True)
@@ -300,30 +368,28 @@ class FactorizationPlan:
         return self.panel_time / t if t > 0 else 0.0
 
 
-PIPELINE_FILL_S = 2e-6   # per grid-step DMA/launch overhead (fig.-2 fill)
-
-
 def _factorization_time(n: int, nb: int, kind: str, dtype_bytes: int,
-                        batch: int) -> Tuple[float, float]:
+                        batch: int, mach: MachineSpec) -> Tuple[float, float]:
     """(panel_s, trailing_s) for one size-n factorization at panel width nb.
 
     Panel: the unblocked path is hazard-bound — per column, a serial
-    sqrt/div chain of ``_PANEL_CHAIN_CYCLES[kind]`` cycles (eq.-2's exposed
+    sqrt/div chain of the machine's per-class depths (eq.-2's exposed
     latency, unhidable by ILP) plus its rank-1 update flops at VPU rate.
     Trailing: DGEMM under the roofline — the k-extent of the update IS the
     panel width, so arithmetic intensity (and hence the achieved fraction of
-    peak) grows with nb until the PEAK/HBM_BW knee; each panel step also
+    peak) grows with nb until the peak/hbm_bw knee; each panel step also
     pays one software-pipeline fill (fig. 2's unamortized-fill region).
     """
-    chain = _PANEL_CHAIN_CYCLES[kind] / MXU_CLOCK
+    chain = _panel_chain_cycles(mach)[kind] / mach.pe.mxu_clock
     coeff = _FACTOR_FLOP_COEFF[kind]
+    fill = mach.memory.pipeline_fill_s
     panel_s = 0.0
     trailing_s = 0.0
     for j0 in range(0, n, nb):
         b = min(nb, n - j0)
         m = n - j0
-        panel_s += b * chain + (coeff * 3.0) * m * b * b / VPU_FLOPS \
-            + PIPELINE_FILL_S
+        panel_s += b * chain + (coeff * 3.0) * m * b * b / mach.pe.vpu_flops \
+            + fill
         rest = n - j0 - b
         if rest <= 0:
             continue
@@ -333,15 +399,17 @@ def _factorization_time(n: int, nb: int, kind: str, dtype_bytes: int,
         flops = gf * 2.0 * rest * b * rest
         bytes_moved = gf * (2 * rest * b + 2 * rest * rest) * dtype_bytes
         ai = flops / bytes_moved
-        rate = min(PEAK_BF16_FLOPS, ai * HBM_BW)
-        trailing_s += flops / rate + PIPELINE_FILL_S
+        rate = min(mach.pe.peak_flops, ai * mach.memory.hbm_bw)
+        trailing_s += flops / rate + fill
     return batch * panel_s, batch * trailing_s
 
 
-def plan_factorization(n: int, kind: str = "potrf", dtype_bytes: int = 4,
+def plan_factorization(n: int, kind: str = "potrf",
+                       dtype_bytes: Optional[int] = None,
                        batch: int = 1,
                        candidates: Tuple[int, ...] = (8, 16, 32, 64, 128),
-                       dtype=None) -> FactorizationPlan:
+                       dtype=None,
+                       machine: Optional[MachineSpec] = None) -> FactorizationPlan:
     """Pick the panel width NB for a blocked right-looking factorization.
 
     Same trade-off as the paper's pipeline-depth equation: the panel is the
@@ -352,19 +420,21 @@ def plan_factorization(n: int, kind: str = "potrf", dtype_bytes: int = 4,
     """
     if kind not in _FACTOR_FLOP_COEFF:
         raise ValueError(f"unknown factorization kind: {kind!r}")
-    dtype_bytes = _dtype_bytes(dtype, dtype_bytes)
+    mach = _machine(machine)
+    dtype_bytes = resolve_dtype_bytes(dtype, dtype_bytes, mach)
     n = max(int(n), 1)
     best_nb, best_t = None, None
     for nb in candidates:
         if nb > n and best_nb is not None:
             continue
         nb_ = min(nb, n)
-        p, t = _factorization_time(n, nb_, kind, dtype_bytes, batch)
+        p, t = _factorization_time(n, nb_, kind, dtype_bytes, batch, mach)
         if best_t is None or p + t < best_t:
             best_nb, best_t = nb_, p + t
     rest = max(n - best_nb, 1)
-    gemm = plan_gemm(rest, rest, best_nb, dtype_bytes=dtype_bytes)
-    p, t = _factorization_time(n, best_nb, kind, dtype_bytes, batch)
+    gemm = plan_gemm(rest, rest, best_nb, dtype_bytes=dtype_bytes,
+                     machine=mach)
+    p, t = _factorization_time(n, best_nb, kind, dtype_bytes, batch, mach)
     return FactorizationPlan(kind, best_nb, gemm, p, t, batch=batch)
 
 
@@ -381,9 +451,10 @@ class TrsmPlan:
         return self.panel_time + self.trailing_time
 
 
-def plan_trsm(n: int, nrhs: int = 1, dtype_bytes: int = 4,
+def plan_trsm(n: int, nrhs: int = 1, dtype_bytes: Optional[int] = None,
               candidates: Tuple[int, ...] = (16, 32, 64, 128),
-              dtype=None) -> TrsmPlan:
+              dtype=None,
+              machine: Optional[MachineSpec] = None) -> TrsmPlan:
     """Pick the diagonal-block width for the blocked TRSM.
 
     Same structure as :func:`plan_factorization`: the diagonal substitution
@@ -393,24 +464,27 @@ def plan_trsm(n: int, nrhs: int = 1, dtype_bytes: int = 4,
     the block grows. The modeled minimum is eq. 3's p_opt in software.
     ``dtype`` overrides ``dtype_bytes``.
     """
-    dtype_bytes = _dtype_bytes(dtype, dtype_bytes)
+    mach = _machine(machine)
+    dtype_bytes = resolve_dtype_bytes(dtype, dtype_bytes, mach)
     n = max(int(n), 1)
     nrhs = max(int(nrhs), 1)
-    chain = _PANEL_CHAIN_CYCLES["getrf"] / MXU_CLOCK   # pivotless div chain
+    # pivotless div chain
+    chain = _panel_chain_cycles(mach)["getrf"] / mach.pe.mxu_clock
+    fill = mach.memory.pipeline_fill_s
     best: Optional[TrsmPlan] = None
     for b in candidates:
         b_ = min(b, n)
         steps = -(-n // b_)
         # serial part: n dependent divides + the in-block AXPYs at VPU rate
-        panel = n * chain + 2.0 * n * b_ * nrhs / VPU_FLOPS \
-            + steps * PIPELINE_FILL_S
+        panel = n * chain + 2.0 * n * b_ * nrhs / mach.pe.vpu_flops \
+            + steps * fill
         # off-diagonal GEMMs: ~ n*(n-b)/2 * nrhs MACs under the roofline
         flops = max(n - b_, 0) * n * nrhs
         if flops > 0:
             bytes_moved = (max(n - b_, 0) * b_ + 2 * n * nrhs) * dtype_bytes
             ai = flops / max(bytes_moved, 1)
-            rate = min(PEAK_BF16_FLOPS, ai * HBM_BW)
-            trailing = flops / rate + steps * PIPELINE_FILL_S
+            rate = min(mach.pe.peak_flops, ai * mach.memory.hbm_bw)
+            trailing = flops / rate + steps * fill
         else:
             trailing = 0.0
         cand = TrsmPlan(b_, panel, trailing)
@@ -434,7 +508,8 @@ class AttentionPlan:
 
 def plan_attention(seq_q: int, seq_k: int, head_dim: int,
                    dtype_bytes: int = 2,
-                   vmem_budget: int = VMEM_BYTES) -> AttentionPlan:
+                   vmem_budget: Optional[int] = None,
+                   machine: Optional[MachineSpec] = None) -> AttentionPlan:
     """KV/Q block sizes for the streaming-softmax kernel.
 
     The online-softmax rescale is a serial dependence per KV block (the
@@ -442,8 +517,12 @@ def plan_attention(seq_q: int, seq_k: int, head_dim: int,
     cost of VMEM; block_q adds independent rows (free ILP, like dgemv's
     independent inner products).
     """
-    hd = _round_up(head_dim, LANE)
-    block_q = min(_round_up(min(seq_q, 512), SUBLANE), _round_up(seq_q, SUBLANE))
+    mach = _machine(machine)
+    vmem_budget = mach.memory.vmem_bytes if vmem_budget is None else vmem_budget
+    lane, sublane = mach.pe.lane, mach.pe.sublane
+    hd = _round_up(head_dim, lane)
+    block_q = min(_round_up(min(seq_q, 512), sublane),
+                  _round_up(seq_q, sublane))
     block_k = 1024
     while block_k > 128:
         # q, k, v blocks (double-buffered k/v) + scores + fp32 o/m/l
@@ -452,7 +531,7 @@ def plan_attention(seq_q: int, seq_k: int, head_dim: int,
         if vmem <= vmem_budget:
             break
         block_k //= 2
-    block_k = min(block_k, _round_up(seq_k, LANE))
+    block_k = min(block_k, _round_up(seq_k, lane))
     vmem = (block_q * hd * dtype_bytes + 2 * 2 * block_k * hd * dtype_bytes
             + block_q * block_k * 4 + block_q * (hd + 2) * 4)
     return AttentionPlan(block_q, block_k, -(-seq_k // block_k), vmem)
@@ -470,7 +549,8 @@ class SSDPlan:
 
 
 def plan_ssd(seq: int, heads: int, head_dim: int, state: int,
-             dtype_bytes: int = 2, vmem_budget: int = VMEM_BYTES) -> SSDPlan:
+             dtype_bytes: int = 2, vmem_budget: Optional[int] = None,
+             machine: Optional[MachineSpec] = None) -> SSDPlan:
     """Chunk length for the SSD scan.
 
     Within-chunk cost ~ c^2 * d (quadratic, parallel); cross-chunk cost is a
@@ -478,6 +558,9 @@ def plan_ssd(seq: int, heads: int, head_dim: int, state: int,
     c^2*d*(seq/c) + (seq/c)*L gives c* ~ sqrt-ish; we clamp to VMEM and
     hardware alignment, defaulting to the canonical 256 where it fits.
     """
+    mach = _machine(machine)
+    vmem_budget = mach.memory.vmem_bytes if vmem_budget is None else vmem_budget
+    sublane = mach.pe.sublane
     best_c = 256
     for c in (256, 128, 64):
         vmem = (c * head_dim * dtype_bytes * 3 + c * c * 4
@@ -485,13 +568,13 @@ def plan_ssd(seq: int, heads: int, head_dim: int, state: int,
         if vmem <= vmem_budget and c <= max(seq, 64):
             best_c = c
             break
-    best_c = min(best_c, max(_round_up(seq, SUBLANE), SUBLANE))
+    best_c = min(best_c, max(_round_up(seq, sublane), sublane))
     vmem = (best_c * head_dim * dtype_bytes * 3 + best_c * best_c * 4
             + head_dim * state * 4 + best_c * state * dtype_bytes * 2)
     return SSDPlan(best_c, -(-seq // best_c), vmem)
 
 
-def characterize_and_plan(profile) -> Dict[str, object]:
+def characterize_and_plan(profile, machine: Optional[MachineSpec] = None) -> Dict[str, object]:
     """End-to-end: a WorkloadProfile -> TPU kernel knobs.
 
     The paper's p_opt for the adder pipe becomes the accumulator count; the
@@ -501,7 +584,7 @@ def characterize_and_plan(profile) -> Dict[str, object]:
     add = profile.pipes.get("add")
     n = float(add.n_i) if add else 0.0
     return {
-        "accumulators": optimal_accumulators(max(n, 1.0)),
+        "accumulators": optimal_accumulators(max(n, 1.0), machine=machine),
         "hazard_ratios": profile.hazard_ratios(),
         "popt": profile.popt_closed_form(),
     }

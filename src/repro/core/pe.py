@@ -35,10 +35,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro import arch as _arch
+from repro.arch import MachineSpec
 from repro.core import isa
 from repro.core.characterization import T_O, T_P
 
-DEFAULT_DEPTHS = {"mul": 5, "add": 4, "div": 12, "sqrt": 14}
+# the paper's section-5 experimental optimum = the "paper-pe" machine's FPU
+DEFAULT_DEPTHS = dict(_arch.get("paper-pe").fpu.depths)
+
+
+def _fpu_of(machine):
+    """The FPUSpec a simulation prices against (None = "paper-pe" - the
+    historical DEFAULT_DEPTHS / characterization T_P / T_O constants)."""
+    m = machine if machine is not None else _arch.get("paper-pe")
+    return m.fpu
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,8 +82,9 @@ class PEResult:
         return self.flops / max(self.time, 1e-30)
 
 
-def _latency_vector(depths: Mapping[str, int]) -> np.ndarray:
-    p = {**DEFAULT_DEPTHS, **{k: int(v) for k, v in depths.items()}}
+def _latency_vector(depths: Mapping[str, int],
+                    base: Mapping[str, int] = None) -> np.ndarray:
+    p = {**(base or DEFAULT_DEPTHS), **{k: int(v) for k, v in depths.items()}}
     lat = np.zeros(isa.N_OPCODES, dtype=np.int32)
     lat[isa.NOP] = 1
     lat[isa.MUL] = p["mul"]
@@ -86,11 +97,14 @@ def _latency_vector(depths: Mapping[str, int]) -> np.ndarray:
 
 
 def cycle_time(depths: Mapping[str, int], used: Sequence[str] = ("mul", "add", "div", "sqrt"),
-               t_o: float = T_O) -> float:
+               t_o: float = T_O, t_p: Mapping[str, float] = None,
+               base: Mapping[str, int] = None) -> float:
     """Clock period = slowest pipe stage + latch overhead (paper's equal-
-    stage-time assumption across pipes, [18])."""
-    p = {**DEFAULT_DEPTHS, **{k: int(v) for k, v in depths.items()}}
-    stage = max(T_P[u] / p[u] for u in used) if used else 1.0
+    stage-time assumption across pipes, [18]). ``t_p``/``base`` default to
+    the "paper-pe" technology constants / depths."""
+    p = {**(base or DEFAULT_DEPTHS), **{k: int(v) for k, v in depths.items()}}
+    tp = t_p or T_P
+    stage = max(tp[u] / p[u] for u in used) if used else 1.0
     return stage + t_o
 
 
@@ -122,33 +136,47 @@ _scoreboard_sweep = jax.jit(jax.vmap(_scoreboard, in_axes=(None, None, None, 0))
 
 
 def simulate(stream: isa.InstrStream, depths: Mapping[str, int] | None = None,
-             t_o: float = T_O) -> PEResult:
-    """Run one stream at one depth configuration."""
-    depths = dict(DEFAULT_DEPTHS, **(depths or {}))
-    lat = jnp.asarray(_latency_vector(depths))
+             t_o: float = None,
+             machine: MachineSpec | None = None) -> PEResult:
+    """Run one stream at one depth configuration.
+
+    ``machine`` supplies the base depths and technology constants
+    (``None`` = the "paper-pe" spec, i.e. the historical defaults);
+    explicit ``depths`` / ``t_o`` override it.
+    """
+    fpu = _fpu_of(machine)
+    t_o = fpu.t_o if t_o is None else t_o
+    depths = dict(fpu.depths, **(depths or {}))
+    lat = jnp.asarray(_latency_vector(depths, base=fpu.depths))
     cycles, stalls = _scoreboard(jnp.asarray(stream.opcode),
                                  jnp.asarray(stream.src1),
                                  jnp.asarray(stream.src2), lat)
     used = [k for k, v in stream.census().items() if v > 0]
-    ct = cycle_time(depths, used=used or ("mul",), t_o=t_o)
+    ct = cycle_time(depths, used=used or ("mul",), t_o=t_o, t_p=fpu.t_p,
+                    base=fpu.depths)
     return PEResult(stream.name, depths, stream.n_instructions, stream.flops,
                     int(cycles), int(stalls), ct, 1.0 / ct)
 
 
 def sweep(stream: isa.InstrStream, unit: str, depth_values: Sequence[int],
-          fixed: Mapping[str, int] | None = None, t_o: float = T_O):
+          fixed: Mapping[str, int] | None = None, t_o: float = None,
+          machine: MachineSpec | None = None):
     """Depth sweep of one unit (figs 12-13): vmapped scoreboard, one scan.
 
     Returns a list of PEResult, one per depth in ``depth_values``.
+    ``machine`` supplies base depths + technology constants (``None`` =
+    "paper-pe", the historical defaults).
     """
-    fixed = dict(DEFAULT_DEPTHS, **(fixed or {}))
+    fpu = _fpu_of(machine)
+    t_o = fpu.t_o if t_o is None else t_o
+    fixed = dict(fpu.depths, **(fixed or {}))
     cfgs = []
     lats = []
     for d in depth_values:
         cfg = dict(fixed)
         cfg[unit] = int(d)
         cfgs.append(cfg)
-        lats.append(_latency_vector(cfg))
+        lats.append(_latency_vector(cfg, base=fpu.depths))
     lat = jnp.asarray(np.stack(lats))
     cycles, stalls = _scoreboard_sweep(jnp.asarray(stream.opcode),
                                        jnp.asarray(stream.src1),
@@ -156,7 +184,8 @@ def sweep(stream: isa.InstrStream, unit: str, depth_values: Sequence[int],
     used = [k for k, v in stream.census().items() if v > 0]
     out = []
     for cfg, cy, st in zip(cfgs, np.asarray(cycles), np.asarray(stalls)):
-        ct = cycle_time(cfg, used=used or ("mul",), t_o=t_o)
+        ct = cycle_time(cfg, used=used or ("mul",), t_o=t_o, t_p=fpu.t_p,
+                        base=fpu.depths)
         out.append(PEResult(stream.name, cfg, stream.n_instructions,
                             stream.flops, int(cy), int(st), ct, 1.0 / ct))
     return out
@@ -164,10 +193,14 @@ def sweep(stream: isa.InstrStream, unit: str, depth_values: Sequence[int],
 
 def sweep_joint(stream: isa.InstrStream, units: Sequence[str],
                 depth_values: Sequence[int],
-                fixed: Mapping[str, int] | None = None, t_o: float = T_O):
+                fixed: Mapping[str, int] | None = None, t_o: float = None,
+                machine: MachineSpec | None = None):
     """Sweep several units together at the same depth (fig. 12 sweeps adder
-    and multiplier jointly; fig. 13 sqrt and divider)."""
-    fixed = dict(DEFAULT_DEPTHS, **(fixed or {}))
+    and multiplier jointly; fig. 13 sqrt and divider). ``machine`` as in
+    :func:`sweep`."""
+    fpu = _fpu_of(machine)
+    t_o = fpu.t_o if t_o is None else t_o
+    fixed = dict(fpu.depths, **(fixed or {}))
     cfgs = []
     lats = []
     for d in depth_values:
@@ -175,7 +208,7 @@ def sweep_joint(stream: isa.InstrStream, units: Sequence[str],
         for u in units:
             cfg[u] = int(d)
         cfgs.append(cfg)
-        lats.append(_latency_vector(cfg))
+        lats.append(_latency_vector(cfg, base=fpu.depths))
     lat = jnp.asarray(np.stack(lats))
     cycles, stalls = _scoreboard_sweep(jnp.asarray(stream.opcode),
                                        jnp.asarray(stream.src1),
@@ -183,7 +216,8 @@ def sweep_joint(stream: isa.InstrStream, units: Sequence[str],
     used = [k for k, v in stream.census().items() if v > 0]
     out = []
     for cfg, cy, st in zip(cfgs, np.asarray(cycles), np.asarray(stalls)):
-        ct = cycle_time(cfg, used=used or ("mul",), t_o=t_o)
+        ct = cycle_time(cfg, used=used or ("mul",), t_o=t_o, t_p=fpu.t_p,
+                        base=fpu.depths)
         out.append(PEResult(stream.name, cfg, stream.n_instructions,
                             stream.flops, int(cy), int(st), ct, 1.0 / ct))
     return out

@@ -28,6 +28,7 @@ import json
 import re
 from typing import Dict, Optional
 
+from repro import arch as _arch
 from repro.core.codesign import HBM_BW, ICI_BW, PEAK_BF16_FLOPS
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -125,18 +126,31 @@ class Roofline:
     model_flops: float             # 6*N*D (train) or 2*N_active*tokens (serve), global
     bytes_per_device: float        # from memory_analysis (peak temp + args)
     extra: Dict[str, float] = dataclasses.field(default_factory=dict)
+    machine: Optional[str] = None  # registered machine name (None = default)
+
+    def machine_spec(self):
+        """The :class:`repro.arch.MachineSpec` this report prices against.
+
+        A machine name not registered in this process (e.g. a report
+        written by a process that registered a custom spec) degrades to
+        the default machine instead of raising - loaded reports must
+        always be readable."""
+        try:
+            return _arch.get(self.machine or _arch.DEFAULT_MACHINE)
+        except ValueError:
+            return _arch.get(_arch.DEFAULT_MACHINE)
 
     @property
     def compute_s(self) -> float:
-        return self.hlo_flops / PEAK_BF16_FLOPS
+        return self.hlo_flops / self.machine_spec().pe.peak_flops
 
     @property
     def memory_s(self) -> float:
-        return self.hlo_bytes / HBM_BW
+        return self.hlo_bytes / self.machine_spec().memory.hbm_bw
 
     @property
     def collective_s(self) -> float:
-        return self.coll_bytes / ICI_BW
+        return self.coll_bytes / self.machine_spec().memory.ici_bw
 
     @property
     def dominant(self) -> str:
@@ -164,7 +178,20 @@ class Roofline:
         t = self.step_time_s
         if t <= 0:
             return 0.0
-        return self.model_flops / (self.chips * PEAK_BF16_FLOPS * t)
+        return self.model_flops / (
+            self.chips * self.machine_spec().pe.peak_flops * t)
+
+    @property
+    def modeled_gflops_per_w(self) -> float:
+        """The paper's energy score at this schedule: per-chip useful
+        Gflop/s over the machine's modeled power (FLOP + HBM energy +
+        static) - comparable across registered machines."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        gflops = self.model_flops / (self.chips * t) / 1e9
+        return self.machine_spec().gflops_per_w(
+            gflops, hbm_bytes_per_s=self.hlo_bytes / t)
 
     def to_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -172,14 +199,17 @@ class Roofline:
                  collective_s=self.collective_s, dominant=self.dominant,
                  useful_flop_ratio=self.useful_flop_ratio,
                  roofline_fraction=self.roofline_fraction,
-                 step_time_s=self.step_time_s)
+                 step_time_s=self.step_time_s,
+                 machine=self.machine or _arch.DEFAULT_MACHINE,
+                 gflops_per_w=self.modeled_gflops_per_w)
         return d
 
 
 def from_compiled(arch: str, shape: str, mesh_name: str, chips: int,
                   compiled, model_flops: float,
                   extra: Optional[Dict[str, float]] = None,
-                  trip_aware: bool = True) -> Roofline:
+                  trip_aware: bool = True,
+                  machine: Optional[str] = None) -> Roofline:
     """Build a Roofline from a jax AOT ``compiled`` object.
 
     ``trip_aware=True`` derives flops/bytes/collectives from the
@@ -222,7 +252,8 @@ def from_compiled(arch: str, shape: str, mesh_name: str, chips: int,
                     hlo_flops=flops, hlo_bytes=byts,
                     coll_bytes=float(sum(coll.values())),
                     coll_breakdown=coll, model_flops=model_flops,
-                    bytes_per_device=bytes_per_dev, extra=extra)
+                    bytes_per_device=bytes_per_dev, extra=extra,
+                    machine=machine)
 
 
 def advice(r: Roofline) -> str:
@@ -257,5 +288,6 @@ def load_json(path: str):
         keep = {k: d[k] for k in ("arch", "shape", "mesh", "chips", "hlo_flops",
                                   "hlo_bytes", "coll_bytes", "coll_breakdown",
                                   "model_flops", "bytes_per_device", "extra")}
+        keep["machine"] = d.get("machine")      # pre-arch files resolve too
         out.append(Roofline(**keep))
     return out

@@ -19,6 +19,10 @@ mesh, registry, accumulation dtype - carried by a scoped
         c = linalg.gemm(a, b)                      # routes to pdgemm
         r = linalg.batched_cholesky(spd_batch)     # batch-sharded driver
 
+    with linalg.use(machine=arch.get("paper-pe")): # swap the machine model:
+        c = linalg.gemm(a, b)                      # planners + tuner keys
+                                                   # follow the MachineSpec
+
     linalg.set_context(policy="tuned",             # process-global default
                        registry="/path/to/registry.json")
     x = linalg.solve(a, b, context=dict(policy="reference"))  # per call

@@ -22,17 +22,41 @@ replaces.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import arch as _arch
 from repro.blas import level1 as _l1
 from repro.blas import level2 as _l2
 from repro.blas import level3 as _l3
 from repro.linalg.context import (current, resolved_accum_dtype,
-                                  resolved_interpret, resolved_mesh,
-                                  resolved_policy, resolved_registry)
+                                  resolved_interpret, resolved_machine,
+                                  resolved_mesh, resolved_policy,
+                                  resolved_registry)
+
+
+def _machine_scoped(fn):
+    """Run the routine body under the context's machine.
+
+    The resolved ``ctx.machine`` becomes the ambient
+    :func:`repro.arch.machine_scope` for the whole call, so every nested
+    planner/tuner resolution - the trailing updates inside a blocked
+    factorization included - sees it without kwarg threading. A ``None``
+    machine inherits whatever scope (or the process default) is already
+    active.
+    """
+    @functools.wraps(fn)
+    def wrapper(*args, context=None, **kw):
+        ctx = current(context)
+        mach = resolved_machine(ctx)
+        if mach is None:
+            return fn(*args, context=ctx, **kw)
+        with _arch.machine_scope(mach):
+            return fn(*args, context=ctx, **kw)
+    return wrapper
 
 
 def _dtypes(ctx, dtype, *arrays):
@@ -73,6 +97,7 @@ def _kw(ctx):
 
 # -------------------------------- level 3 -----------------------------------
 
+@_machine_scoped
 def gemm(a, b, c=None, alpha=1.0, beta=0.0, transa: bool = False,
          transb: bool = False, dtype=None, context=None) -> jnp.ndarray:
     """C <- alpha * op(A) op(B) + beta * C, any supported dtype.
@@ -106,6 +131,7 @@ def gemm(a, b, c=None, alpha=1.0, beta=0.0, transa: bool = False,
     return _cast(out, store)
 
 
+@_machine_scoped
 def syrk(a, c=None, alpha=1.0, beta=0.0, lower: bool = True,
          trans: bool = False, dtype=None, context=None) -> jnp.ndarray:
     """C <- alpha op(A) op(A)^T + beta C, symmetric output.
@@ -138,6 +164,7 @@ def syrk(a, c=None, alpha=1.0, beta=0.0, lower: bool = True,
     return _cast(out, store)
 
 
+@_machine_scoped
 def trsm(a, b, lower: bool = True, unit_diag: bool = False,
          left: bool = True, block: Optional[int] = None, dtype=None,
          context=None) -> jnp.ndarray:
@@ -168,6 +195,7 @@ def trsm(a, b, lower: bool = True, unit_diag: bool = False,
 
 # -------------------------------- level 2 -----------------------------------
 
+@_machine_scoped
 def gemv(a, x, y=None, alpha=1.0, beta=0.0, trans: bool = False,
          dtype=None, context=None) -> jnp.ndarray:
     """y <- alpha*op(A) x + beta*y. Kernel policies run op(A) x through
@@ -187,6 +215,7 @@ def gemv(a, x, y=None, alpha=1.0, beta=0.0, trans: bool = False,
     return _cast(out, store)
 
 
+@_machine_scoped
 def ger(alpha, x, y, a, dtype=None, context=None) -> jnp.ndarray:
     """A <- alpha * x y^T + A (rank-1 update, pure jnp)."""
     ctx = current(context)
@@ -195,6 +224,7 @@ def ger(alpha, x, y, a, dtype=None, context=None) -> jnp.ndarray:
     return _cast(out, store)
 
 
+@_machine_scoped
 def trsv(a, b, lower: bool = True, unit_diag: bool = False, dtype=None,
          context=None) -> jnp.ndarray:
     """Solve op(T) x = b via the row-sequential scan (the divider-hazard
@@ -208,6 +238,7 @@ def trsv(a, b, lower: bool = True, unit_diag: bool = False, dtype=None,
 
 # -------------------------------- level 1 -----------------------------------
 
+@_machine_scoped
 def dot(x, y, schedule: str = "tree", accumulators: int = 8, dtype=None,
         context=None) -> jnp.ndarray:
     """Inner product with an explicit reduction schedule
@@ -220,6 +251,7 @@ def dot(x, y, schedule: str = "tree", accumulators: int = 8, dtype=None,
     return _cast(out, store)
 
 
+@_machine_scoped
 def axpy(alpha, x, y, dtype=None, context=None) -> jnp.ndarray:
     """y <- alpha*x + y."""
     ctx = current(context)
@@ -227,6 +259,7 @@ def axpy(alpha, x, y, dtype=None, context=None) -> jnp.ndarray:
     return _cast(_l1.axpy(alpha, _cast(x, comp), _cast(y, comp)), store)
 
 
+@_machine_scoped
 def scal(alpha, x, dtype=None, context=None) -> jnp.ndarray:
     """x <- alpha*x."""
     ctx = current(context)
@@ -234,6 +267,7 @@ def scal(alpha, x, dtype=None, context=None) -> jnp.ndarray:
     return _cast(_l1.scal(alpha, _cast(x, comp)), store)
 
 
+@_machine_scoped
 def nrm2(x, dtype=None, context=None) -> jnp.ndarray:
     """Overflow-safe Euclidean norm."""
     ctx = current(context)
@@ -241,6 +275,7 @@ def nrm2(x, dtype=None, context=None) -> jnp.ndarray:
     return _cast(_l1.nrm2(_cast(x, comp)), store)
 
 
+@_machine_scoped
 def asum(x, dtype=None, context=None) -> jnp.ndarray:
     """Sum of absolute values."""
     ctx = current(context)
@@ -248,11 +283,13 @@ def asum(x, dtype=None, context=None) -> jnp.ndarray:
     return _cast(_l1.asum(_cast(x, comp)), store)
 
 
+@_machine_scoped
 def iamax(x, context=None) -> jnp.ndarray:
     """Index of the first max-|x| element (0-based int; no dtype cast)."""
     return _l1.iamax(jnp.asarray(x))
 
 
+@_machine_scoped
 def rot(x, y, c, s, dtype=None, context=None):
     """Apply a Givens rotation: (c*x + s*y, c*y - s*x)."""
     ctx = current(context)

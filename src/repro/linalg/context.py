@@ -23,6 +23,16 @@ The context carries the *deployment shape* of a call:
     (the default) leaves numerics exactly as the operand dtype dictates.
 ``interpret``
     Run Pallas kernels in interpret mode (required on CPU; default True).
+``machine``
+    A :class:`repro.arch.MachineSpec` (or registered machine name) the
+    call's planners and tuner lookups resolve against; ``None`` (the
+    default) inherits the ambient :func:`repro.arch.current_machine` -
+    the process default (``"tpu-like"`` unless
+    :func:`repro.arch.set_default_machine` changed it) or an enclosing
+    explicit ``arch.machine_scope``. Routines with a machine set enter an
+    :func:`repro.arch.machine_scope` for their whole body, so nested
+    resolutions - e.g. the trailing updates inside a blocked
+    factorization - see the same machine.
 
 Contexts layer: the module default, then :func:`set_context`, then nested
 :func:`use` blocks, then a per-call ``context=`` override - inner layers
@@ -59,7 +69,8 @@ class _UnsetType:
 
 UNSET = _UnsetType()
 
-_FIELDS = ("policy", "mesh", "registry", "accum_dtype", "interpret")
+_FIELDS = ("policy", "mesh", "registry", "accum_dtype", "interpret",
+           "machine")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +82,7 @@ class ExecutionContext:
     registry: Any = UNSET
     accum_dtype: Any = UNSET
     interpret: Any = UNSET
+    machine: Any = UNSET
 
     def __post_init__(self):
         if self.policy is not UNSET and self.policy is not None:
@@ -84,6 +96,14 @@ class ExecutionContext:
                 if len(self.mesh) != 2:
                     raise ValueError(
                         f"tuple mesh must be (px, py); got {self.mesh!r}")
+        if self.machine is not UNSET and self.machine is not None:
+            from repro.arch import MachineSpec, get as _arch_get
+            if isinstance(self.machine, str):
+                _arch_get(self.machine)     # unknown names fail eagerly
+            elif not isinstance(self.machine, MachineSpec):
+                raise ValueError(
+                    f"machine must be a MachineSpec, a registered machine "
+                    f"name, or None; got {type(self.machine).__name__}")
 
     def over(self, base: "ExecutionContext") -> "ExecutionContext":
         """This context layered over ``base``: set fields win."""
@@ -110,13 +130,20 @@ class ExecutionContext:
         acc = None if self.accum_dtype in (UNSET, None) \
             else np.dtype(self.accum_dtype).name
         interp = True if self.interpret is UNSET else bool(self.interpret)
+        from repro import arch as _arch
+        if self.machine in (UNSET, None):
+            mach = _arch.current_machine().name
+        elif isinstance(self.machine, str):
+            mach = self.machine
+        else:
+            mach = self.machine.name
         return {"policy": pol, "mesh": mesh, "registry": reg_path,
-                "accum_dtype": acc, "interpret": interp}
+                "accum_dtype": acc, "interpret": interp, "machine": mach}
 
 
 # fully-resolved root: what a call sees with no context set anywhere
 _DEFAULT = ExecutionContext(policy=None, mesh=None, registry=None,
-                            accum_dtype=None, interpret=True)
+                            accum_dtype=None, interpret=True, machine=None)
 # process-global base (set_context) + per-thread/task overlay scopes (use)
 _base = _DEFAULT
 _scopes: "contextvars.ContextVar[Tuple[ExecutionContext, ...]]" = \
@@ -194,9 +221,13 @@ def compat_context(policy=None, use_kernel=None, interpret: bool = True,
                    registry=None, use_pallas=None) -> ExecutionContext:
     """Old kwarg triple -> per-call context (the d-prefixed shims' bridge).
 
-    Pins ``mesh=None`` and ``accum_dtype=None`` so a deprecated call
-    behaves exactly like the pre-:mod:`repro.linalg` routine it shims -
-    local execution, operand-dtype accumulation - whatever context is
+    Pins ``mesh=None``, ``accum_dtype=None``, and ``machine=None`` so a
+    deprecated call behaves exactly like the pre-:mod:`repro.linalg`
+    routine it shims - local execution, operand-dtype accumulation, and
+    no machine opinion of its own (``machine=None`` overrides any
+    enclosing context machine; planning falls back to the ambient
+    :func:`repro.arch.current_machine`, i.e. the process default unless
+    an explicit ``arch.machine_scope`` is active) - whatever context is
     active. ``use_kernel`` / ``use_pallas`` go through
     :func:`repro.tune.policy.resolve_policy`, which owns their own
     deprecation warnings.
@@ -208,7 +239,7 @@ def compat_context(policy=None, use_kernel=None, interpret: bool = True,
         pol = UNSET
     return ExecutionContext(
         policy=pol, mesh=None, accum_dtype=None, interpret=interpret,
-        registry=registry if registry is not None else UNSET)
+        registry=registry if registry is not None else UNSET, machine=None)
 
 
 # ------------------------- lazy field normalizers ---------------------------
@@ -254,3 +285,15 @@ def resolved_interpret(ctx: ExecutionContext) -> bool:
 
 def resolved_accum_dtype(ctx: ExecutionContext):
     return None if ctx.accum_dtype in (UNSET, None) else ctx.accum_dtype
+
+
+def resolved_machine(ctx: ExecutionContext):
+    """ctx.machine as a MachineSpec-or-None (names resolved through the
+    arch registry; None = the process-default machine)."""
+    mach = ctx.machine
+    if mach is UNSET or mach is None:
+        return None
+    if isinstance(mach, str):
+        from repro import arch as _arch
+        return _arch.get(mach)
+    return mach

@@ -24,7 +24,7 @@ from repro.lapack import lu as _lu
 from repro.lapack import qr as _qr
 from repro.lapack import solve as _solve
 from repro.lapack.batched import FactorizationResult
-from repro.linalg.blas import _cast, _dtypes, _kw
+from repro.linalg.blas import _cast, _dtypes, _kw, _machine_scoped
 from repro.linalg.context import current, resolved_mesh
 
 
@@ -43,6 +43,7 @@ def _cast_result(res: FactorizationResult, store) -> FactorizationResult:
 
 # ------------------------------ factorizations ------------------------------
 
+@_machine_scoped
 def cholesky(a, block: Optional[int] = None, dtype=None,
              context=None) -> jnp.ndarray:
     """Lower-triangular Cholesky factor of an SPD matrix (or batch).
@@ -61,6 +62,7 @@ def cholesky(a, block: Optional[int] = None, dtype=None,
     return _cast(out, store)
 
 
+@_machine_scoped
 def lu(a, block: Optional[int] = None, dtype=None,
        context=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """LU with partial pivoting: (packed L\\U, int32 ipiv).
@@ -78,6 +80,7 @@ def lu(a, block: Optional[int] = None, dtype=None,
     return _cast(packed, store), piv
 
 
+@_machine_scoped
 def qr(a, block: Optional[int] = None, dtype=None,
        context=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Thin QR: (Q (m, min(m, n)), R (min(m, n), n)).
@@ -102,6 +105,7 @@ def qr(a, block: Optional[int] = None, dtype=None,
     return _cast(q, store), _cast(r, store)
 
 
+@_machine_scoped
 def solve(a, b, block: Optional[int] = None, dtype=None,
           context=None) -> jnp.ndarray:
     """Solve A X = B via pivoted LU (LAPACK GESV).
@@ -120,6 +124,7 @@ def solve(a, b, block: Optional[int] = None, dtype=None,
     return _cast(out, store)
 
 
+@_machine_scoped
 def lstsq(a, b, block: Optional[int] = None, dtype=None,
           context=None) -> jnp.ndarray:
     """Least-squares min ||A x - b|| via QR (m >= n, full column rank).
@@ -139,6 +144,7 @@ def lstsq(a, b, block: Optional[int] = None, dtype=None,
 
 # ------------------------------ batched drivers -----------------------------
 
+@_machine_scoped
 def batched_cholesky(a, block: Optional[int] = None, dtype=None,
                      context=None) -> FactorizationResult:
     """Cholesky of a (B, n, n) SPD batch -> FactorizationResult("potrf").
@@ -154,6 +160,7 @@ def batched_cholesky(a, block: Optional[int] = None, dtype=None,
     return _cast_result(res, store)
 
 
+@_machine_scoped
 def batched_lu(a, block: Optional[int] = None, dtype=None,
                context=None) -> FactorizationResult:
     """Pivoted LU of a (B, m, n) batch -> FactorizationResult("getrf")."""
@@ -165,6 +172,7 @@ def batched_lu(a, block: Optional[int] = None, dtype=None,
     return _cast_result(res, store)
 
 
+@_machine_scoped
 def batched_qr(a, block: Optional[int] = None, dtype=None,
                context=None) -> FactorizationResult:
     """Householder QR of a (B, m, n) batch -> FactorizationResult("geqrf")."""
@@ -176,6 +184,7 @@ def batched_qr(a, block: Optional[int] = None, dtype=None,
     return _cast_result(res, store)
 
 
+@_machine_scoped
 def batched_solve(res: FactorizationResult, b, dtype=None,
                   context=None) -> jnp.ndarray:
     """Solve A_i x_i = b_i from any FactorizationResult (mesh-routed)."""

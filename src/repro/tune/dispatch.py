@@ -25,10 +25,13 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import arch as _arch
+from repro.arch import MachineSpec
 from repro.core.codesign import (GemmPlan, plan_from_blocks, plan_gemm,
                                  plan_pdgemm, plan_trsm)
 from repro.tune.policy import resolve_policy, uses_kernel
 from repro.tune.registry import Registry, default_registry
+
 
 OPS = ("gemm", "gemv", "trsm", "syrk", "pdgemm")
 
@@ -45,12 +48,13 @@ class Resolution:
     gemm_plan: Optional[GemmPlan] = None
     block: Optional[int] = None   # trsm diagonal width
     mesh: Optional[str] = None    # registry mesh component (pdgemm)
+    machine: Optional[str] = None   # machine the call resolved under
 
     def describe(self) -> dict:
         """JSON-able summary - benchmarks attach this to every record so
         trajectories are comparable across PRs."""
         d = {"op": self.op, "policy": self.policy, "source": self.source,
-             "use_pallas": self.use_pallas}
+             "use_pallas": self.use_pallas, "machine": self.machine}
         if self.gemm_plan is not None:
             d["config"] = {"bm": self.gemm_plan.bm, "bn": self.gemm_plan.bn,
                            "bk": self.gemm_plan.bk}
@@ -65,24 +69,33 @@ def resolve(op: str, shape: Tuple[int, ...], dtype,
             policy: Optional[str] = None, use_kernel: Optional[bool] = None,
             registry: Optional[Registry] = None,
             backend: Optional[str] = None,
-            mesh: Optional[Tuple[int, int]] = None) -> Resolution:
+            mesh: Optional[Tuple[int, int]] = None,
+            machine: Optional[MachineSpec] = None) -> Resolution:
     """Resolve one call's config. shape is (m, n, k) for gemm/syrk/pdgemm
     (pdgemm: the *global* problem), (m, n) for gemv, (n, nrhs) for trsm.
     ``mesh`` is the (px, py) device mesh for pdgemm; its registry entries
     live under the mesh-suffixed key ``pdgemm|bucket|dtype|backend|pxXpyY``.
+    ``machine`` parameterizes every planner and (for non-default machines)
+    suffixes the registry key; ``None`` resolves the ambient
+    :func:`repro.arch.current_machine` - which is what
+    ``repro.linalg.use(machine=...)`` scopes for its routines.
     """
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
     if op == "pdgemm" and mesh is None:
         raise ValueError("pdgemm resolution needs mesh=(px, py)")
+    mach = _arch.resolve_machine(machine)
+    mach_str = _arch.machine_key_component(mach)
     mesh_str = f"x{mesh[0]}y{mesh[1]}" if (op == "pdgemm" and mesh) else None
     pol = resolve_policy(policy, use_kernel)
     if not uses_kernel(pol):
         if op == "trsm":
             # the reference path still needs a diagonal width; 64 is the
             # historical (pre-tuner) default
-            return Resolution(op, pol, "reference", False, block=64)
-        return Resolution(op, pol, "reference", False, mesh=mesh_str)
+            return Resolution(op, pol, "reference", False, block=64,
+                              machine=mach.name)
+        return Resolution(op, pol, "reference", False, mesh=mesh_str,
+                          machine=mach.name)
     dtype = jnp.dtype(dtype)
     backend = backend or jax.default_backend()
     cfg = None
@@ -97,46 +110,52 @@ def resolve(op: str, shape: Tuple[int, ...], dtype,
         elif op == "gemv":
             lookup_op, lookup_shape = "gemm", (shape[0], 1, shape[1])
         cfg = reg.lookup(lookup_op, lookup_shape, dtype, backend,
-                         mesh=mesh_str)
+                         mesh=mesh_str, machine=mach_str)
         source = "registry" if cfg is not None else "fallback-model"
     if op == "pdgemm":
         # the stored/planned config tiles the per-step *local* update
         # (m/px, k_fine) @ (k_fine, n/py) - see codesign.plan_pdgemm
         m, n, k = shape
         px, py = mesh
-        pplan = plan_pdgemm(m, n, k, px, py, dtype_bytes=dtype.itemsize)
+        pplan = plan_pdgemm(m, n, k, px, py, dtype_bytes=dtype.itemsize,
+                            machine=mach)
         if cfg is not None:
             local = plan_from_blocks(
                 -(-max(m, 1) // px), -(-max(n, 1) // py), pplan.k_fine,
                 cfg.params["bm"], cfg.params["bn"], cfg.params["bk"],
-                dtype_bytes=dtype.itemsize)
+                dtype_bytes=dtype.itemsize, machine=mach)
         else:
             local = pplan.local
         return Resolution(op, pol, source, True, gemm_plan=local,
-                          mesh=mesh_str)
+                          mesh=mesh_str, machine=mach.name)
     if op in ("gemm", "syrk"):
         m, n, k = shape
         if cfg is not None:
             plan = plan_from_blocks(m, n, k, cfg.params["bm"],
                                     cfg.params["bn"], cfg.params["bk"],
-                                    dtype_bytes=dtype.itemsize)
+                                    dtype_bytes=dtype.itemsize, machine=mach)
         else:
-            plan = plan_gemm(m, n, k, dtype_bytes=dtype.itemsize)
-        return Resolution(op, pol, source, True, gemm_plan=plan)
+            plan = plan_gemm(m, n, k, dtype_bytes=dtype.itemsize,
+                             machine=mach)
+        return Resolution(op, pol, source, True, gemm_plan=plan,
+                          machine=mach.name)
     if op == "gemv":
         m, n = shape
         if cfg is not None:
             plan = plan_from_blocks(m, 1, n, cfg.params["bm"],
                                     cfg.params["bn"], cfg.params["bk"],
-                                    dtype_bytes=dtype.itemsize)
+                                    dtype_bytes=dtype.itemsize, machine=mach)
         else:
-            plan = plan_gemm(m, 1, n, dtype_bytes=dtype.itemsize)
-        return Resolution(op, pol, source, True, gemm_plan=plan)
+            plan = plan_gemm(m, 1, n, dtype_bytes=dtype.itemsize,
+                             machine=mach)
+        return Resolution(op, pol, source, True, gemm_plan=plan,
+                          machine=mach.name)
     # trsm
     n, nrhs = shape
     block = cfg.params["block"] if cfg is not None \
-        else plan_trsm(n, nrhs, dtype_bytes=dtype.itemsize).block
-    return Resolution(op, pol, source, True, block=block)
+        else plan_trsm(n, nrhs, dtype_bytes=dtype.itemsize,
+                       machine=mach).block
+    return Resolution(op, pol, source, True, block=block, machine=mach.name)
 
 
 def _gemm_exec(a, b, res: Resolution, interpret: bool):
@@ -152,7 +171,8 @@ def _gemm_exec(a, b, res: Resolution, interpret: bool):
 
 def dispatch(op: str, *args, policy: Optional[str] = None,
              use_kernel: Optional[bool] = None, interpret: bool = True,
-             registry: Optional[Registry] = None, **kw):
+             registry: Optional[Registry] = None,
+             machine: Optional[MachineSpec] = None, **kw):
     """One entry point for every BLAS-3 / blocked-LAPACK kernel call.
 
     dispatch("gemm", a, b)             -> a @ b (by policy)
@@ -161,8 +181,14 @@ def dispatch(op: str, *args, policy: Optional[str] = None,
     dispatch("trsm", a, b, lower=..., unit_diag=..., left=..., block=...)
 
     alpha/beta epilogues stay in :mod:`repro.blas`; this layer only
-    resolves and runs the kernel-shaped core of each op.
+    resolves and runs the kernel-shaped core of each op. An explicit
+    ``machine`` scopes the whole call (including the cores it forwards
+    to); ``None`` uses the ambient current machine.
     """
+    if machine is not None:
+        with _arch.machine_scope(machine):
+            return dispatch(op, *args, policy=policy, use_kernel=use_kernel,
+                            interpret=interpret, registry=registry, **kw)
     if op == "gemm":
         a, b = args
         n_out = b.shape[1] if b.ndim == 2 else 1

@@ -1,12 +1,15 @@
 """Persistent kernel-config registry with in-memory LRU lookup.
 
 Winning sweep configs are cached as JSON keyed by
-``(op, shape-bucket, dtype, backend[, mesh])`` (see the package docstring
-for the exact file format; the optional mesh component scopes distributed
-ops to one device-mesh shape). Loading is lazy and *graceful*: a missing, unreadable,
-or schema-incompatible file yields an empty registry - dispatch then falls
-back to the model-predicted plan, so a broken cache can never change
-numerics, only speed.
+``(op, shape-bucket, dtype, backend[, mesh][, machine])`` (see the package
+docstring for the exact file format; the optional mesh component scopes
+distributed ops to one device-mesh shape, and the optional machine
+component scopes entries tuned under a non-default
+:class:`repro.arch.MachineSpec` - the default machine omits it, so every
+pre-arch registry file keeps resolving unchanged). Loading is lazy and
+*graceful*: a missing, unreadable, or schema-incompatible file yields an
+empty registry - dispatch then falls back to the model-predicted plan, so
+a broken cache can never change numerics, only speed.
 """
 from __future__ import annotations
 
@@ -59,18 +62,25 @@ def shape_bucket(shape: Sequence[int]) -> Tuple[int, ...]:
 
 
 def make_key(op: str, shape: Sequence[int], dtype, backend: str,
-             mesh: Optional[str] = None) -> str:
-    """Registry key ``op|shape-bucket|dtype|backend[|mesh]``.
+             mesh: Optional[str] = None,
+             machine: Optional[str] = None) -> str:
+    """Registry key ``op|shape-bucket|dtype|backend[|mesh][|m:machine]``.
 
     ``mesh`` is the device-mesh component for distributed ops (e.g.
     ``"x2y4"`` for a 2x4 ("x", "y") mesh - see
-    :func:`repro.blas.distributed.mesh_key`). Single-device entries omit
-    it, so every pre-mesh registry file keeps resolving unchanged.
+    :func:`repro.blas.distributed.mesh_key`). ``machine`` is the machine
+    name for entries tuned under a non-default
+    :class:`repro.arch.MachineSpec` (``m:``-prefixed so it can never
+    collide with a mesh component). Single-device, default-machine
+    entries omit both, so every pre-mesh/pre-arch registry file keeps
+    resolving unchanged.
     """
     bucket = "x".join(str(d) for d in shape_bucket(shape))
     import numpy as np
     key = f"{op}|{bucket}|{np.dtype(dtype).name}|{backend}"
-    return key if mesh is None else f"{key}|{mesh}"
+    if mesh is not None:
+        key = f"{key}|{mesh}"
+    return key if machine is None else f"{key}|m:{machine}"
 
 
 class Registry:
@@ -139,14 +149,16 @@ class Registry:
     # -------------------------------- access --------------------------------
 
     def lookup(self, op: str, shape: Sequence[int], dtype, backend: str,
-               mesh: Optional[str] = None) -> Optional[KernelConfig]:
+               mesh: Optional[str] = None,
+               machine: Optional[str] = None) -> Optional[KernelConfig]:
         """LRU lookup; None on miss (dispatch falls back to the model).
 
         ``mesh`` scopes the key to one device-mesh shape (distributed ops);
-        ``None`` is the single-device namespace.
+        ``machine`` to one non-default machine spec; ``None`` is the
+        single-device / default-machine namespace.
         """
         self._ensure_loaded()
-        key = make_key(op, shape, dtype, backend, mesh)
+        key = make_key(op, shape, dtype, backend, mesh, machine)
         cfg = self._entries.get(key)
         if cfg is not None:
             self._entries.move_to_end(key)
@@ -155,9 +167,10 @@ class Registry:
     def record(self, op: str, shape: Sequence[int], dtype, backend: str,
                params: Mapping[str, int], source: str = "sweep",
                measured_s: Optional[float] = None,
-               mesh: Optional[str] = None) -> KernelConfig:
+               mesh: Optional[str] = None,
+               machine: Optional[str] = None) -> KernelConfig:
         self._ensure_loaded()
-        key = make_key(op, shape, dtype, backend, mesh)
+        key = make_key(op, shape, dtype, backend, mesh, machine)
         cfg = KernelConfig(op=op, params={k: int(v) for k, v in params.items()},
                            source=source, measured_s=measured_s)
         self._entries[key] = cfg

@@ -26,20 +26,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import arch as _arch
+from repro.arch import MachineSpec
 from repro.core import pipeline_model
-from repro.core.codesign import (GemmPlan, HBM_BW, PEAK_BF16_FLOPS,
-                                 PIPELINE_FILL_S, VMEM_BYTES, plan_from_blocks,
-                                 plan_gemm, plan_trsm)
+from repro.core.codesign import (GemmPlan, plan_from_blocks, plan_gemm,
+                                 plan_trsm)
 from repro.tune.registry import KernelConfig, Registry, default_registry
 
-_GEMM_BLOCK_GRID = (128, 256, 512)
+
+# machine resolution + registry-key component: the shared arch helpers
+# (recording here and lookup in dispatch must agree on the namespace rule)
+_mach = _arch.resolve_machine
+_mach_key = _arch.machine_key_component
+
+
+def _block_grid(mach: MachineSpec) -> Tuple[int, ...]:
+    """Sweep neighborhood: 1x / 2x / 4x the machine's systolic edge."""
+    return (mach.pe.mxu, 2 * mach.pe.mxu, 4 * mach.pe.mxu)
 
 
 def model_score(plan: GemmPlan, m: int, n: int, k: int,
-                dtype_bytes: int) -> float:
+                dtype_bytes: int,
+                machine: Optional[MachineSpec] = None) -> float:
     """Modeled seconds for one GEMM at this tiling (lower is better)."""
+    mach = _mach(machine)
     flops = 2.0 * m * n * k
-    roofline_rate = min(PEAK_BF16_FLOPS, plan.arithmetic_intensity * HBM_BW)
+    roofline_rate = min(mach.pe.peak_flops,
+                        plan.arithmetic_intensity * mach.memory.hbm_bw)
     compute_s = flops / roofline_rate
     # grid pipeline through eq. 2: steps are instructions, the K-carried
     # accumulator dependence is the hazard, DMA time is the logic delay,
@@ -48,32 +61,37 @@ def model_score(plan: GemmPlan, m: int, n: int, k: int,
     g0, g1, g2 = plan.grid
     steps = max(g0 * g1 * g2, 1)
     hazards = g0 * g1 * max(g2 - 1, 0)
-    t_dma = (plan.bm * plan.bk + plan.bk * plan.bn) * dtype_bytes / HBM_BW
+    t_dma = (plan.bm * plan.bk + plan.bk * plan.bn) * dtype_bytes         / mach.memory.hbm_bw
     per_step = float(pipeline_model.tpi(
         2.0, n_i=float(steps), n_h=float(hazards), gamma=0.5, t_p=t_dma,
-        t_o=PIPELINE_FILL_S))
+        t_o=mach.memory.pipeline_fill_s))
     return max(compute_s, per_step * steps)
 
 
 def gemm_candidates(m: int, n: int, k: int, dtype_bytes: int = 4,
                     max_candidates: int = 8,
-                    vmem_budget: int = VMEM_BYTES) -> List[GemmPlan]:
+                    vmem_budget: Optional[int] = None,
+                    machine: Optional[MachineSpec] = None) -> List[GemmPlan]:
     """Model pick first, then its VMEM-feasible neighbors, ranked by
     :func:`model_score`. Never empty."""
-    seed = plan_gemm(m, n, k, dtype_bytes=dtype_bytes)
+    mach = _mach(machine)
+    vmem_budget = mach.memory.vmem_bytes if vmem_budget is None         else vmem_budget
+    seed = plan_gemm(m, n, k, dtype_bytes=dtype_bytes, machine=mach)
     seen = {(seed.bm, seed.bn, seed.bk)}
     cands = [seed]
-    for bm in _GEMM_BLOCK_GRID:
-        for bn in _GEMM_BLOCK_GRID:
-            for bk in _GEMM_BLOCK_GRID:
+    grid = _block_grid(mach)
+    for bm in grid:
+        for bn in grid:
+            for bk in grid:
                 p = plan_from_blocks(m, n, k, bm, bn, bk,
-                                     dtype_bytes=dtype_bytes)
+                                     dtype_bytes=dtype_bytes, machine=mach)
                 key = (p.bm, p.bn, p.bk)
                 if key in seen or p.vmem_bytes > vmem_budget:
                     continue
                 seen.add(key)
                 cands.append(p)
-    ranked = sorted(cands, key=lambda p: model_score(p, m, n, k, dtype_bytes))
+    ranked = sorted(cands, key=lambda p: model_score(p, m, n, k, dtype_bytes,
+                                                     machine=mach))
     # the model seed always survives the cut (it is the fallback config)
     top = ranked[:max_candidates]
     if seed not in top:
@@ -117,17 +135,20 @@ _timeit = measure_wall_time
 def tune_gemm(m: int, n: int, k: int, dtype=jnp.float32,
               registry: Optional[Registry] = None, top_k: int = 3,
               reps: int = 2, interpret: Optional[bool] = None,
-              seed: int = 0) -> SweepResult:
+              seed: int = 0,
+              machine: Optional[MachineSpec] = None) -> SweepResult:
     """Sweep Pallas GEMM block shapes for one (m, n, k, dtype); record the
-    measured winner in the registry keyed by the shape bucket."""
+    measured winner in the registry keyed by the shape bucket (plus the
+    machine component for a non-default ``machine``)."""
     from repro.kernels import ops                   # lazy: kernels optional
+    mach = _mach(machine)
     reg = registry if registry is not None else default_registry()
     backend = jax.default_backend()
     interp = (backend != "tpu") if interpret is None else interpret
     dtype = jnp.dtype(dtype)
-    model_pick = plan_gemm(m, n, k, dtype_bytes=dtype.itemsize)
+    model_pick = plan_gemm(m, n, k, dtype_bytes=dtype.itemsize, machine=mach)
     cands = gemm_candidates(m, n, k, dtype_bytes=dtype.itemsize,
-                            max_candidates=max(top_k, 1))
+                            max_candidates=max(top_k, 1), machine=mach)
     rng = np.random.default_rng(seed)
     a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)).astype(dtype)
     b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32)).astype(dtype)
@@ -139,13 +160,15 @@ def tune_gemm(m: int, n: int, k: int, dtype=jnp.float32,
         t = _timeit(f, a, b, reps=reps)
         measured.append({"bm": plan.bm, "bn": plan.bn, "bk": plan.bk,
                          "seconds": t,
-                         "model_s": model_score(plan, m, n, k, dtype.itemsize)})
+                         "model_s": model_score(plan, m, n, k, dtype.itemsize,
+                                                machine=mach)})
         if best_t is None or t < best_t:
             best_i, best_t = i, t
     win = cands[best_i]
     cfg = reg.record("gemm", (m, n, k), dtype, backend,
                      {"bm": win.bm, "bn": win.bn, "bk": win.bk},
-                     source="sweep", measured_s=best_t)
+                     source="sweep", measured_s=best_t,
+                     machine=_mach_key(mach))
     return SweepResult("gemm", (m, n, k), dtype.name, backend,
                        tuple(measured), cfg,
                        {"bm": model_pick.bm, "bn": model_pick.bn,
@@ -156,7 +179,8 @@ def seed_registry_from_model(registry: Optional[Registry] = None,
                              gemm_shapes: Sequence[Tuple[int, int, int]] = (),
                              trsm_shapes: Sequence[Tuple[int, int]] = (),
                              dtypes: Sequence = (jnp.float32,),
-                             backend: Optional[str] = None) -> int:
+                             backend: Optional[str] = None,
+                             machine: Optional[MachineSpec] = None) -> int:
     """Record the *model's* pick for every (op, shape, dtype) as a real
     registry entry (``source="model"``, unmeasured).
 
@@ -167,28 +191,33 @@ def seed_registry_from_model(registry: Optional[Registry] = None,
     later measured sweep simply overwrites the entry in place. Returns
     the number of entries recorded.
     """
+    mach = _mach(machine)
+    mkey = _mach_key(mach)
     reg = registry if registry is not None else default_registry()
     backend = backend or jax.default_backend()
     count = 0
     for dtype in dtypes:
         dt = jnp.dtype(dtype)
         for m, n, k in gemm_shapes:
-            p = plan_gemm(m, n, k, dtype_bytes=dt.itemsize)
+            p = plan_gemm(m, n, k, dtype_bytes=dt.itemsize, machine=mach)
             reg.record("gemm", (m, n, k), dt, backend,
-                       {"bm": p.bm, "bn": p.bn, "bk": p.bk}, source="model")
+                       {"bm": p.bm, "bn": p.bn, "bk": p.bk}, source="model",
+                       machine=mkey)
             count += 1
         for n, nrhs in trsm_shapes:
-            p = plan_trsm(n, nrhs, dtype_bytes=dt.itemsize)
+            p = plan_trsm(n, nrhs, dtype_bytes=dt.itemsize, machine=mach)
             reg.record("trsm", (n, nrhs), dt, backend,
-                       {"block": p.block}, source="model")
+                       {"block": p.block}, source="model", machine=mkey)
             count += 1
     return count
 
 
 def trsm_candidates(n: int, nrhs: int, dtype_bytes: int = 4,
-                    blocks: Sequence[int] = (16, 32, 64, 128)) -> List[int]:
+                    blocks: Sequence[int] = (16, 32, 64, 128),
+                    machine: Optional[MachineSpec] = None) -> List[int]:
     """Model pick first, then the remaining distinct feasible widths."""
-    seedb = plan_trsm(n, nrhs, dtype_bytes=dtype_bytes).block
+    seedb = plan_trsm(n, nrhs, dtype_bytes=dtype_bytes,
+                      machine=machine).block
     out = [seedb]
     for b in blocks:
         b_ = min(int(b), max(int(n), 1))
@@ -200,7 +229,8 @@ def trsm_candidates(n: int, nrhs: int, dtype_bytes: int = 4,
 def tune_trsm(n: int, nrhs: int = 8, dtype=jnp.float32,
               registry: Optional[Registry] = None, reps: int = 2,
               blocks: Sequence[int] = (16, 32, 64, 128),
-              seed: int = 0) -> SweepResult:
+              seed: int = 0,
+              machine: Optional[MachineSpec] = None) -> SweepResult:
     """Sweep the blocked-TRSM diagonal width; record the measured winner.
 
     Measured on the reference inner-GEMM path (the block trade-off - serial
@@ -208,6 +238,7 @@ def tune_trsm(n: int, nrhs: int = 8, dtype=jnp.float32,
     interpret-mode kernel would drown it in emulation overhead on CPU).
     """
     from repro.blas import level3                   # lazy: avoid import cycle
+    mach = _mach(machine)
     reg = registry if registry is not None else default_registry()
     backend = jax.default_backend()
     dtype = jnp.dtype(dtype)
@@ -216,7 +247,8 @@ def tune_trsm(n: int, nrhs: int = 8, dtype=jnp.float32,
         + 4.0 * np.eye(n, dtype=np.float32)
     t = jnp.asarray(t_np).astype(dtype)
     b = jnp.asarray(rng.normal(size=(n, nrhs)).astype(np.float32)).astype(dtype)
-    cands = trsm_candidates(n, nrhs, dtype_bytes=dtype.itemsize, blocks=blocks)
+    cands = trsm_candidates(n, nrhs, dtype_bytes=dtype.itemsize, blocks=blocks,
+                            machine=mach)
     measured = []
     best_i, best_t = 0, None
     for i, blk in enumerate(cands):
@@ -228,6 +260,6 @@ def tune_trsm(n: int, nrhs: int = 8, dtype=jnp.float32,
             best_i, best_t = i, sec
     cfg = reg.record("trsm", (n, nrhs), dtype, backend,
                      {"block": cands[best_i]}, source="sweep",
-                     measured_s=best_t)
+                     measured_s=best_t, machine=_mach_key(mach))
     return SweepResult("trsm", (n, nrhs), dtype.name, backend,
                        tuple(measured), cfg, {"block": cands[0]})

@@ -183,3 +183,131 @@ def test_sweep_matches_individual_sims():
     for r in res:
         single = pe.simulate(stream, r.depths)
         assert single.cycles == r.cycles
+
+
+# ---------------------------------------------------------------------------
+# sweep / sweep_joint vs the analytic optimum (paper eq. 3) per op class
+# ---------------------------------------------------------------------------
+# The eq.-2/3 model is exact for a stream of W interleaved dependence
+# chains: below depth W the pipe issues every cycle (deeper = faster
+# clock); above it every instruction exposes latency (deeper = more
+# stalls), so the measured optimum is W. Calibrating gamma to
+# t_p / (t_o * W^2) makes eq. 3 predict exactly that point, so simulator
+# and closed form must agree within +/-1 stage - the paper's 'theoretical
+# curves corroborate simulations', made sharp.
+
+from hypothesis import given, settings, strategies as st
+
+from repro.arch import FPUSpec, MachineSpec, MemorySpec, PEGeometry, \
+    PowerAreaSpec
+
+_CHAIN_OPCODES = {"mul": isa.MUL, "add": isa.ADD, "div": isa.DIV,
+                  "sqrt": isa.SQRT}
+_CHAIN_T_P, _CHAIN_T_O = 55.0, 0.5      # Hartstein-Puzak FO4 ratios
+
+
+def _chain_stream(op_class: str, n: int, width: int) -> isa.InstrStream:
+    """n ops of one class in ``width`` interleaved dependence chains
+    (instruction i depends on i - width)."""
+    opcode = np.full(n, _CHAIN_OPCODES[op_class], np.int32)
+    src1 = np.arange(n, dtype=np.int32) - width
+    src1[src1 < 0] = -1
+    src2 = np.full(n, -1, np.int32)
+    return isa.InstrStream(f"chain-{op_class}-w{width}", opcode, src1, src2)
+
+
+def _chain_machine(width: int) -> MachineSpec:
+    gamma = _CHAIN_T_P / (_CHAIN_T_O * width * width)
+    cls = ("mul", "add", "div", "sqrt")
+    return MachineSpec(
+        name=f"chain-w{width}",
+        fpu=FPUSpec(depths={"mul": 5, "add": 4, "div": 12, "sqrt": 14},
+                    t_p={k: _CHAIN_T_P for k in cls}, t_o=_CHAIN_T_O,
+                    gamma={k: gamma for k in cls}),
+        memory=MemorySpec(hbm_bw=1e9, vmem_bytes=1 << 20, ici_bw=1e9),
+        pe=PEGeometry(mxu=8, sublane=1, lane=8, vreg_budget=8,
+                      peak_flops=1e9),
+        power_area=PowerAreaSpec(
+            pj_per_flop={k: 1.0 for k in cls}, pj_per_byte_hbm=1.0,
+            static_w=1.0, area_mm2=1.0))
+
+
+@given(op_class=st.sampled_from(["mul", "add", "div", "sqrt"]),
+       width=st.sampled_from([4, 6, 10, 16]))
+@settings(max_examples=16, deadline=None)
+def test_sweep_best_depth_matches_eq3_popt(op_class, width):
+    """Per op class: the measured sweep optimum equals the eq.-3 closed
+    form within one stage (FPUSpec.p_opt is the analytic side)."""
+    n = 20 * width
+    mach = _chain_machine(width)
+    res = pe.sweep(_chain_stream(op_class, n, width), op_class,
+                   list(range(1, 33)), machine=mach)
+    best = pe.best_depth(res, op_class)
+    popt = mach.fpu.p_opt(op_class, n_i=n, n_h=n - width)
+    assert abs(best - popt) <= 1.0, \
+        f"{op_class} w={width}: sweep best {best} vs eq.-3 {popt:.2f}"
+
+
+@given(width=st.sampled_from([4, 8, 12]))
+@settings(max_examples=6, deadline=None)
+def test_sweep_joint_matches_eq3_popt(width):
+    """sweep_joint over the serial pair (sqrt, div) - the fig.-13 pairing -
+    agrees with eq. 3 within one stage when both pipes share the chain
+    structure."""
+    n = 20 * width
+    mach = _chain_machine(width)
+    # interleave sqrt and div chains: even slots sqrt, odd slots div, each
+    # depending on the same-class op `width` same-class slots earlier
+    opcode = np.empty(2 * n, np.int32)
+    opcode[0::2] = isa.SQRT
+    opcode[1::2] = isa.DIV
+    src1 = np.arange(2 * n, dtype=np.int32) - 2 * width
+    src1[src1 < 0] = -1
+    stream = isa.InstrStream(f"chain-joint-w{width}", opcode, src1,
+                             np.full(2 * n, -1, np.int32))
+    res = pe.sweep_joint(stream, ["sqrt", "div"], list(range(1, 33)),
+                         machine=mach)
+    best = pe.best_depth(res, "sqrt")
+    # per-class: n ops in `width` chains (distance 2*width in the merged
+    # stream = width same-class slots)
+    gamma = _CHAIN_T_P / (_CHAIN_T_O * (2 * width) ** 2)
+    from repro.core.pipeline_model import p_opt as _p_opt
+    popt = float(_p_opt(n_i=2 * n, n_h=2 * (n - width), gamma=gamma,
+                        t_p=_CHAIN_T_P, t_o=_CHAIN_T_O))
+    assert abs(best - popt) <= 1.0, \
+        f"joint w={width}: sweep best {best} vs eq.-3 {popt:.2f}"
+
+
+def test_sweep_joint_hazard_routines_match_shared_clock_analytic():
+    """For the paper's hazard-bound LAPACK streams (fig. 13), the joint
+    sweep optimum matches the eq.-1/2 analytic evaluated at the shared
+    clock, exactly - theory corroborates simulation."""
+    n = 24
+    cases = [
+        ("dgetrf", isa.compile_dgetrf(n), ch.characterize_dgetrf(n),
+         ["div"]),
+        ("dpotrf", isa.compile_dpotrf(n), ch.characterize_dpotrf(n),
+         ["sqrt", "div"]),
+        ("dgeqrf", isa.compile_dgeqrf(n), ch.characterize_dgeqrf(n),
+         ["sqrt", "div"]),
+    ]
+    depths = list(range(2, 41))
+    for name, stream, prof, units in cases:
+        res = pe.sweep_joint(stream, units, depths)
+        sim = pe.best_depth(res, units[0])
+        used = [k for k, v in stream.census().items() if v > 0]
+        n_i_total = sum(p.n_i for p in prof.pipes.values())
+        best_t, ana = None, None
+        for d in depths:
+            cfg = dict(pe.DEFAULT_DEPTHS)
+            for u in units:
+                cfg[u] = d
+            # eq. 1/2 at the shared clock: cycles = N_I + sum_u
+            # gamma_u * N_H_u * p_u (each hazard exposes gamma*p cycles)
+            cycles = n_i_total + sum(p.gamma * p.n_h * cfg[k]
+                                     for k, p in prof.pipes.items()
+                                     if p.n_i > 0)
+            t = pe.cycle_time(cfg, used=used) * cycles
+            if best_t is None or t < best_t:
+                best_t, ana = t, d
+        assert abs(sim - ana) <= 1, f"{name}: sim {sim} vs analytic {ana}"

@@ -2,9 +2,14 @@
 and the codesign schedule comparison the paper's section 4 predicts.
 
 Calls go through the :mod:`repro.linalg` front-end under one scoped
-ExecutionContext; every JSON row records the dtype and the resolved
-context alongside the kernel-config resolution, so trajectories stay
-comparable as the dispatch surface evolves.
+ExecutionContext; every JSON row records the dtype, the resolved context,
+and a *per-op* kernel-config resolution, plus the shared timing fields of
+``docs/benchmarking.md``: ``seconds_median`` / ``seconds_spread`` /
+``reps`` from the :mod:`repro.tune.measure` repetition controller and a
+``model_residual`` (modeled vs measured seconds under the row's machine) -
+so trajectories stay comparable as the dispatch surface evolves and the
+perf-regression gate (``scripts/check_perf_regression.py``) can defend
+them.
 """
 from __future__ import annotations
 
@@ -16,72 +21,93 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import arch, lapack, linalg, tune
-from repro.core.codesign import FACTOR_FLOP_COEFF, optimal_accumulators
-from repro.tune.search import measure_wall_time
+from repro.core.codesign import (FACTOR_FLOP_COEFF, modeled_factorization_time,
+                                 optimal_accumulators, plan_gemm)
+from repro.tune.measure import measure, model_residual
+from repro.tune.search import model_score
+
+_OUT_DEFAULT = os.path.join(os.path.dirname(__file__), "out", "blas.json")
+# maps the bench's row names onto the factorization-kind table the flop
+# coefficients and the panel/trailing time model are keyed by
+_FACTOR_KIND = {"geqrf": "geqrf", "lu": "getrf", "cholesky": "potrf"}
 
 
-def _timeit(f, *args, reps=5):
-    return measure_wall_time(f, *args, reps=reps)
+def _measured(f, *args, reps):
+    """Adaptive measurement, bounded at 2x the historical rep count."""
+    return measure(f, *args, min_reps=reps, max_reps=2 * reps)
 
 
-def run(emit, policy: str = "reference", dtype=jnp.float32):
+def run(emit, policy: str = "reference", dtype=jnp.float32,
+        fast: bool = False, out: str = _OUT_DEFAULT):
     rng = np.random.default_rng(0)
     rows = []
     dtype = jnp.dtype(dtype)
+    n = 128 if fast else 512            # GEMM size
+    nf = 96 if fast else 192            # factorization size
+    block = 32
+    gemm_reps, fact_reps = (2, 2) if fast else (5, 3)
     with linalg.use(policy=policy) as ctx:
         ctx_desc = ctx.describe()
-        n = 512
         a = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32)).astype(dtype)
         b = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32)).astype(dtype)
-        t = _timeit(jax.jit(lambda x, y: linalg.gemm(x, y)), a, b)
+        ms = _measured(jax.jit(lambda x, y: linalg.gemm(x, y)), a, b,
+                       reps=gemm_reps)
+        t = ms.seconds_median
         emit(f"blas,gemm,{n}", t * 1e6, "us_per_call")
         emit(f"blas,gemm,{n}", 2 * n ** 3 / t / 1e9, "gflops")
+        gemm_model_s = model_score(plan_gemm(n, n, n, dtype=dtype),
+                                   n, n, n, dtype.itemsize)
         rows.append({"op": "gemm", "n": n, "dtype": dtype.name,
                      "context": ctx_desc, "seconds_per_call": t,
+                     **ms.row_fields(),
+                     "model_residual": model_residual(gemm_model_s, t),
                      **arch.bench_metrics(2 * n ** 3 / t / 1e9),
                      "resolution": tune.resolve("gemm", (n, n, n), dtype,
                                                 policy=policy).describe()})
 
-        x = jnp.asarray(rng.normal(size=1 << 20).astype(np.float32))
-        y = jnp.asarray(rng.normal(size=1 << 20).astype(np.float32))
+        nd = 1 << (16 if fast else 20)
+        x = jnp.asarray(rng.normal(size=nd).astype(np.float32))
+        y = jnp.asarray(rng.normal(size=nd).astype(np.float32))
         for sched in ("tree", "sequential", "strided"):
             f = jax.jit(lambda u, v, s=sched: linalg.dot(
                 u, v, schedule=s,
-                accumulators=optimal_accumulators(1 << 20)))
-            t = _timeit(f, x, y, reps=3)
-            emit(f"blas,dot_{sched},1M", t * 1e6, "us_per_call")
+                accumulators=optimal_accumulators(nd)))
+            ms = _measured(f, x, y, reps=3)
+            emit(f"blas,dot_{sched},{nd >> 10}K", ms.seconds_median * 1e6,
+                 "us_per_call")
 
-        m = jnp.asarray(rng.normal(size=(192, 192)).astype(np.float32))
-        fact_res = tune.resolve("gemm", (192, 192, 32), jnp.float32,
-                                policy=policy).describe()
+        m = jnp.asarray(rng.normal(size=(nf, nf)).astype(np.float32))
         # geqrf times the packed factorization core (linalg.qr would add
         # the full Q accumulation); lu goes through the front-end
-        for name, f in (("geqrf", jax.jit(lambda z: lapack.geqrf(
-                            z, block=32, policy=policy))),
-                        ("lu", jax.jit(lambda z: linalg.lu(z, block=32)))):
-            t = _timeit(f, m, reps=3)
-            emit(f"lapack,{name},192", t * 1e3, "ms_per_call")
-            coeff = FACTOR_FLOP_COEFF[{"geqrf": "geqrf",
-                                       "lu": "getrf"}[name]]
-            rows.append({"op": name, "n": 192, "block": 32,
+        s = m @ m.T + nf * jnp.eye(nf)
+        for name, f, arg in (("geqrf", jax.jit(lambda z: lapack.geqrf(
+                                  z, block=block, policy=policy)), m),
+                             ("lu", jax.jit(lambda z: linalg.lu(
+                                  z, block=block)), m),
+                             ("cholesky", jax.jit(lambda z: linalg.cholesky(
+                                  z, block=block)), s)):
+            ms = _measured(f, arg, reps=fact_reps)
+            t = ms.seconds_median
+            emit(f"lapack,{name},{nf}", t * 1e3, "ms_per_call")
+            kind = _FACTOR_KIND[name]
+            # per-op resolution: the kernel config *this* op's widest
+            # trailing update resolves to (one shared gemm resolution used
+            # to be recorded for all three rows, misattributing configs)
+            res = tune.resolve("gemm", (nf - block, nf - block, block),
+                               jnp.float32, policy=policy).describe()
+            fact_model_s = modeled_factorization_time(
+                nf, kind=kind, block=block, dtype=jnp.float32)
+            rows.append({"op": name, "n": nf, "block": block,
                          "dtype": "float32", "context": ctx_desc,
-                         "seconds_per_call": t, "resolution": fact_res,
+                         "seconds_per_call": t, **ms.row_fields(),
+                         "model_residual": model_residual(fact_model_s, t),
+                         "resolution": {"for_op": name, **res},
                          **arch.bench_metrics(
-                             coeff * 192 ** 3 / t / 1e9)})
-        s = m @ m.T + 192 * jnp.eye(192)
-        t = _timeit(jax.jit(lambda z: linalg.cholesky(z, block=32)), s,
-                    reps=3)
-        emit("lapack,cholesky,192", t * 1e3, "ms_per_call")
-        rows.append({"op": "cholesky", "n": 192, "block": 32,
-                     "dtype": "float32", "context": ctx_desc,
-                     "seconds_per_call": t, "resolution": fact_res,
-                     **arch.bench_metrics(
-                         FACTOR_FLOP_COEFF["potrf"] * 192 ** 3 / t / 1e9)})
+                             FACTOR_FLOP_COEFF[kind] * nf ** 3 / t / 1e9)})
 
-    out = os.path.join(os.path.dirname(__file__), "out", "blas.json")
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
         json.dump({"benchmark": "blas", "backend": jax.default_backend(),
-                   "policy": policy, "context": ctx_desc, "rows": rows}, f,
-                  indent=2)
+                   "policy": policy, "fast": fast, "context": ctx_desc,
+                   "rows": rows}, f, indent=2)
     emit("blas,json", out, "path")

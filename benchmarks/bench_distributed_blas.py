@@ -62,9 +62,10 @@ def sweep(gemm_shapes=None, factor_grid=None, policies=POLICIES, reps=1):
     from repro import arch as _arch
     from repro import linalg
     from repro.blas import distributed as dblas
-    from repro.core.codesign import FACTOR_FLOP_COEFF, plan_pdgemm
+    from repro.core.codesign import (FACTOR_FLOP_COEFF,
+                                     modeled_factorization_time, plan_pdgemm)
     from repro.tune import dispatch
-    from repro.tune.search import measure_wall_time as _timeit
+    from repro.tune.measure import measure, model_residual
 
     rng = np.random.default_rng(0)
     rows = []
@@ -88,14 +89,16 @@ def sweep(gemm_shapes=None, factor_grid=None, policies=POLICIES, reps=1):
                 ctx = dict(policy=pol, mesh=(px, py))
                 f = jax.jit(lambda x, y, c=dict(ctx): linalg.gemm(
                     x, y, context=c))
-                t = _timeit(f, a, b, reps=reps)
+                ms = measure(f, a, b, min_reps=reps, max_reps=2 * reps)
+                t = ms.seconds_median
                 rows.append({
                     "op": "pdgemm", "mesh": [px, py], "mesh_key": mkey,
                     "shape": [m, n, k], "policy": pol,
                     "dtype": "float32",
                     "context": linalg.ExecutionContext(**ctx).describe(),
                     "resolution": res.describe(),
-                    "seconds_per_call": t,
+                    "seconds_per_call": t, **ms.row_fields(),
+                    "model_residual": model_residual(plan.modeled_time, t),
                     **_arch.bench_metrics(2.0 * m * n * k / t / 1e9),
                     "model": {"compute_s": plan.compute_s,
                               "collective_s": plan.collective_s,
@@ -116,17 +119,21 @@ def sweep(gemm_shapes=None, factor_grid=None, policies=POLICIES, reps=1):
                 ctx = dict(policy=pol, mesh=(px, py))
                 f = jax.jit(lambda v, c=dict(ctx): fn(
                     v, context=c).factors)
-                t = _timeit(f, xj, reps=reps)
+                ms = measure(f, xj, min_reps=reps, max_reps=2 * reps)
+                t = ms.seconds_median
                 res = dispatch.resolve("gemm", (nsz, nsz, nsz), jnp.float32,
                                        policy=pol)
                 flops = batch * FACTOR_FLOP_COEFF[kind] * nsz ** 3
+                model_s = modeled_factorization_time(
+                    nsz, kind=kind, batch=batch, dtype=jnp.float32)
                 rows.append({
                     "op": f"batched_{kind}", "mesh": [px, py],
                     "mesh_key": mkey, "shape": [batch, nsz, nsz],
                     "policy": pol, "dtype": "float32",
                     "context": linalg.ExecutionContext(**ctx).describe(),
                     "resolution": res.describe(),
-                    "seconds_per_call": t,
+                    "seconds_per_call": t, **ms.row_fields(),
+                    "model_residual": model_residual(model_s, t),
                     **_arch.bench_metrics(flops / t / 1e9),
                 })
     return rows

@@ -21,8 +21,9 @@ import numpy as np
 
 from repro import arch, lapack, linalg, tune
 from repro.core.codesign import FACTOR_FLOP_COEFF as FLOP_COEFF
-from repro.core.codesign import plan_factorization
-from repro.tune.search import measure_wall_time as _timeit
+from repro.core.codesign import (modeled_factorization_time,
+                                 plan_factorization)
+from repro.tune.measure import measure, model_residual
 
 FACTOR_FN = {"potrf": lapack.batched_potrf, "getrf": lapack.batched_getrf,
              "geqrf": lapack.batched_geqrf}
@@ -52,18 +53,23 @@ def sweep(batches=(1, 8, 32), sizes=(32, 64, 128), blocks=(8, 16, 32, None),
                 for block in blocks:
                     f = jax.jit(lambda m, k=kind, nb=block: FACTOR_FN[k](
                         m, block=nb, policy=policy).factors)
-                    t = _timeit(f, x, reps=reps)
+                    ms = measure(f, x, min_reps=reps, max_reps=2 * reps)
+                    t = ms.seconds_median
                     flops = b * FLOP_COEFF[kind] * n ** 3
+                    nb_eff = (block if block is not None else
+                              plan_factorization(n, kind=kind).block)
+                    model_s = modeled_factorization_time(
+                        n, kind=kind, block=nb_eff, batch=b, dtype=dtype)
                     rows.append({
                         "kind": kind, "batch": b, "n": n,
-                        "block": block if block is not None else
-                        plan_factorization(n, kind=kind).block,
+                        "block": nb_eff,
                         "planned": block is None,
                         "policy": policy,
                         "dtype": dtype.name,
                         "context": ctx_desc,
                         "trailing_resolution": gemm_cfg,
-                        "seconds_per_call": t,
+                        "seconds_per_call": t, **ms.row_fields(),
+                        "model_residual": model_residual(model_s, t),
                         **arch.bench_metrics(flops / t / 1e9),
                     })
     return rows

@@ -49,7 +49,9 @@ def main() -> None:
         if args.fast and name in ("pe_cpi", "census"):
             continue
         mod = __import__(modpath, fromlist=["run"])
-        t0 = time.time()
+        # perf_counter, not time.time(): the wall clock can step under NTP
+        # mid-benchmark and corrupt the recorded duration
+        t0 = time.perf_counter()
         print(f"# === {name} ===", flush=True)
         try:
             if name == "pe_cpi":
@@ -59,7 +61,7 @@ def main() -> None:
         except Exception:
             failures.append(name)
             traceback.print_exc()
-        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
     if failures:
         print(f"# FAILURES: {failures}", file=sys.stderr)
         sys.exit(1)

@@ -70,9 +70,28 @@ EXPECTED_ARCH_ALL = [
     "resolve_machine", "machine_key_component",
     # built-in specs
     "TPU_LIKE", "PAPER_PE", "CPU_HOST",
+    # measured-machine calibration
+    "calibrate", "calibrate_full", "load_or_calibrate",
+    "CalibrationResult", "CALIBRATION_TOLERANCE",
     # benchmark helper
     "bench_metrics",
 ]
+
+# arch.calibrate* keyword surface (benchmark kwargs ride **bench_kwargs and
+# are guarded on run_microbenchmarks instead)
+EXPECTED_CALIBRATE_PARAMS = {"backend", "base", "name", "register",
+                             "overwrite", "path"}
+EXPECTED_MICROBENCH_PARAMS = {"gemm_sizes", "stream_elems", "chain_iters",
+                              "reps", "min_reps", "max_reps", "rel_spread"}
+
+# the measurement surface every sweep/bench/calibration times through
+EXPECTED_TUNE_MEASURE = ["Measurement", "measure", "measure_wall_time",
+                         "model_residual", "repetition_controller"]
+EXPECTED_MEASUREMENT_FIELDS = {"samples", "seconds_median", "seconds_spread",
+                               "reps", "converged", "target_spread"}
+# the row fields every bench JSON row carries (docs/benchmarking.md;
+# the perf-regression gate reads seconds_median/seconds_spread)
+EXPECTED_ROW_FIELDS = {"seconds_median", "seconds_spread", "reps"}
 
 # spec dataclass -> frozen field set (registry keys and serialized files
 # depend on these names; change them only with a schema bump)
@@ -114,12 +133,66 @@ def check_arch(errors) -> None:
         errors.append(f"built-in machines missing: "
                       f"{sorted(EXPECTED_MACHINE_NAMES - set(arch.names()))}")
 
+    for fn_name, want in (("calibrate", EXPECTED_CALIBRATE_PARAMS),
+                          ("calibrate_full", EXPECTED_CALIBRATE_PARAMS)):
+        fn = getattr(arch, fn_name, None)
+        if fn is None:
+            errors.append(f"repro.arch lost {fn_name}")
+            continue
+        params = set(inspect.signature(fn).parameters)
+        lost = want - params
+        if lost:
+            errors.append(f"arch.{fn_name}: lost parameters {sorted(lost)}")
+    import importlib
+    # arch.calibrate the function shadows the submodule attribute
+    _cal = importlib.import_module("repro.arch.calibrate")
+    params = set(inspect.signature(_cal.run_microbenchmarks).parameters)
+    lost = EXPECTED_MICROBENCH_PARAMS - params
+    if lost:
+        errors.append(f"arch.calibrate.run_microbenchmarks: lost "
+                      f"parameters {sorted(lost)}")
+
+
+def check_measure(errors) -> None:
+    import dataclasses
+
+    from repro import tune
+    from repro.tune import measure as m
+
+    for name in EXPECTED_TUNE_MEASURE:
+        if not hasattr(m, name):
+            errors.append(f"repro.tune.measure lost {name}")
+        if name not in tune.__all__ and name != "measure":
+            errors.append(f"repro.tune.__all__ lost {name}")
+    if "measure" not in tune.__all__ or "measure_op" not in tune.__all__:
+        errors.append("repro.tune.__all__ lost the measure submodule / "
+                      "measure_op alias")
+    fields = {f.name for f in dataclasses.fields(m.Measurement)}
+    if fields != EXPECTED_MEASUREMENT_FIELDS:
+        errors.append(f"Measurement fields drifted: {sorted(fields)} "
+                      f"!= {sorted(EXPECTED_MEASUREMENT_FIELDS)}")
+    try:
+        row = m.Measurement.from_samples([1.0, 2.0, 3.0]).row_fields()
+        if set(row) != EXPECTED_ROW_FIELDS:
+            errors.append(f"Measurement.row_fields drifted: {sorted(row)} "
+                          f"!= {sorted(EXPECTED_ROW_FIELDS)}")
+    except Exception as e:  # pragma: no cover - surface break
+        errors.append(f"Measurement.row_fields broken: {e!r}")
+    # the sweeps' historical import path must keep working
+    from repro.tune import search
+    if getattr(search, "measure_wall_time", None) is not m.measure_wall_time:
+        errors.append("repro.tune.search.measure_wall_time is no longer the "
+                      "shared measure helper")
+    if getattr(search, "_timeit", None) is not m.measure_wall_time:
+        errors.append("repro.tune.search._timeit alias broken")
+
 
 def main() -> int:
     from repro import linalg
 
     errors = []
     check_arch(errors)
+    check_measure(errors)
     got_all = list(linalg.__all__)
     if got_all != EXPECTED_ALL:
         missing = set(EXPECTED_ALL) - set(got_all)
@@ -153,9 +226,10 @@ def main() -> int:
         for e in errors:
             print(f"  - {e}")
         return 1
-    print(f"repro.linalg + repro.arch API surface OK "
+    print(f"repro.linalg + repro.arch + repro.tune.measure API surface OK "
           f"({len(EXPECTED_PARAMS)} routines, {len(EXPECTED_ALL)} linalg + "
-          f"{len(EXPECTED_ARCH_ALL)} arch exported names)")
+          f"{len(EXPECTED_ARCH_ALL)} arch exported names, "
+          f"{len(EXPECTED_TUNE_MEASURE)} measurement names)")
     return 0
 
 

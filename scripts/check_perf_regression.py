@@ -1,0 +1,172 @@
+#!/usr/bin/env python
+"""Spread-aware perf-regression gate over committed bench trajectories.
+
+The ``benchmarks/out/*.json`` artifacts are not decoration: they are the
+repo's perf trajectory, and this gate is what makes the trajectory
+*defended*. It matches rows of a fresh bench run against the committed
+baseline by their identity fields (op/kind, sizes, block, batch, dtype,
+policy, mesh) and fails when a fresh median exceeds the spread-aware
+allowance
+
+    allowed = base_median * (1 + tol + spread_k * rel_spread)
+
+where ``rel_spread`` is the larger of the two rows' recorded
+``seconds_spread`` (the relative IQR the repetition controller of
+``repro.tune.measure`` records - see ``docs/benchmarking.md``). Rows
+without ``seconds_median`` (pre-controller artifacts) are skipped, rows
+only present on one side are reported but not fatal (benchmarks grow),
+and an empty intersection is an error (the gate must be comparing
+something).
+
+Usage:
+    check_perf_regression.py --baseline FILE --fresh FILE [--tol X]
+        [--spread-k K]
+    check_perf_regression.py --self-test FILE
+
+``--self-test`` proves the gate has teeth without a timing run: the file
+compared against itself must pass, and the same file with one row's
+median synthetically degraded beyond the allowance must fail.
+``REPRO_PERF_TOL`` overrides the default tolerance.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+import sys
+
+# identity fields: everything that names *what* a row measured (never how
+# fast it was). A row's key is the subset of these it carries.
+ID_FIELDS = ("op", "kind", "n", "m", "k", "shape", "block", "batch",
+             "dtype", "policy", "mesh", "planned", "backend")
+DEFAULT_TOL = float(os.environ.get("REPRO_PERF_TOL", 0.5))
+DEFAULT_SPREAD_K = 3.0
+
+
+def row_key(row):
+    return tuple((f, json.dumps(row[f], sort_keys=True))
+                 for f in ID_FIELDS if f in row)
+
+
+def index_rows(doc):
+    """rows keyed by identity; later duplicates get a counter suffix so
+    nothing is silently dropped."""
+    out = {}
+    for row in doc.get("rows", []):
+        key = row_key(row)
+        i = 0
+        while (key, i) in out:
+            i += 1
+        out[(key, i)] = row
+    return out
+
+
+def compare(baseline, fresh, tol=DEFAULT_TOL, spread_k=DEFAULT_SPREAD_K):
+    """Returns (failures, checked, skipped): failures are human-readable
+    strings, checked the number of compared rows, skipped the rows present
+    on both sides but lacking controller fields."""
+    base_idx = index_rows(baseline)
+    fresh_idx = index_rows(fresh)
+    common = sorted(set(base_idx) & set(fresh_idx), key=str)
+    failures, checked, skipped = [], 0, 0
+    for key in common:
+        b, f = base_idx[key], fresh_idx[key]
+        bt, ft = b.get("seconds_median"), f.get("seconds_median")
+        if bt is None or ft is None or not bt > 0:
+            skipped += 1
+            continue
+        spread = max(float(b.get("seconds_spread", 0.0)),
+                     float(f.get("seconds_spread", 0.0)), 0.0)
+        allowed = bt * (1.0 + tol + spread_k * spread)
+        checked += 1
+        if ft > allowed:
+            name = ", ".join(f"{k}={v}" for k, v in key[0])
+            failures.append(
+                f"{name}: fresh median {ft:.3e}s exceeds allowance "
+                f"{allowed:.3e}s (baseline {bt:.3e}s, rel spread "
+                f"{spread:.2f}, tol {tol})")
+    return failures, checked, skipped
+
+
+def gate(baseline_path, fresh_path, tol, spread_k):
+    with open(baseline_path) as fh:
+        baseline = json.load(fh)
+    with open(fresh_path) as fh:
+        fresh = json.load(fh)
+    failures, checked, skipped = compare(baseline, fresh, tol, spread_k)
+    only_base = len(set(index_rows(baseline)) - set(index_rows(fresh)))
+    only_fresh = len(set(index_rows(fresh)) - set(index_rows(baseline)))
+    if only_base or only_fresh:
+        print(f"note: {only_base} baseline-only / {only_fresh} fresh-only "
+              f"rows not compared")
+    if checked == 0:
+        print(f"perf gate ERROR: no comparable rows between "
+              f"{baseline_path} and {fresh_path} "
+              f"({skipped} skipped without controller fields)")
+        return 1
+    if failures:
+        print(f"perf gate FAILED ({len(failures)}/{checked} rows):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"perf gate OK: {checked} rows within tolerance "
+          f"(tol={tol}, spread_k={spread_k}, {skipped} skipped)")
+    return 0
+
+
+def self_test(path, tol, spread_k):
+    """The gate must pass a file against itself and fail a synthetically
+    degraded copy - run on every CI invocation so a silent-pass bug in the
+    gate itself cannot land."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    failures, checked, _ = compare(doc, doc, tol, spread_k)
+    if checked == 0:
+        print(f"perf gate self-test ERROR: {path} has no rows with "
+              f"controller fields (seconds_median)")
+        return 1
+    if failures:
+        print(f"perf gate self-test FAILED: identical trajectories "
+              f"reported {len(failures)} regressions")
+        return 1
+    degraded = copy.deepcopy(doc)
+    victim = None
+    for row in degraded["rows"]:
+        if row.get("seconds_median"):
+            spread = max(float(row.get("seconds_spread", 0.0)), 0.0)
+            row["seconds_median"] *= 2.0 * (1.0 + tol + spread_k * spread)
+            victim = row_key(row)
+            break
+    failures, _, _ = compare(doc, degraded, tol, spread_k)
+    if not failures:
+        print(f"perf gate self-test FAILED: synthetic degradation of "
+              f"{victim} slipped through")
+        return 1
+    print(f"perf gate self-test OK: identity passes, degraded row fails "
+          f"({checked} rows, tol={tol})")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", help="committed trajectory JSON")
+    ap.add_argument("--fresh", help="freshly measured trajectory JSON")
+    ap.add_argument("--self-test", dest="self_test", metavar="FILE",
+                    help="verify the gate fails a synthetically degraded "
+                         "copy of FILE and passes FILE vs itself")
+    ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
+                    help="fractional slowdown allowed before spread "
+                         "widening (default from REPRO_PERF_TOL or 0.5)")
+    ap.add_argument("--spread-k", type=float, default=DEFAULT_SPREAD_K,
+                    help="tolerance widening per unit of relative IQR")
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test(args.self_test, args.tol, args.spread_k)
+    if not (args.baseline and args.fresh):
+        ap.error("need --baseline and --fresh (or --self-test FILE)")
+    return gate(args.baseline, args.fresh, args.tol, args.spread_k)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

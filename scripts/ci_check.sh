@@ -63,6 +63,44 @@ assert (r_def.gemm_plan.bm, r_def.gemm_plan.bn, r_def.gemm_plan.bk) != \
 print("machine smoke OK: round-trip + machine-dependent resolution")
 PY
 
+echo "== perf-regression gate (self-test, then fresh fast bench vs committed) =="
+# self-test first: the gate must pass the committed trajectory against
+# itself and fail a synthetically degraded copy - a silent-pass bug in the
+# gate itself may not land
+python scripts/check_perf_regression.py --self-test benchmarks/out/blas.json
+PERF_TMP="$(mktemp -d)"
+trap 'rm -rf "$PERF_TMP"' EXIT
+python - "$PERF_TMP" <<'PY'
+import os, sys
+from benchmarks import bench_blas
+out = os.path.join(sys.argv[1], "blas_fast.json")
+bench_blas.run(lambda *a: None, fast=True, out=out)
+print(f"fresh fast bench -> {out}")
+PY
+# generous CI tolerance (container timing is noisy); catastrophic
+# regressions - an interpret-mode fallback, an accidental O(n^4) - are
+# orders of magnitude, not tens of percent
+python scripts/check_perf_regression.py \
+    --baseline benchmarks/out/blas_fast.json \
+    --fresh "$PERF_TMP/blas_fast.json" \
+    --tol "${REPRO_PERF_TOL:-2.0}"
+
+echo "== calibration smoke (fit -> register -> round-trip) =="
+python - <<'PY'
+import os, tempfile
+from repro import arch
+
+with tempfile.TemporaryDirectory() as d:
+    p = os.path.join(d, "calibrated.json")
+    res = arch.calibrate_full(path=p, gemm_sizes=(16, 32),
+                              stream_elems=1 << 16, chain_iters=32, reps=1)
+    assert arch.get("calibrated-cpu") == res.machine
+    assert arch.MachineSpec.load(p) == res.machine
+    assert res.best_residual("gemm") <= arch.CALIBRATION_TOLERANCE
+    assert res.best_residual("stream") <= arch.CALIBRATION_TOLERANCE
+print("calibration smoke OK: fit + register + JSON round-trip + residuals")
+PY
+
 echo "== deprecation shims (DeprecationWarning -> error, our module only) =="
 # the module's pytestmark escalates DeprecationWarning to error for every
 # test in it (the shim warnings attribute to the caller, i.e. that module,

@@ -23,6 +23,9 @@ Every planner in :mod:`repro.core.codesign`, the tuner in
 default machine ``"tpu-like"`` reproduces the historical module-constant
 behavior bit-for-bit. See ``docs/machines.md``.
 """
+from repro.arch.calibrate import (CALIBRATION_TOLERANCE, CalibrationResult,
+                                  calibrate, calibrate_full,
+                                  load_or_calibrate)
 from repro.arch.registry import (CPU_HOST, DEFAULT_MACHINE, PAPER_PE,
                                  TPU_LIKE, current_machine, get,
                                  machine_key_component, machine_scope,
@@ -42,6 +45,9 @@ __all__ = [
     "resolve_machine", "machine_key_component",
     # built-in specs
     "TPU_LIKE", "PAPER_PE", "CPU_HOST",
+    # measured-machine calibration
+    "calibrate", "calibrate_full", "load_or_calibrate",
+    "CalibrationResult", "CALIBRATION_TOLERANCE",
     # benchmark helper
     "bench_metrics",
 ]

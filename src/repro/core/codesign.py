@@ -438,6 +438,30 @@ def plan_factorization(n: int, kind: str = "potrf",
     return FactorizationPlan(kind, best_nb, gemm, p, t, batch=batch)
 
 
+def modeled_factorization_time(n: int, kind: str = "potrf",
+                               block: Optional[int] = None,
+                               dtype_bytes: Optional[int] = None,
+                               batch: int = 1, dtype=None,
+                               machine: Optional[MachineSpec] = None) -> float:
+    """Modeled seconds of one blocked factorization at a *fixed* panel
+    width (``block=None`` = the model's own pick). This is the modeled_s
+    the benchmark rows' ``model_residual`` compares the measured median
+    against: same panel/trailing decomposition as
+    :func:`plan_factorization`, evaluated at the block the bench actually
+    ran."""
+    if kind not in _FACTOR_FLOP_COEFF:
+        raise ValueError(f"unknown factorization kind: {kind!r}")
+    mach = _machine(machine)
+    dtype_bytes = resolve_dtype_bytes(dtype, dtype_bytes, mach)
+    n = max(int(n), 1)
+    if block is None:
+        return plan_factorization(n, kind=kind, dtype_bytes=dtype_bytes,
+                                  batch=batch, machine=mach).modeled_time
+    nb = min(max(int(block), 1), n)
+    p, t = _factorization_time(n, nb, kind, dtype_bytes, batch, mach)
+    return p + t
+
+
 @dataclasses.dataclass(frozen=True)
 class TrsmPlan:
     """Diagonal-block width for the blocked triangular solve."""

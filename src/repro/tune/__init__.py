@@ -72,16 +72,23 @@ a registry file with ``REPRO_TUNE_REGISTRY=/path/to/registry.json`` (or
 ``registry.set_default_path``). ``scripts/ci_check.sh`` runs a tiny smoke
 sweep into a temp dir on every CI run so schema drift cannot land silently.
 """
-from repro.tune import dispatch, policy, registry, search
+from repro.tune import dispatch, measure, policy, registry, search
 from repro.tune.dispatch import Resolution, dispatch as dispatch_op, resolve
+from repro.tune.measure import (Measurement, measure_wall_time,
+                                model_residual, repetition_controller)
+from repro.tune.measure import measure as measure_op  # noqa: F401 (alias:
+# the submodule itself is exported as `measure`; the callable is
+# tune.measure.measure / tune.measure_op)
 from repro.tune.policy import POLICIES, default_policy, resolve_policy
 from repro.tune.registry import KernelConfig, Registry, default_registry
 from repro.tune.search import (seed_registry_from_model, tune_gemm,
                                tune_trsm)
 
 __all__ = [
-    "POLICIES", "KernelConfig", "Registry", "Resolution",
+    "POLICIES", "KernelConfig", "Measurement", "Registry", "Resolution",
     "default_policy", "default_registry", "dispatch", "dispatch_op",
-    "policy", "registry", "resolve", "resolve_policy", "search",
-    "seed_registry_from_model", "tune_gemm", "tune_trsm",
+    "measure", "measure_op", "measure_wall_time", "model_residual",
+    "policy", "registry", "repetition_controller", "resolve",
+    "resolve_policy", "search", "seed_registry_from_model", "tune_gemm",
+    "tune_trsm",
 ]

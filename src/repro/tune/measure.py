@@ -1,0 +1,196 @@
+"""ELAPS-style wall-clock measurement: per-rep samples + adaptive repetition.
+
+The repo's perf claims (tuned configs, model residuals, the CI perf
+trajectory) are only as good as the timing under them, and one-shot
+averages are not good enough: wall-clock samples on a shared host are
+noisy and skewed, so *The ELAPS Framework* (arXiv:1504.08035) and the
+dense-linear-algebra performance-modeling line (arXiv:1209.2364) both
+time every experiment as repeated samples summarized by robust statistics
+(median + spread), repeating until the spread tightens or a budget is
+hit. This module is that discipline as the repo's one timing helper:
+
+:func:`measure`
+    Times a callable (compile/warm-up excluded, every rep individually
+    synchronized through ``jax.block_until_ready``) and returns a
+    :class:`Measurement`: the per-rep samples, their median, a relative
+    spread (interquartile range / median), and the rep count the
+    controller actually used.
+:func:`repetition_controller`
+    The pure-Python adaptive loop under :func:`measure` - take samples
+    until the relative spread is inside the target band (but at least
+    ``min_reps``) or ``max_reps`` is exhausted. Takes any
+    ``sample_fn() -> seconds``, so tests drive it with synthetic noisy
+    timers.
+:func:`measure_wall_time`
+    Back-compatible scalar facade (the historical name the sweeps and
+    benchmark drivers import): validates ``reps >= 1`` and returns the
+    median of exactly ``reps`` samples.
+:func:`model_residual`
+    The shared modeled-vs-measured residual definition every bench row
+    records (see ``docs/benchmarking.md`` for the semantics).
+
+Every JAX call is synchronized *inside* its own timed region: with JAX's
+async dispatch, timing ``f(*args)`` without blocking measures dispatch
+latency, and blocking only after the loop attributes earlier reps' device
+time to the final sample.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Optional, Tuple
+
+import jax
+
+# Defaults for adaptive measurement: start at MIN_REPS, stop as soon as
+# the relative IQR is inside REL_SPREAD, never exceed MAX_REPS.
+DEFAULT_MIN_REPS = 3
+DEFAULT_MAX_REPS = 20
+DEFAULT_REL_SPREAD = 0.10
+
+
+def _quantile(sorted_samples: Tuple[float, ...], q: float) -> float:
+    """Linear-interpolation quantile of pre-sorted samples (numpy's
+    default method, inlined so the controller stays dependency-free)."""
+    n = len(sorted_samples)
+    if n == 1:
+        return sorted_samples[0]
+    pos = q * (n - 1)
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, n - 1)
+    frac = pos - lo
+    return sorted_samples[lo] * (1.0 - frac) + sorted_samples[hi] * frac
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """Per-rep wall-clock samples summarized the ELAPS way.
+
+    ``seconds_spread`` is the *relative* interquartile range,
+    ``(q75 - q25) / median`` - the variability number the repetition
+    controller converges on and the perf-regression gate widens its
+    tolerance by. ``converged`` records whether the spread reached the
+    ``target_spread`` band before the rep budget ran out.
+    """
+
+    samples: Tuple[float, ...]
+    seconds_median: float
+    seconds_spread: float
+    reps: int
+    converged: bool
+    target_spread: float
+
+    @classmethod
+    def from_samples(cls, samples, target_spread: float = DEFAULT_REL_SPREAD)         -> "Measurement":
+        xs = tuple(float(s) for s in samples)
+        if not xs:
+            raise ValueError("Measurement needs at least one sample")
+        s = tuple(sorted(xs))
+        med = _quantile(s, 0.5)
+        iqr = _quantile(s, 0.75) - _quantile(s, 0.25)
+        spread = iqr / med if med > 0 else float("inf")
+        return cls(samples=xs, seconds_median=med, seconds_spread=spread,
+                   reps=len(xs), converged=spread <= target_spread,
+                   target_spread=float(target_spread))
+
+    @property
+    def seconds_min(self) -> float:
+        return min(self.samples)
+
+    @property
+    def seconds_mean(self) -> float:
+        return sum(self.samples) / len(self.samples)
+
+    def row_fields(self) -> dict:
+        """The canonical per-row timing fields every bench JSON carries."""
+        return {"seconds_median": self.seconds_median,
+                "seconds_spread": self.seconds_spread,
+                "reps": self.reps}
+
+    def to_json(self) -> dict:
+        return {**self.row_fields(), "samples": list(self.samples),
+                "converged": self.converged,
+                "target_spread": self.target_spread}
+
+
+def repetition_controller(sample_fn: Callable[[], float],
+                          min_reps: int = DEFAULT_MIN_REPS,
+                          max_reps: int = DEFAULT_MAX_REPS,
+                          rel_spread: float = DEFAULT_REL_SPREAD) -> Measurement:
+    """Adaptively sample ``sample_fn`` until the relative IQR of the
+    samples is ``<= rel_spread`` (checked from ``min_reps`` on) or
+    ``max_reps`` samples have been taken. Returns the full
+    :class:`Measurement` either way; ``converged`` says which exit fired.
+    """
+    min_reps = int(min_reps)
+    max_reps = int(max_reps)
+    if min_reps < 1:
+        raise ValueError(f"min_reps must be >= 1, got {min_reps}")
+    if max_reps < min_reps:
+        raise ValueError(f"max_reps ({max_reps}) must be >= min_reps "
+                         f"({min_reps})")
+    if not float(rel_spread) >= 0:
+        raise ValueError(f"rel_spread must be >= 0, got {rel_spread!r}")
+    samples = []
+    while len(samples) < max_reps:
+        samples.append(float(sample_fn()))
+        if len(samples) >= min_reps:
+            m = Measurement.from_samples(samples, rel_spread)
+            if m.converged:
+                return m
+    return Measurement.from_samples(samples, rel_spread)
+
+
+def measure(f, *args, reps: Optional[int] = None,
+            min_reps: int = DEFAULT_MIN_REPS,
+            max_reps: int = DEFAULT_MAX_REPS,
+            rel_spread: float = DEFAULT_REL_SPREAD) -> Measurement:
+    """Measure ``f(*args)`` under the repetition controller.
+
+    One untimed warm-up call (compile + first dispatch) runs first; each
+    subsequent rep is an individually timed, individually synchronized
+    call, so async dispatch can neither hide device time outside the
+    timed region nor pile earlier reps onto the last sample.
+
+    ``reps=N`` pins the controller to exactly ``N`` samples (the
+    deterministic-duration mode the benchmark drivers use); otherwise the
+    ``min_reps``/``max_reps``/``rel_spread`` band drives the rep count.
+    """
+    if reps is not None:
+        reps = int(reps)
+        if reps < 1:
+            raise ValueError(f"reps must be >= 1, got {reps}")
+        min_reps = max_reps = reps
+    jax.block_until_ready(f(*args))                 # compile / warm up
+
+    def sample() -> float:
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        return time.perf_counter() - t0
+
+    return repetition_controller(sample, min_reps=min_reps,
+                                 max_reps=max_reps, rel_spread=rel_spread)
+
+
+def measure_wall_time(f, *args, reps: int = 2) -> float:
+    """Median seconds of exactly ``reps`` timed calls (compile/warm-up
+    excluded). The historical scalar facade over :func:`measure`;
+    ``reps`` must be ``>= 1``.
+    """
+    return measure(f, *args, reps=reps).seconds_median
+
+
+def model_residual(modeled_s: float, measured_s: float) -> float:
+    """Relative modeled-vs-measured residual of one bench row.
+
+    ``(measured - modeled) / measured``: 0 means the machine model
+    explains the measured median exactly, values near 1 mean the model is
+    far optimistic (the normal regime for interpret-mode kernels on CPU),
+    negative values mean the code beat the model. NaN when the measured
+    time is not positive.
+    """
+    measured_s = float(measured_s)
+    if not measured_s > 0 or not math.isfinite(measured_s):
+        return float("nan")
+    return (measured_s - float(modeled_s)) / measured_s

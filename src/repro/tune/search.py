@@ -19,7 +19,6 @@ measurement disposes.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -31,6 +30,7 @@ from repro.arch import MachineSpec
 from repro.core import pipeline_model
 from repro.core.codesign import (GemmPlan, plan_from_blocks, plan_gemm,
                                  plan_trsm)
+from repro.tune import measure as _measure
 from repro.tune.registry import KernelConfig, Registry, default_registry
 
 
@@ -118,17 +118,13 @@ class SweepResult:
                 "best": self.best.to_json(), "model_params": self.model_params}
 
 
-def measure_wall_time(f, *args, reps: int = 2) -> float:
-    """Compile/warm once, then average ``reps`` timed calls. The one
-    wall-clock helper shared by the sweeps and the benchmark drivers."""
-    jax.block_until_ready(f(*args))                 # compile / warm up
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = f(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / max(reps, 1)
-
-
+# The one wall-clock path shared by the sweeps and the benchmark drivers
+# now lives in repro.tune.measure (ELAPS-style repetition controller:
+# per-rep samples, median + spread, every rep individually synchronized).
+# measure_wall_time/_timeit stay importable from here for callers; the
+# historical one-shot average (which left `out` unbound at reps=0 and only
+# synchronized the final async dispatch) is gone.
+measure_wall_time = _measure.measure_wall_time
 _timeit = measure_wall_time
 
 
@@ -157,11 +153,13 @@ def tune_gemm(m: int, n: int, k: int, dtype=jnp.float32,
     for i, plan in enumerate(cands):
         f = jax.jit(lambda x, y, p=plan: ops.gemm(
             x, y, plan=p, use_pallas=True, interpret=interp))
-        t = _timeit(f, a, b, reps=reps)
+        ms = _measure.measure(f, a, b, min_reps=reps, max_reps=2 * reps)
+        t = ms.seconds_median
+        model_s = model_score(plan, m, n, k, dtype.itemsize, machine=mach)
         measured.append({"bm": plan.bm, "bn": plan.bn, "bk": plan.bk,
-                         "seconds": t,
-                         "model_s": model_score(plan, m, n, k, dtype.itemsize,
-                                                machine=mach)})
+                         "seconds": t, **ms.row_fields(),
+                         "model_s": model_s,
+                         "model_residual": _measure.model_residual(model_s, t)})
         if best_t is None or t < best_t:
             best_i, best_t = i, t
     win = cands[best_i]
@@ -254,8 +252,14 @@ def tune_trsm(n: int, nrhs: int = 8, dtype=jnp.float32,
     for i, blk in enumerate(cands):
         f = jax.jit(lambda tt, bb, nb=blk: level3.trsm(
             tt, bb, lower=True, block=nb, policy="reference"))
-        sec = _timeit(f, t, b, reps=reps)
-        measured.append({"block": blk, "seconds": sec})
+        ms = _measure.measure(f, t, b, min_reps=reps, max_reps=2 * reps)
+        sec = ms.seconds_median
+        model_s = plan_trsm(n, nrhs, dtype_bytes=dtype.itemsize,
+                            candidates=(blk,), machine=mach).modeled_time
+        measured.append({"block": blk, "seconds": sec, **ms.row_fields(),
+                         "model_s": model_s,
+                         "model_residual": _measure.model_residual(model_s,
+                                                                   sec)})
         if best_t is None or sec < best_t:
             best_i, best_t = i, sec
     cfg = reg.record("trsm", (n, nrhs), dtype, backend,

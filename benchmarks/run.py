@@ -2,11 +2,17 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--only name] [--fast] [--list]``
 Prints ``name,value,derived`` CSV rows (``--list`` prints the registered
-benches without running anything).
+benches without running anything). ``--trace [DIR]`` additionally runs
+every selected bench under a :mod:`repro.obs` trace and writes one
+Chrome-format artifact per bench to ``DIR/trace_<name>.json`` (default
+``benchmarks/out``) - load it in ``chrome://tracing`` / Perfetto, or
+summarize with ``python scripts/trace_report.py <file>``.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import os
 import sys
 import time
 import traceback
@@ -32,6 +38,11 @@ def main() -> None:
                     help="skip the slow PE stream sweeps")
     ap.add_argument("--list", action="store_true",
                     help="print registered benches (name, module) and exit")
+    ap.add_argument("--trace", nargs="?", const="benchmarks/out",
+                    default=None, metavar="DIR",
+                    help="trace each bench via repro.obs and write "
+                         "DIR/trace_<name>.json (Chrome trace_event format; "
+                         "default DIR: benchmarks/out)")
     args = ap.parse_args()
 
     if args.list:
@@ -54,10 +65,22 @@ def main() -> None:
         t0 = time.perf_counter()
         print(f"# === {name} ===", flush=True)
         try:
-            if name == "pe_cpi":
-                mod.run(emit, n=32 if args.fast else 48)
-            else:
-                mod.run(emit)
+            with contextlib.ExitStack() as st:
+                tr = None
+                if args.trace is not None:
+                    from repro import obs
+                    tr = st.enter_context(obs.trace(f"bench.{name}"))
+                if name == "pe_cpi":
+                    mod.run(emit, n=32 if args.fast else 48)
+                else:
+                    mod.run(emit)
+            if tr is not None:
+                from repro.obs import save_chrome_trace
+                os.makedirs(args.trace, exist_ok=True)
+                path = os.path.join(args.trace, f"trace_{name}.json")
+                save_chrome_trace(tr, path)
+                print(f"# trace: {path} ({len(tr.events)} events)",
+                      flush=True)
         except Exception:
             failures.append(name)
             traceback.print_exc()

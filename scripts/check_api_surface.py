@@ -57,7 +57,7 @@ EXPECTED_PARAMS = {
 }
 
 EXPECTED_CONTEXT_FIELDS = {"policy", "mesh", "registry", "accum_dtype",
-                           "interpret", "machine"}
+                           "interpret", "machine", "obs"}
 
 EXPECTED_ARCH_ALL = [
     # spec types
@@ -107,6 +107,30 @@ EXPECTED_ARCH_FIELDS = {
 }
 
 EXPECTED_MACHINE_NAMES = {"tpu-like", "paper-pe", "cpu-host"}
+
+# the repro.obs tracing surface (docs/observability.md): exported names,
+# the frozen per-event schema (exporters and scripts/trace_report.py
+# parse these exact fields), and the counter vocabulary
+EXPECTED_OBS_ALL = [
+    # schema
+    "SCHEMA_VERSION", "EVENT_FIELDS",
+    # tracer
+    "Trace", "Span", "trace", "capture", "span", "event", "annotate",
+    "enabled", "current_trace", "NOOP_SPAN",
+    # counters
+    "KNOWN_COUNTERS", "inc", "counter", "counters_snapshot",
+    "counters_delta", "reset_counters",
+    # exporters
+    "to_chrome_trace", "save_chrome_trace", "to_jsonl", "save_jsonl",
+    "summary",
+]
+EXPECTED_EVENT_FIELDS = ("name", "cat", "id", "parent", "t_start", "t_end",
+                         "attrs")
+EXPECTED_COUNTERS = {
+    "dispatch.resolve", "dispatch.registry_hit", "dispatch.registry_miss",
+    "registry.load", "registry.missing_fallback", "registry.corrupt_fallback",
+    "kernel.launch", "collective.hops", "collective.bytes",
+}
 
 
 def check_arch(errors) -> None:
@@ -187,12 +211,39 @@ def check_measure(errors) -> None:
         errors.append("repro.tune.search._timeit alias broken")
 
 
+def check_obs(errors) -> None:
+    from repro import obs
+
+    got_all = list(obs.__all__)
+    if got_all != EXPECTED_OBS_ALL:
+        missing = set(EXPECTED_OBS_ALL) - set(got_all)
+        extra = set(got_all) - set(EXPECTED_OBS_ALL)
+        errors.append(f"obs.__all__ drifted: missing={sorted(missing)} "
+                      f"extra={sorted(extra)} (order matters too)")
+    if tuple(obs.EVENT_FIELDS) != EXPECTED_EVENT_FIELDS:
+        errors.append(f"obs.EVENT_FIELDS drifted: {tuple(obs.EVENT_FIELDS)} "
+                      f"!= {EXPECTED_EVENT_FIELDS} (schema bump needed)")
+    if set(obs.KNOWN_COUNTERS) != EXPECTED_COUNTERS:
+        errors.append(f"obs.KNOWN_COUNTERS drifted: "
+                      f"{sorted(set(obs.KNOWN_COUNTERS) ^ EXPECTED_COUNTERS)}")
+    if obs.SCHEMA_VERSION != 1:
+        errors.append(f"obs.SCHEMA_VERSION bumped to {obs.SCHEMA_VERSION}: "
+                      "update trace_report.py + this guard together")
+    # the disabled-path contract: no ambient trace -> the shared no-op span
+    if obs.enabled():
+        errors.append("obs.enabled() is True at import with no trace active")
+    if obs.span("surface-check") is not obs.NOOP_SPAN:
+        errors.append("obs.span() off-trace must return the NOOP_SPAN "
+                      "singleton (dict-free disabled path)")
+
+
 def main() -> int:
     from repro import linalg
 
     errors = []
     check_arch(errors)
     check_measure(errors)
+    check_obs(errors)
     got_all = list(linalg.__all__)
     if got_all != EXPECTED_ALL:
         missing = set(EXPECTED_ALL) - set(got_all)
@@ -226,9 +277,10 @@ def main() -> int:
         for e in errors:
             print(f"  - {e}")
         return 1
-    print(f"repro.linalg + repro.arch + repro.tune.measure API surface OK "
-          f"({len(EXPECTED_PARAMS)} routines, {len(EXPECTED_ALL)} linalg + "
-          f"{len(EXPECTED_ARCH_ALL)} arch exported names, "
+    print(f"repro.linalg + repro.arch + repro.tune.measure + repro.obs API "
+          f"surface OK ({len(EXPECTED_PARAMS)} routines, "
+          f"{len(EXPECTED_ALL)} linalg + {len(EXPECTED_ARCH_ALL)} arch + "
+          f"{len(EXPECTED_OBS_ALL)} obs exported names, "
           f"{len(EXPECTED_TUNE_MEASURE)} measurement names)")
     return 0
 

@@ -85,6 +85,31 @@ python scripts/check_perf_regression.py \
     --fresh "$PERF_TMP/blas_fast.json" \
     --tol "${REPRO_PERF_TOL:-2.0}"
 
+echo "== traced bench smoke (tiny traced run -> chrome trace -> validate) =="
+python - "$PERF_TMP" <<'PY'
+import os, sys
+import numpy as np
+import jax.numpy as jnp
+from repro import linalg, obs
+
+rng = np.random.default_rng(0)
+a = jnp.asarray(rng.standard_normal((48, 32)), jnp.float32)
+before = obs.counters_snapshot()
+with obs.trace("ci-smoke") as tr:
+    with linalg.use(policy="model"):
+        linalg.qr(a)
+        linalg.gemm(a.T, a)
+path = os.path.join(sys.argv[1], "trace_ci.json")
+obs.save_chrome_trace(tr, path)
+assert tr.spans(cat="routine"), "no routine spans captured"
+assert tr.spans(name="tune.resolve"), \
+    "no dispatch provenance events in the trace"
+assert obs.counters_delta(before).get("dispatch.resolve", 0) > 0, \
+    "dispatch.resolve counter did not move"
+print(f"traced bench smoke OK -> {path} ({len(tr.events)} events)")
+PY
+python scripts/trace_report.py --validate "$PERF_TMP/trace_ci.json"
+
 echo "== calibration smoke (fit -> register -> round-trip) =="
 python - <<'PY'
 import os, tempfile

@@ -1,0 +1,173 @@
+#!/usr/bin/env python
+"""Summarize or validate an on-disk repro.obs trace artifact.
+
+Usage:
+    python scripts/trace_report.py TRACE.json            # text summary
+    python scripts/trace_report.py TRACE.json --validate # schema gate
+
+Reads both exporter formats (auto-detected): the Chrome ``trace_event``
+object written by ``obs.save_chrome_trace`` (also what
+``benchmarks/run.py --trace`` emits) and the JSON-lines form from
+``obs.save_jsonl``. ``--validate`` is the CI schema gate
+(``scripts/ci_check.sh``): it fails (exit 1) on a schema-version
+mismatch, missing required fields, non-monotonic ``ts`` ordering, or
+malformed events - so exporter drift cannot land silently. See
+``docs/observability.md`` for the schemas.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+# importable from any cwd: the schema constants live in src/repro/obs
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.obs import EVENT_FIELDS, SCHEMA_VERSION  # noqa: E402
+
+CHROME_REQUIRED = {"name", "cat", "ph", "ts", "pid", "tid"}
+
+
+def load(path: str) -> Tuple[str, Dict, List[Dict]]:
+    """-> (format, metadata, events); format in {"chrome", "jsonl"}."""
+    with open(path) as f:
+        text = f.read()
+    try:
+        blob = json.loads(text)
+    except json.JSONDecodeError:
+        blob = None
+    if isinstance(blob, dict) and "traceEvents" in blob:
+        return "chrome", blob.get("otherData", {}), blob["traceEvents"]
+    # JSON-lines: one object per line
+    meta: Dict = {}
+    events: List[Dict] = []
+    for i, line in enumerate(filter(None, map(str.strip, text.splitlines()))):
+        rec = json.loads(line)
+        kind = rec.get("kind")
+        if kind == "header":
+            meta.update(rec)
+        elif kind == "counters":
+            meta["counters"] = rec.get("counters", {})
+        elif kind == "event":
+            events.append(rec)
+        else:
+            raise ValueError(f"line {i + 1}: unknown record kind {kind!r}")
+    if not meta:
+        raise ValueError("jsonl trace has no header line")
+    return "jsonl", meta, events
+
+
+def validate(fmt: str, meta: Dict, events: List[Dict]) -> List[str]:
+    """Schema check; returns a list of human-readable problems."""
+    problems = []
+    got_ver = meta.get("schema_version")
+    if got_ver != SCHEMA_VERSION:
+        problems.append(f"schema_version {got_ver!r} != expected "
+                        f"{SCHEMA_VERSION}")
+    if "counters" not in meta:
+        problems.append("missing counters block")
+    if fmt == "chrome":
+        last_ts = None
+        for i, e in enumerate(events):
+            missing = CHROME_REQUIRED - set(e)
+            if missing:
+                problems.append(f"event {i}: missing {sorted(missing)}")
+                continue
+            if e["ph"] not in ("X", "i"):
+                problems.append(f"event {i}: unexpected ph {e['ph']!r}")
+            if e["ph"] == "X" and not (isinstance(e.get("dur"), (int, float))
+                                       and e["dur"] >= 0):
+                problems.append(f"event {i}: ph=X needs dur >= 0")
+            if not isinstance(e["ts"], (int, float)):
+                problems.append(f"event {i}: non-numeric ts")
+            elif last_ts is not None and e["ts"] < last_ts:
+                problems.append(f"event {i}: ts {e['ts']} < previous "
+                                f"{last_ts} (not monotonically ordered)")
+            else:
+                last_ts = e["ts"]
+            if "id" not in e.get("args", {}):
+                problems.append(f"event {i}: args missing event id")
+    else:
+        want = set(EVENT_FIELDS)
+        last_ts = None
+        for i, e in enumerate(events):
+            fields = set(e) - {"kind"}
+            if fields != want:
+                problems.append(f"event {i}: fields {sorted(fields)} != "
+                                f"{sorted(want)}")
+                continue
+            ts = e["t_start"]
+            if last_ts is not None and ts < last_ts:
+                problems.append(f"event {i}: t_start not monotonic")
+            last_ts = ts
+    return problems
+
+
+def summarize(meta: Dict, events: List[Dict]) -> str:
+    groups: Dict = {}
+    for e in events:
+        cat = e.get("cat", "?")
+        name = e.get("name", "?")
+        if "dur" in e:                                  # chrome: micros
+            dur_s = e["dur"] / 1e6
+            args = e.get("args", {})
+        elif e.get("t_end") is not None:                # jsonl: seconds
+            dur_s = e["t_end"] - e["t_start"]
+            args = e.get("attrs", {})
+        else:
+            dur_s = 0.0
+            args = e.get("args") or e.get("attrs") or {}
+        g = groups.setdefault((cat, name),
+                              {"count": 0, "total_s": 0.0, "fracs": []})
+        g["count"] += 1
+        g["total_s"] += dur_s
+        frac = args.get("fraction_of_modeled_peak")
+        if isinstance(frac, (int, float)):
+            g["fracs"].append(frac)
+    name = meta.get("trace_name", "?")
+    lines = [f"trace {name!r}: {len(events)} events",
+             f"{'cat':<12} {'name':<28} {'count':>6} {'total_ms':>10} "
+             f"{'frac_peak':>10}"]
+    for (cat, nm), g in sorted(groups.items(), key=lambda kv: -kv[1]["total_s"]):
+        frac = (sum(g["fracs"]) / len(g["fracs"])) if g["fracs"] else None
+        lines.append(f"{cat:<12} {nm:<28} {g['count']:>6} "
+                     f"{1e3 * g['total_s']:>10.3f} "
+                     f"{(f'{frac:.2e}' if frac is not None else '-'):>10}")
+    counters = meta.get("counters") or {}
+    if counters:
+        lines.append("counters:")
+        lines += [f"  {k:<28} {v}" for k, v in sorted(counters.items())]
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="trace artifact (chrome-trace or jsonl)")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-gate the artifact instead of summarizing")
+    args = ap.parse_args()
+
+    try:
+        fmt, meta, events = load(args.trace)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"unreadable trace {args.trace}: {e}", file=sys.stderr)
+        return 1
+    if args.validate:
+        problems = validate(fmt, meta, events)
+        if problems:
+            print(f"trace {args.trace} FAILED validation ({fmt} format):")
+            for p in problems[:20]:
+                print(f"  - {p}")
+            return 1
+        print(f"trace OK: {args.trace} ({fmt} format, {len(events)} events, "
+              f"schema v{SCHEMA_VERSION})")
+        return 0
+    print(summarize(meta, events))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,9 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro import obs as _obs
+from repro.obs import counters as _counters
+
 Q_BLOCK = 256
 
 
@@ -48,9 +51,39 @@ def ring_bcast(val: jnp.ndarray, axis_name: str, size: int,
     and each hop moves only ``val.nbytes`` per link (see
     :func:`ring_bcast_bytes` - the accounting that
     :func:`repro.core.codesign.plan_pdgemm` prices).
+
+    Observability: every call increments the ``collective.hops`` /
+    ``collective.bytes`` counters and, under an active trace, records a
+    ``collective.ring_bcast`` event with the per-hop panel bytes priced
+    against the ambient machine's ``MemorySpec.ici_bw``. The accounting
+    runs at *trace* time (this function executes inside shard_map
+    tracing), so counts cover distinct traced schedules, not cached
+    re-executions - see ``docs/observability.md``.
     """
     if size <= 1:
         return val
+    hops = size - 1
+    n_elems = 1
+    for d in val.shape:                     # static even on jit tracers
+        n_elems *= int(d)
+    panel_bytes = n_elems * jnp.dtype(val.dtype).itemsize
+    wire_bytes = ring_bcast_bytes(panel_bytes, size)
+    _counters.inc("collective.hops", hops)
+    _counters.inc("collective.bytes", wire_bytes)
+    if _obs.enabled():
+        attrs = {"axis": axis_name, "size": size, "src": int(src),
+                 "hops": hops, "per_hop_bytes": panel_bytes,
+                 "wire_bytes": wire_bytes, "shape": list(val.shape),
+                 "dtype": jnp.dtype(val.dtype).name}
+        try:
+            from repro import arch          # lazy: avoid import cycle
+            ici = arch.current_machine().memory.ici_bw
+            if ici > 0:
+                attrs.update(ici_bw=ici, modeled_hop_s=panel_bytes / ici,
+                             modeled_s=wire_bytes / ici)
+        except Exception:
+            pass
+        _obs.event("collective.ring_bcast", cat="collective", **attrs)
     idx = lax.axis_index(axis_name)
     perm = [((d - 1) % size, d) for d in range(size)]
     buf = val

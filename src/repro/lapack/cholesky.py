@@ -17,6 +17,7 @@ from typing import Optional
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs as _obs
 from repro.blas.level3 import gemm, trsm
 
 
@@ -104,17 +105,22 @@ def potrf(a: jnp.ndarray, block: Optional[int] = None,
         return potrf_unblocked(a)
     for j0 in range(0, n, block):
         nb = min(block, n - j0)
-        a = a.at[j0:j0 + nb, j0:j0 + nb].set(
-            potrf_unblocked(a[j0:j0 + nb, j0:j0 + nb]))
+        with _obs.span("potrf.panel", cat="panel", j0=j0, nb=nb,
+                       flops=nb ** 3 // 3):
+            a = a.at[j0:j0 + nb, j0:j0 + nb].set(
+                potrf_unblocked(a[j0:j0 + nb, j0:j0 + nb]))
         if j0 + nb < n:
-            l11 = a[j0:j0 + nb, j0:j0 + nb]
-            # L21 = A21 L11^{-T}
-            l21 = trsm(l11, a[j0 + nb:, j0:j0 + nb].T, lower=True,
-                       unit_diag=False, left=True, policy=pol,
-                       interpret=interpret, registry=registry).T
-            a = a.at[j0 + nb:, j0:j0 + nb].set(l21)
-            # trailing SYRK: A22 -= L21 L21^T (the GEMM hot path)
-            a = a.at[j0 + nb:, j0 + nb:].add(
-                -gemm(l21, l21, transb=True, policy=pol,
-                      interpret=interpret, registry=registry))
+            r = n - j0 - nb                 # trailing-block side length
+            with _obs.span("potrf.trailing", cat="trailing", j0=j0, nb=nb,
+                           flops=nb * nb * r + 2 * r * r * nb):
+                l11 = a[j0:j0 + nb, j0:j0 + nb]
+                # L21 = A21 L11^{-T}
+                l21 = trsm(l11, a[j0 + nb:, j0:j0 + nb].T, lower=True,
+                           unit_diag=False, left=True, policy=pol,
+                           interpret=interpret, registry=registry).T
+                a = a.at[j0 + nb:, j0:j0 + nb].set(l21)
+                # trailing SYRK: A22 -= L21 L21^T (the GEMM hot path)
+                a = a.at[j0 + nb:, j0 + nb:].add(
+                    -gemm(l21, l21, transb=True, policy=pol,
+                          interpret=interpret, registry=registry))
     return jnp.tril(a)

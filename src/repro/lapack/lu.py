@@ -11,6 +11,7 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs as _obs
 from repro.blas.level3 import gemm, trsm
 from repro.lapack.cholesky import default_block
 
@@ -120,19 +121,24 @@ def getrf(a: jnp.ndarray, block: Optional[int] = None,
             A = A - jnp.outer(l, urow)
             return A, piv
 
-        a, piv = lax.fori_loop(0, nb, pbody,
-                               (a, jnp.zeros((nb,), jnp.int32)))
+        with _obs.span("getrf.panel", cat="panel", j0=j0, nb=nb,
+                       flops=(n - j0) * nb * nb):
+            a, piv = lax.fori_loop(0, nb, pbody,
+                                   (a, jnp.zeros((nb,), jnp.int32)))
         pivs.append(piv)
         if j0 + nb < nc:
-            # U12 = L11^{-1} A12 ; A22 -= L21 U12  (trsm + GEMM)
-            l11 = a[j0:j0 + nb, j0:j0 + nb]
-            u12 = trsm(l11, a[j0:j0 + nb, j0 + nb:], lower=True,
-                       unit_diag=True, left=True, policy=pol,
-                       interpret=interpret, registry=registry)
-            a = a.at[j0:j0 + nb, j0 + nb:].set(u12)
-            a = a.at[j0 + nb:, j0 + nb:].add(
-                -gemm(a[j0 + nb:, j0:j0 + nb], u12, policy=pol,
-                      interpret=interpret, registry=registry))
+            mr, ncr = n - j0 - nb, nc - j0 - nb     # trailing block dims
+            with _obs.span("getrf.trailing", cat="trailing", j0=j0, nb=nb,
+                           flops=nb * nb * ncr + 2 * mr * ncr * nb):
+                # U12 = L11^{-1} A12 ; A22 -= L21 U12  (trsm + GEMM)
+                l11 = a[j0:j0 + nb, j0:j0 + nb]
+                u12 = trsm(l11, a[j0:j0 + nb, j0 + nb:], lower=True,
+                           unit_diag=True, left=True, policy=pol,
+                           interpret=interpret, registry=registry)
+                a = a.at[j0:j0 + nb, j0 + nb:].set(u12)
+                a = a.at[j0 + nb:, j0 + nb:].add(
+                    -gemm(a[j0 + nb:, j0:j0 + nb], u12, policy=pol,
+                          interpret=interpret, registry=registry))
     return a, jnp.concatenate(pivs)
 
 

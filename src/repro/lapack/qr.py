@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs as _obs
 from repro.blas.level3 import gemm
 from repro.lapack.cholesky import default_block
 
@@ -157,25 +158,30 @@ def geqrf(a: jnp.ndarray, block: Optional[int] = None,
             P = P.at[:, k].set(col)
             return P, tau.at[k].set(tk)
 
-        panel, tau = lax.fori_loop(0, nb, pbody,
-                                   (panel, jnp.zeros((nb,), a.dtype)))
+        with _obs.span("geqrf.panel", cat="panel", j0=j0, nb=nb,
+                       flops=2 * (m - j0) * nb * nb):
+            panel, tau = lax.fori_loop(0, nb, pbody,
+                                       (panel, jnp.zeros((nb,), a.dtype)))
         a = a.at[:, j0:j0 + nb].set(panel)
         taus.append(tau)
         # trailing update: C <- (I - V T V^T)^T C = C - V T^T (V^T C)
         if j0 + nb < n:
-            rows = jnp.arange(m)
-            V = jnp.where(rows[:, None] > (j0 + jnp.arange(nb))[None, :],
-                          panel, 0.0)
-            V = jnp.where(rows[:, None] == (j0 + jnp.arange(nb))[None, :],
-                          1.0, V)
-            T = _larft(V, tau)
-            C = a[:, j0 + nb:]
-            W = gemm(V, C, transa=True, policy=pol, interpret=interpret,
-                     registry=registry)               # (nb, rest)   GEMM
-            W = T.T @ W                               # small (nb x nb) GEMM
-            a = a.at[:, j0 + nb:].set(
-                C - gemm(V, W, policy=pol, interpret=interpret,
-                         registry=registry))          # GEMM
+            rest = n - j0 - nb              # trailing columns
+            with _obs.span("geqrf.trailing", cat="trailing", j0=j0, nb=nb,
+                           flops=4 * m * nb * rest + 2 * nb * nb * rest):
+                rows = jnp.arange(m)
+                V = jnp.where(rows[:, None] > (j0 + jnp.arange(nb))[None, :],
+                              panel, 0.0)
+                V = jnp.where(rows[:, None] == (j0 + jnp.arange(nb))[None, :],
+                              1.0, V)
+                T = _larft(V, tau)
+                C = a[:, j0 + nb:]
+                W = gemm(V, C, transa=True, policy=pol, interpret=interpret,
+                         registry=registry)           # (nb, rest)   GEMM
+                W = T.T @ W                           # small (nb x nb) GEMM
+                a = a.at[:, j0 + nb:].set(
+                    C - gemm(V, W, policy=pol, interpret=interpret,
+                             registry=registry))      # GEMM
     return a, jnp.concatenate(taus)
 
 

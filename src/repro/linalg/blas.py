@@ -22,6 +22,7 @@ replaces.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional
 
@@ -29,17 +30,18 @@ import jax
 import jax.numpy as jnp
 
 from repro import arch as _arch
+from repro import obs as _obs
 from repro.blas import level1 as _l1
 from repro.blas import level2 as _l2
 from repro.blas import level3 as _l3
 from repro.linalg.context import (current, resolved_accum_dtype,
                                   resolved_interpret, resolved_machine,
-                                  resolved_mesh, resolved_policy,
-                                  resolved_registry)
+                                  resolved_mesh, resolved_obs,
+                                  resolved_policy, resolved_registry)
 
 
-def _machine_scoped(fn):
-    """Run the routine body under the context's machine.
+def _routine(op, info=None):
+    """Routine wrapper: machine scoping + one obs span per public call.
 
     The resolved ``ctx.machine`` becomes the ambient
     :func:`repro.arch.machine_scope` for the whole call, so every nested
@@ -47,16 +49,145 @@ def _machine_scoped(fn):
     factorization included - sees it without kwarg threading. A ``None``
     machine inherits whatever scope (or the process default) is already
     active.
+
+    When a trace is capturing (the ambient :func:`repro.obs.trace` scope,
+    or an explicit ``ctx.obs``), the body runs under a
+    ``linalg.<op>`` span annotated by ``info(*args, **kw)`` - shapes,
+    dtype, flop/byte counts - which the span prices against the ambient
+    machine at close (``docs/observability.md``). With no capture active
+    the wrapper takes a dict-free early return into the numeric body:
+    untraced calls execute byte-for-byte the pre-obs path. An annotation
+    failure never breaks the call (``info`` runs under ``except``).
     """
-    @functools.wraps(fn)
-    def wrapper(*args, context=None, **kw):
-        ctx = current(context)
-        mach = resolved_machine(ctx)
-        if mach is None:
-            return fn(*args, context=ctx, **kw)
-        with _arch.machine_scope(mach):
-            return fn(*args, context=ctx, **kw)
-    return wrapper
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, context=None, **kw):
+            ctx = current(context)
+            mach = resolved_machine(ctx)
+            tr = resolved_obs(ctx)
+            if tr is None and not _obs.enabled():
+                # fast path: no capture anywhere - identical to pre-obs
+                if mach is None:
+                    return fn(*args, context=ctx, **kw)
+                with _arch.machine_scope(mach):
+                    return fn(*args, context=ctx, **kw)
+            with contextlib.ExitStack() as st:
+                if mach is not None:
+                    st.enter_context(_arch.machine_scope(mach))
+                if tr is None:
+                    # ctx.obs=False under an ambient trace: mask capture
+                    # for the whole body (nested spans included)
+                    st.enter_context(_obs.capture(None))
+                    return fn(*args, context=ctx, **kw)
+                if tr is not _obs.current_trace():
+                    st.enter_context(_obs.capture(tr))
+                sp = st.enter_context(_obs.span("linalg." + op,
+                                                cat="routine"))
+                if info is not None:
+                    try:
+                        sp.annotate(**info(*args, **kw))
+                    except Exception:
+                        pass
+                return fn(*args, context=ctx, **kw)
+        return wrapper
+    return deco
+
+
+# --------------------- span annotation (traced calls only) ------------------
+
+def _shape(x):
+    return tuple(int(d) for d in getattr(x, "shape", ()))
+
+
+def _nbytes(*arrays) -> int:
+    """Total operand bytes (arrays without shape/dtype - e.g. python
+    scalars - count 0); works on jit tracers (shape/dtype are static)."""
+    total = 0
+    for x in arrays:
+        shp = getattr(x, "shape", None)
+        dt = getattr(x, "dtype", None)
+        if shp is None or dt is None:
+            continue
+        n = 1
+        for d in shp:
+            n *= int(d)
+        total += n * jnp.dtype(dt).itemsize
+    return total
+
+
+def _dtype_name(*arrays) -> str:
+    return jnp.result_type(*[a for a in arrays if a is not None]).name
+
+
+def _gemm_info(a, b, c=None, alpha=1.0, beta=0.0, transa=False, transb=False,
+               **kw):
+    sa, sb = _shape(a), _shape(b)
+    batch = sa[0] if len(sa) == 3 else 1
+    m = sa[-1] if transa else sa[-2]
+    k = sa[-2] if transa else sa[-1]
+    n = sb[-2] if transb else sb[-1]
+    out_itemsize = jnp.dtype(jnp.result_type(
+        *[v for v in (a, b, c) if v is not None])).itemsize
+    return {"shape": ([m, n, k] if batch == 1 else [batch, m, n, k]),
+            "dtype": _dtype_name(a, b, c),
+            "flops": 2 * batch * m * n * k,
+            "bytes": _nbytes(a, b, c) + batch * m * n * out_itemsize}
+
+
+def _syrk_info(a, c=None, alpha=1.0, beta=0.0, lower=True, trans=False, **kw):
+    sa = _shape(a)
+    batch = sa[0] if len(sa) == 3 else 1
+    n = sa[-1] if trans else sa[-2]
+    k = sa[-2] if trans else sa[-1]
+    return {"shape": ([n, k] if batch == 1 else [batch, n, k]),
+            "dtype": _dtype_name(a, c), "flops": 2 * batch * n * n * k,
+            "bytes": _nbytes(a, c)}
+
+
+def _trsm_info(a, b, lower=True, unit_diag=False, left=True, block=None,
+               **kw):
+    sa, sb = _shape(a), _shape(b)
+    batch = sa[0] if len(sa) == 3 else 1
+    n = sa[-1]
+    nrhs = sb[-1] if len(sb) >= 2 else 1
+    return {"shape": ([n, nrhs] if batch == 1 else [batch, n, nrhs]),
+            "dtype": _dtype_name(a, b), "flops": batch * n * n * nrhs,
+            "bytes": _nbytes(a, b)}
+
+
+def _gemv_info(a, x, y=None, alpha=1.0, beta=0.0, trans=False, **kw):
+    sa = _shape(a)
+    batch = sa[0] if len(sa) == 3 else 1
+    m, n = sa[-2], sa[-1]
+    return {"shape": ([m, n] if batch == 1 else [batch, m, n]),
+            "dtype": _dtype_name(a, x, y), "flops": 2 * batch * m * n,
+            "bytes": _nbytes(a, x, y)}
+
+
+def _ger_info(alpha, x, y, a, **kw):
+    m, n = _shape(a)[-2:]
+    return {"shape": [m, n], "dtype": _dtype_name(x, y, a),
+            "flops": 2 * m * n, "bytes": _nbytes(x, y, a)}
+
+
+def _trsv_info(a, b, **kw):
+    n = _shape(a)[-1]
+    return {"shape": [n], "dtype": _dtype_name(a, b), "flops": n * n,
+            "bytes": _nbytes(a, b)}
+
+
+def _vec_info(flop_per_elem):
+    def info(*args, **kw):
+        arrs = [a for a in args if getattr(a, "shape", None) is not None
+                or isinstance(a, (list, tuple))]
+        x = arrs[0] if arrs else args[0]
+        x = jnp.asarray(x) if getattr(x, "shape", None) is None else x
+        n = 1
+        for d in _shape(x):
+            n *= d
+        return {"shape": list(_shape(x)), "dtype": _dtype_name(x),
+                "flops": flop_per_elem * n, "bytes": _nbytes(*args)}
+    return info
 
 
 def _dtypes(ctx, dtype, *arrays):
@@ -97,7 +228,7 @@ def _kw(ctx):
 
 # -------------------------------- level 3 -----------------------------------
 
-@_machine_scoped
+@_routine("gemm", _gemm_info)
 def gemm(a, b, c=None, alpha=1.0, beta=0.0, transa: bool = False,
          transb: bool = False, dtype=None, context=None) -> jnp.ndarray:
     """C <- alpha * op(A) op(B) + beta * C, any supported dtype.
@@ -131,7 +262,7 @@ def gemm(a, b, c=None, alpha=1.0, beta=0.0, transa: bool = False,
     return _cast(out, store)
 
 
-@_machine_scoped
+@_routine("syrk", _syrk_info)
 def syrk(a, c=None, alpha=1.0, beta=0.0, lower: bool = True,
          trans: bool = False, dtype=None, context=None) -> jnp.ndarray:
     """C <- alpha op(A) op(A)^T + beta C, symmetric output.
@@ -164,7 +295,7 @@ def syrk(a, c=None, alpha=1.0, beta=0.0, lower: bool = True,
     return _cast(out, store)
 
 
-@_machine_scoped
+@_routine("trsm", _trsm_info)
 def trsm(a, b, lower: bool = True, unit_diag: bool = False,
          left: bool = True, block: Optional[int] = None, dtype=None,
          context=None) -> jnp.ndarray:
@@ -195,7 +326,7 @@ def trsm(a, b, lower: bool = True, unit_diag: bool = False,
 
 # -------------------------------- level 2 -----------------------------------
 
-@_machine_scoped
+@_routine("gemv", _gemv_info)
 def gemv(a, x, y=None, alpha=1.0, beta=0.0, trans: bool = False,
          dtype=None, context=None) -> jnp.ndarray:
     """y <- alpha*op(A) x + beta*y. Kernel policies run op(A) x through
@@ -215,7 +346,7 @@ def gemv(a, x, y=None, alpha=1.0, beta=0.0, trans: bool = False,
     return _cast(out, store)
 
 
-@_machine_scoped
+@_routine("ger", _ger_info)
 def ger(alpha, x, y, a, dtype=None, context=None) -> jnp.ndarray:
     """A <- alpha * x y^T + A (rank-1 update, pure jnp)."""
     ctx = current(context)
@@ -224,7 +355,7 @@ def ger(alpha, x, y, a, dtype=None, context=None) -> jnp.ndarray:
     return _cast(out, store)
 
 
-@_machine_scoped
+@_routine("trsv", _trsv_info)
 def trsv(a, b, lower: bool = True, unit_diag: bool = False, dtype=None,
          context=None) -> jnp.ndarray:
     """Solve op(T) x = b via the row-sequential scan (the divider-hazard
@@ -238,7 +369,7 @@ def trsv(a, b, lower: bool = True, unit_diag: bool = False, dtype=None,
 
 # -------------------------------- level 1 -----------------------------------
 
-@_machine_scoped
+@_routine("dot", _vec_info(2))
 def dot(x, y, schedule: str = "tree", accumulators: int = 8, dtype=None,
         context=None) -> jnp.ndarray:
     """Inner product with an explicit reduction schedule
@@ -251,7 +382,7 @@ def dot(x, y, schedule: str = "tree", accumulators: int = 8, dtype=None,
     return _cast(out, store)
 
 
-@_machine_scoped
+@_routine("axpy", _vec_info(2))
 def axpy(alpha, x, y, dtype=None, context=None) -> jnp.ndarray:
     """y <- alpha*x + y."""
     ctx = current(context)
@@ -259,7 +390,7 @@ def axpy(alpha, x, y, dtype=None, context=None) -> jnp.ndarray:
     return _cast(_l1.axpy(alpha, _cast(x, comp), _cast(y, comp)), store)
 
 
-@_machine_scoped
+@_routine("scal", _vec_info(1))
 def scal(alpha, x, dtype=None, context=None) -> jnp.ndarray:
     """x <- alpha*x."""
     ctx = current(context)
@@ -267,7 +398,7 @@ def scal(alpha, x, dtype=None, context=None) -> jnp.ndarray:
     return _cast(_l1.scal(alpha, _cast(x, comp)), store)
 
 
-@_machine_scoped
+@_routine("nrm2", _vec_info(2))
 def nrm2(x, dtype=None, context=None) -> jnp.ndarray:
     """Overflow-safe Euclidean norm."""
     ctx = current(context)
@@ -275,7 +406,7 @@ def nrm2(x, dtype=None, context=None) -> jnp.ndarray:
     return _cast(_l1.nrm2(_cast(x, comp)), store)
 
 
-@_machine_scoped
+@_routine("asum", _vec_info(1))
 def asum(x, dtype=None, context=None) -> jnp.ndarray:
     """Sum of absolute values."""
     ctx = current(context)
@@ -283,13 +414,13 @@ def asum(x, dtype=None, context=None) -> jnp.ndarray:
     return _cast(_l1.asum(_cast(x, comp)), store)
 
 
-@_machine_scoped
+@_routine("iamax", _vec_info(1))
 def iamax(x, context=None) -> jnp.ndarray:
     """Index of the first max-|x| element (0-based int; no dtype cast)."""
     return _l1.iamax(jnp.asarray(x))
 
 
-@_machine_scoped
+@_routine("rot", _vec_info(6))
 def rot(x, y, c, s, dtype=None, context=None):
     """Apply a Givens rotation: (c*x + s*y, c*y - s*x)."""
     ctx = current(context)

@@ -33,6 +33,14 @@ The context carries the *deployment shape* of a call:
     :func:`repro.arch.machine_scope` for their whole body, so nested
     resolutions - e.g. the trailing updates inside a blocked
     factorization - see the same machine.
+``obs``
+    Observability capture (:mod:`repro.obs`). ``None`` (the default)
+    inherits the ambient :func:`repro.obs.trace` scope, if any;
+    ``False`` suppresses capture inside the scope; an explicit
+    :class:`repro.obs.Trace` routes the routines' spans into that trace
+    regardless of the ambient scope. Like ``machine``, the routed
+    capture covers the whole routine body (nested panel/trailing spans
+    included).
 
 Contexts layer: the module default, then :func:`set_context`, then nested
 :func:`use` blocks, then a per-call ``context=`` override - inner layers
@@ -70,7 +78,7 @@ class _UnsetType:
 UNSET = _UnsetType()
 
 _FIELDS = ("policy", "mesh", "registry", "accum_dtype", "interpret",
-           "machine")
+           "machine", "obs")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +91,7 @@ class ExecutionContext:
     accum_dtype: Any = UNSET
     interpret: Any = UNSET
     machine: Any = UNSET
+    obs: Any = UNSET
 
     def __post_init__(self):
         if self.policy is not UNSET and self.policy is not None:
@@ -104,6 +113,13 @@ class ExecutionContext:
                 raise ValueError(
                     f"machine must be a MachineSpec, a registered machine "
                     f"name, or None; got {type(self.machine).__name__}")
+        if self.obs is not UNSET and self.obs is not None \
+                and self.obs is not False:
+            from repro.obs import Trace
+            if not isinstance(self.obs, Trace):
+                raise ValueError(
+                    f"obs must be a repro.obs.Trace, False (suppress), or "
+                    f"None (inherit); got {type(self.obs).__name__}")
 
     def over(self, base: "ExecutionContext") -> "ExecutionContext":
         """This context layered over ``base``: set fields win."""
@@ -137,13 +153,21 @@ class ExecutionContext:
             mach = self.machine
         else:
             mach = self.machine.name
+        if self.obs in (UNSET, None):
+            obs_desc = None                         # inherit ambient trace
+        elif self.obs is False:
+            obs_desc = False
+        else:
+            obs_desc = getattr(self.obs, "name", "trace")
         return {"policy": pol, "mesh": mesh, "registry": reg_path,
-                "accum_dtype": acc, "interpret": interp, "machine": mach}
+                "accum_dtype": acc, "interpret": interp, "machine": mach,
+                "obs": obs_desc}
 
 
 # fully-resolved root: what a call sees with no context set anywhere
 _DEFAULT = ExecutionContext(policy=None, mesh=None, registry=None,
-                            accum_dtype=None, interpret=True, machine=None)
+                            accum_dtype=None, interpret=True, machine=None,
+                            obs=None)
 # process-global base (set_context) + per-thread/task overlay scopes (use)
 _base = _DEFAULT
 _scopes: "contextvars.ContextVar[Tuple[ExecutionContext, ...]]" = \
@@ -297,3 +321,17 @@ def resolved_machine(ctx: ExecutionContext):
         from repro import arch as _arch
         return _arch.get(mach)
     return mach
+
+
+def resolved_obs(ctx: ExecutionContext):
+    """ctx.obs as a Trace-or-None. ``UNSET``/``None`` inherit the ambient
+    :func:`repro.obs.current_trace`; ``False`` resolves to ``None`` even
+    under an ambient trace (the routine wrappers additionally mask the
+    ambient scope in that case, so nested spans stay suppressed too)."""
+    o = ctx.obs
+    if o is False:
+        return None
+    if o is UNSET or o is None:
+        from repro.obs import current_trace
+        return current_trace()
+    return o

@@ -24,7 +24,8 @@ from repro.lapack import lu as _lu
 from repro.lapack import qr as _qr
 from repro.lapack import solve as _solve
 from repro.lapack.batched import FactorizationResult
-from repro.linalg.blas import _cast, _dtypes, _kw, _machine_scoped
+from repro.linalg.blas import (_cast, _dtype_name, _dtypes, _kw, _nbytes,
+                               _routine, _shape)
 from repro.linalg.context import current, resolved_mesh
 
 
@@ -35,6 +36,66 @@ def _batched_route(ctx, local_fn, dist_fn, a, **kw):
     return local_fn(a, **kw)
 
 
+# --------------------- span annotation (traced calls only) ------------------
+# Leading-order LAPACK flop counts (the paper's accounting coefficients -
+# see FACTOR_FLOP_COEFF in repro.core.codesign for the square-case forms);
+# exact lower-order terms are not tracked, these price roofline spans.
+
+def _potrf_flops(n):
+    return n ** 3 // 3
+
+
+def _getrf_flops(m, n):
+    k = min(m, n)
+    return m * n * k - (m + n) * k * k // 2 + k ** 3 // 3
+
+
+def _geqrf_flops(m, n):
+    k = min(m, n)
+    return 2 * m * n * k - k * k * (m + n) + 2 * k ** 3 // 3
+
+
+def _factor_info(flops_fn):
+    """Factorization info factory; ``flops_fn(m, n)`` prices one item."""
+    def info(a, *args, **kw):
+        s = _shape(a)
+        batch = s[0] if len(s) == 3 else 1
+        return {"shape": list(s), "dtype": _dtype_name(a),
+                "flops": batch * flops_fn(s[-2], s[-1]),
+                "bytes": _nbytes(a)}
+    return info
+
+
+def _solve_info(a, b, *args, **kw):
+    sa, sb = _shape(a), _shape(b)
+    batch = sa[0] if len(sa) == 3 else 1
+    n = sa[-1]
+    nrhs = sb[-1] if len(sb) - (len(sa) - 2) >= 2 else 1
+    flops = _getrf_flops(sa[-2], n) + 2 * n * n * nrhs
+    return {"shape": list(sa), "dtype": _dtype_name(a, b),
+            "flops": batch * flops, "bytes": _nbytes(a, b)}
+
+
+def _lstsq_info(a, b, *args, **kw):
+    sa, sb = _shape(a), _shape(b)
+    batch = sa[0] if len(sa) == 3 else 1
+    m, n = sa[-2], sa[-1]
+    nrhs = sb[-1] if len(sb) - (len(sa) - 2) >= 2 else 1
+    flops = _geqrf_flops(m, n) + 2 * n * n * nrhs
+    return {"shape": list(sa), "dtype": _dtype_name(a, b),
+            "flops": batch * flops, "bytes": _nbytes(a, b)}
+
+
+def _batched_solve_info(res, b, *args, **kw):
+    sf, sb = _shape(res.factors), _shape(b)
+    batch = sf[0] if len(sf) == 3 else 1
+    n = sf[-1]
+    nrhs = sb[-1] if len(sb) >= 3 else 1
+    return {"shape": list(sf), "dtype": _dtype_name(res.factors, b),
+            "flops": batch * 2 * n * n * nrhs,
+            "bytes": _nbytes(res.factors, b)}
+
+
 def _cast_result(res: FactorizationResult, store) -> FactorizationResult:
     factors = _cast(res.factors, store)
     tau = None if res.tau is None else _cast(res.tau, store)
@@ -43,7 +104,7 @@ def _cast_result(res: FactorizationResult, store) -> FactorizationResult:
 
 # ------------------------------ factorizations ------------------------------
 
-@_machine_scoped
+@_routine("cholesky", _factor_info(lambda m, n: _potrf_flops(n)))
 def cholesky(a, block: Optional[int] = None, dtype=None,
              context=None) -> jnp.ndarray:
     """Lower-triangular Cholesky factor of an SPD matrix (or batch).
@@ -62,7 +123,7 @@ def cholesky(a, block: Optional[int] = None, dtype=None,
     return _cast(out, store)
 
 
-@_machine_scoped
+@_routine("lu", _factor_info(_getrf_flops))
 def lu(a, block: Optional[int] = None, dtype=None,
        context=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """LU with partial pivoting: (packed L\\U, int32 ipiv).
@@ -80,7 +141,7 @@ def lu(a, block: Optional[int] = None, dtype=None,
     return _cast(packed, store), piv
 
 
-@_machine_scoped
+@_routine("qr", _factor_info(lambda m, n: _geqrf_flops(m, n) + 2 * m * m * min(m, n)))
 def qr(a, block: Optional[int] = None, dtype=None,
        context=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Thin QR: (Q (m, min(m, n)), R (min(m, n), n)).
@@ -105,7 +166,7 @@ def qr(a, block: Optional[int] = None, dtype=None,
     return _cast(q, store), _cast(r, store)
 
 
-@_machine_scoped
+@_routine("solve", _solve_info)
 def solve(a, b, block: Optional[int] = None, dtype=None,
           context=None) -> jnp.ndarray:
     """Solve A X = B via pivoted LU (LAPACK GESV).
@@ -124,7 +185,7 @@ def solve(a, b, block: Optional[int] = None, dtype=None,
     return _cast(out, store)
 
 
-@_machine_scoped
+@_routine("lstsq", _lstsq_info)
 def lstsq(a, b, block: Optional[int] = None, dtype=None,
           context=None) -> jnp.ndarray:
     """Least-squares min ||A x - b|| via QR (m >= n, full column rank).
@@ -144,7 +205,7 @@ def lstsq(a, b, block: Optional[int] = None, dtype=None,
 
 # ------------------------------ batched drivers -----------------------------
 
-@_machine_scoped
+@_routine("batched_cholesky", _factor_info(lambda m, n: _potrf_flops(n)))
 def batched_cholesky(a, block: Optional[int] = None, dtype=None,
                      context=None) -> FactorizationResult:
     """Cholesky of a (B, n, n) SPD batch -> FactorizationResult("potrf").
@@ -160,7 +221,7 @@ def batched_cholesky(a, block: Optional[int] = None, dtype=None,
     return _cast_result(res, store)
 
 
-@_machine_scoped
+@_routine("batched_lu", _factor_info(_getrf_flops))
 def batched_lu(a, block: Optional[int] = None, dtype=None,
                context=None) -> FactorizationResult:
     """Pivoted LU of a (B, m, n) batch -> FactorizationResult("getrf")."""
@@ -172,7 +233,7 @@ def batched_lu(a, block: Optional[int] = None, dtype=None,
     return _cast_result(res, store)
 
 
-@_machine_scoped
+@_routine("batched_qr", _factor_info(_geqrf_flops))
 def batched_qr(a, block: Optional[int] = None, dtype=None,
                context=None) -> FactorizationResult:
     """Householder QR of a (B, m, n) batch -> FactorizationResult("geqrf")."""
@@ -184,7 +245,7 @@ def batched_qr(a, block: Optional[int] = None, dtype=None,
     return _cast_result(res, store)
 
 
-@_machine_scoped
+@_routine("batched_solve", _batched_solve_info)
 def batched_solve(res: FactorizationResult, b, dtype=None,
                   context=None) -> jnp.ndarray:
     """Solve A_i x_i = b_i from any FactorizationResult (mesh-routed)."""

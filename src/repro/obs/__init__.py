@@ -1,0 +1,55 @@
+"""repro.obs - context-scoped tracing, counters, roofline-annotated spans.
+
+The runtime-observability layer the paper's accounting argument needs at
+execution time: *which* kernel config dispatch resolved (and from where),
+*how many* bytes a SUMMA ring hop moved, *what fraction* of the modeled
+machine peak a routine achieved. Three pieces::
+
+    from repro import linalg, obs
+
+    with obs.trace(name="qr") as tr:        # contextvar-scoped capture
+        with linalg.use(policy="tuned"):
+            linalg.qr(a)                    # spans + provenance events
+
+    print(obs.summary(tr))                  # per-op rollup + counters
+    obs.save_chrome_trace(tr, "qr.trace.json")   # chrome://tracing file
+
+* :func:`trace` / :func:`span` / :func:`event` / :func:`annotate` - the
+  tracer (:mod:`repro.obs.trace`). Zero-cost no-op when no trace is
+  active; instrumented layers (linalg routines, ``tune.dispatch``,
+  ``distributed.collectives``, ``tune.measure``, ``launch.serve``) emit
+  spans/events only under an active capture.
+* :mod:`repro.obs.counters` - always-on monotonic process counters
+  (dispatch/registry/kernel/collective accounting); each trace reports
+  the delta it covered.
+* :mod:`repro.obs.export` - Chrome ``trace_event``, JSON-lines, and
+  plain-text summary exporters (CLI: ``scripts/trace_report.py``).
+
+Capture scoping composes with :func:`repro.linalg.use` through the
+context's ``obs`` field: ``UNSET``/``None`` inherit the ambient trace,
+``obs=False`` suppresses capture inside the scope, and ``obs=tr`` routes
+spans into an explicit :class:`Trace`. See ``docs/observability.md``.
+"""
+from repro.obs.counters import (KNOWN_COUNTERS, delta as counters_delta,
+                                inc, reset as reset_counters,
+                                snapshot as counters_snapshot, value as
+                                counter)
+from repro.obs.export import (save_chrome_trace, save_jsonl, summary,
+                              to_chrome_trace, to_jsonl)
+from repro.obs.trace import (EVENT_FIELDS, NOOP_SPAN, SCHEMA_VERSION, Span,
+                             Trace, annotate, capture, current_trace,
+                             enabled, event, span, trace)
+
+__all__ = [
+    # schema
+    "SCHEMA_VERSION", "EVENT_FIELDS",
+    # tracer
+    "Trace", "Span", "trace", "capture", "span", "event", "annotate",
+    "enabled", "current_trace", "NOOP_SPAN",
+    # counters
+    "KNOWN_COUNTERS", "inc", "counter", "counters_snapshot",
+    "counters_delta", "reset_counters",
+    # exporters
+    "to_chrome_trace", "save_chrome_trace", "to_jsonl", "save_jsonl",
+    "summary",
+]

@@ -26,9 +26,11 @@ import jax
 import jax.numpy as jnp
 
 from repro import arch as _arch
+from repro import obs as _obs
 from repro.arch import MachineSpec
 from repro.core.codesign import (GemmPlan, plan_from_blocks, plan_gemm,
                                  plan_pdgemm, plan_trsm)
+from repro.obs import counters as _counters
 from repro.tune.policy import resolve_policy, uses_kernel
 from repro.tune.registry import Registry, default_registry
 
@@ -65,6 +67,20 @@ class Resolution:
         return d
 
 
+def _observed(res: "Resolution") -> "Resolution":
+    """Resolution accounting: counters always, a provenance event when a
+    trace is capturing (``obs.event("tune.resolve", ...)`` carrying
+    :meth:`Resolution.describe` - the registry-hit / model-seeded /
+    reference provenance every traced call records)."""
+    _counters.inc("dispatch.resolve")
+    if res.policy == "tuned":
+        _counters.inc("dispatch.registry_hit" if res.source == "registry"
+                      else "dispatch.registry_miss")
+    if _obs.enabled():
+        _obs.event("tune.resolve", cat="resolve", **res.describe())
+    return res
+
+
 def resolve(op: str, shape: Tuple[int, ...], dtype,
             policy: Optional[str] = None, use_kernel: Optional[bool] = None,
             registry: Optional[Registry] = None,
@@ -92,10 +108,10 @@ def resolve(op: str, shape: Tuple[int, ...], dtype,
         if op == "trsm":
             # the reference path still needs a diagonal width; 64 is the
             # historical (pre-tuner) default
-            return Resolution(op, pol, "reference", False, block=64,
-                              machine=mach.name)
-        return Resolution(op, pol, "reference", False, mesh=mesh_str,
-                          machine=mach.name)
+            return _observed(Resolution(op, pol, "reference", False, block=64,
+                              machine=mach.name))
+        return _observed(Resolution(op, pol, "reference", False, mesh=mesh_str,
+                          machine=mach.name))
     dtype = jnp.dtype(dtype)
     backend = backend or jax.default_backend()
     cfg = None
@@ -126,8 +142,8 @@ def resolve(op: str, shape: Tuple[int, ...], dtype,
                 dtype_bytes=dtype.itemsize, machine=mach)
         else:
             local = pplan.local
-        return Resolution(op, pol, source, True, gemm_plan=local,
-                          mesh=mesh_str, machine=mach.name)
+        return _observed(Resolution(op, pol, source, True, gemm_plan=local,
+                          mesh=mesh_str, machine=mach.name))
     if op in ("gemm", "syrk"):
         m, n, k = shape
         if cfg is not None:
@@ -137,8 +153,8 @@ def resolve(op: str, shape: Tuple[int, ...], dtype,
         else:
             plan = plan_gemm(m, n, k, dtype_bytes=dtype.itemsize,
                              machine=mach)
-        return Resolution(op, pol, source, True, gemm_plan=plan,
-                          machine=mach.name)
+        return _observed(Resolution(op, pol, source, True, gemm_plan=plan,
+                          machine=mach.name))
     if op == "gemv":
         m, n = shape
         if cfg is not None:
@@ -148,19 +164,20 @@ def resolve(op: str, shape: Tuple[int, ...], dtype,
         else:
             plan = plan_gemm(m, 1, n, dtype_bytes=dtype.itemsize,
                              machine=mach)
-        return Resolution(op, pol, source, True, gemm_plan=plan,
-                          machine=mach.name)
+        return _observed(Resolution(op, pol, source, True, gemm_plan=plan,
+                          machine=mach.name))
     # trsm
     n, nrhs = shape
     block = cfg.params["block"] if cfg is not None \
         else plan_trsm(n, nrhs, dtype_bytes=dtype.itemsize,
                        machine=mach).block
-    return Resolution(op, pol, source, True, block=block, machine=mach.name)
+    return _observed(Resolution(op, pol, source, True, block=block, machine=mach.name))
 
 
 def _gemm_exec(a, b, res: Resolution, interpret: bool):
     if not res.use_pallas:
         return a @ b
+    _counters.inc("kernel.launch")
     from repro.kernels import ops                   # lazy: kernels optional
     if b.ndim == 1:                                 # matvec through the MXU
         return ops.gemm(a, b[:, None], plan=res.gemm_plan, use_pallas=True,

@@ -43,6 +43,8 @@ from typing import Callable, Optional, Tuple
 
 import jax
 
+from repro import obs as _obs
+
 # Defaults for adaptive measurement: start at MIN_REPS, stop as soon as
 # the relative IQR is inside REL_SPREAD, never exceed MAX_REPS.
 DEFAULT_MIN_REPS = 3
@@ -156,6 +158,12 @@ def measure(f, *args, reps: Optional[int] = None,
     ``reps=N`` pins the controller to exactly ``N`` samples (the
     deterministic-duration mode the benchmark drivers use); otherwise the
     ``min_reps``/``max_reps``/``rel_spread`` band drives the rep count.
+
+    Under an active :mod:`repro.obs` capture, the measurement summary
+    (reps / median / spread / convergence) is attached to the enclosing
+    span (:func:`repro.obs.annotate`) - or recorded as a
+    ``tune.measure`` instant event when no span is open - so traces
+    carry real per-execution device timing next to the trace-time spans.
     """
     if reps is not None:
         reps = int(reps)
@@ -169,8 +177,16 @@ def measure(f, *args, reps: Optional[int] = None,
         jax.block_until_ready(f(*args))
         return time.perf_counter() - t0
 
-    return repetition_controller(sample, min_reps=min_reps,
-                                 max_reps=max_reps, rel_spread=rel_spread)
+    m = repetition_controller(sample, min_reps=min_reps,
+                              max_reps=max_reps, rel_spread=rel_spread)
+    if _obs.enabled():
+        fields = {"measure_reps": m.reps,
+                  "measure_seconds_median": m.seconds_median,
+                  "measure_seconds_spread": m.seconds_spread,
+                  "measure_converged": m.converged}
+        if not _obs.annotate(**fields):
+            _obs.event("tune.measure", cat="measure", **fields)
+    return m
 
 
 def measure_wall_time(f, *args, reps: int = 2) -> float:

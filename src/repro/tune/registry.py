@@ -9,15 +9,23 @@ component scopes entries tuned under a non-default
 pre-arch registry file keeps resolving unchanged). Loading is lazy and
 *graceful*: a missing, unreadable, or schema-incompatible file yields an
 empty registry - dispatch then falls back to the model-predicted plan, so
-a broken cache can never change numerics, only speed.
+a broken cache can never change numerics, only speed. Graceful is not
+silent, though: a *corrupt* file fires a once-per-path
+``warnings.warn(RuntimeWarning)`` and the ``registry.corrupt_fallback``
+counter (a cold start - no file at all - is normal and only counts
+``registry.missing_fallback``), so losing tuned configs to a bad cache
+shows up instead of just running slower.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import warnings
 from collections import OrderedDict
-from typing import Dict, Mapping, Optional, Sequence, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Set, Tuple
+
+from repro.obs import counters as _counters
 
 SCHEMA_VERSION = 1
 _ENV_PATH = "REPRO_TUNE_REGISTRY"
@@ -83,6 +91,11 @@ def make_key(op: str, shape: Sequence[int], dtype, backend: str,
     return key if machine is None else f"{key}|m:{machine}"
 
 
+# corrupt-registry warn-once bookkeeping (per absolute path, process-wide;
+# re-loading the same broken file still counts, but warns only once)
+_warned_corrupt_paths: Set[str] = set()
+
+
 class Registry:
     """JSON-backed config store with LRU semantics.
 
@@ -106,11 +119,18 @@ class Registry:
     def load(self, path: Optional[str] = None) -> int:
         """Read entries from disk (replacing in-memory state). Returns the
         number of entries loaded; 0 with ``load_error`` set on any failure
-        (missing file, bad JSON, wrong schema) - never raises."""
+        (missing file, bad JSON, wrong schema) - never raises. A missing
+        file is a normal cold start (counted as
+        ``registry.missing_fallback``); a *corrupt* file additionally
+        warns once per path (``RuntimeWarning``) and increments
+        ``registry.corrupt_fallback`` - the fallback to model-planned
+        configs changes speed, never numerics, but it should not be
+        silent."""
         self._loaded = True
         self._entries.clear()
         self.load_error = None
         p = path or self.path
+        _counters.inc("registry.load")
         try:
             with open(p) as f:
                 blob = json.load(f)
@@ -122,9 +142,18 @@ class Registry:
                 self._entries[str(key)] = KernelConfig.from_json(d)
         except FileNotFoundError:
             self.load_error = f"no registry file at {p} (cold start)"
+            _counters.inc("registry.missing_fallback")
         except (OSError, ValueError, KeyError, TypeError) as e:
             self.load_error = f"unreadable registry at {p}: {e}"
             self._entries.clear()
+            _counters.inc("registry.corrupt_fallback")
+            ap = os.path.abspath(p)
+            if ap not in _warned_corrupt_paths:
+                _warned_corrupt_paths.add(ap)
+                warnings.warn(
+                    f"tune registry at {p} is unreadable ({e}); falling "
+                    f"back to model-planned configs (numerics unchanged, "
+                    f"tuned speed lost)", RuntimeWarning, stacklevel=2)
         return len(self._entries)
 
     def save(self, path: Optional[str] = None) -> str:

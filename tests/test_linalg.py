@@ -194,7 +194,7 @@ def test_context_describe_is_jsonable():
     d = ctx.describe()
     assert d == {"policy": "tuned", "mesh": [2, 2],
                  "registry": "/tmp/reg.json", "accum_dtype": "float32",
-                 "interpret": True, "machine": "tpu-like"}
+                 "interpret": True, "machine": "tpu-like", "obs": None}
     json.dumps(d)
     # defaults resolve to the process default policy
     assert linalg.get_context().describe()["policy"] == "reference"

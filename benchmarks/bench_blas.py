@@ -22,7 +22,8 @@ import numpy as np
 
 from repro import arch, lapack, linalg, tune
 from repro.core.codesign import (FACTOR_FLOP_COEFF, modeled_factorization_time,
-                                 optimal_accumulators, plan_gemm)
+                                 optimal_accumulators, plan_fused_chain,
+                                 plan_gemm)
 from repro.tune.measure import measure, model_residual
 from repro.tune.search import model_score
 
@@ -65,6 +66,61 @@ def run(emit, policy: str = "reference", dtype=jnp.float32,
                      "resolution": tune.resolve("gemm", (n, n, n), dtype,
                                                 policy=policy).describe()})
 
+        # fused GEMM+epilogue: time the front-end call and record the
+        # chain model's modeled HBM bytes next to the resolved fuse
+        # decision, so the trajectory tracks whether streaming the
+        # epilogue through VMEM pays on this machine/policy
+        ke = 64
+        af = jnp.asarray(rng.normal(size=(n, ke)).astype(np.float32)).astype(dtype)
+        bf = jnp.asarray(rng.normal(size=(ke, n)).astype(np.float32)).astype(dtype)
+        bias = jnp.asarray(rng.normal(size=(n,)).astype(np.float32)).astype(dtype)
+        chain = plan_fused_chain("gemm+epilogue", n, n, ke,
+                                 dtype_bytes=dtype.itemsize, epilogue="relu")
+        res_f = tune.resolve("gemm+epilogue", (n, n, ke), dtype,
+                             policy=policy, epilogue="relu")
+        ms = _measured(jax.jit(lambda x, y, bb: linalg.gemm_bias_act(
+            x, y, bias=bb, epilogue="relu")), af, bf, bias, reps=gemm_reps)
+        t = ms.seconds_median
+        emit(f"blas,gemm_bias_act,{n}", t * 1e6, "us_per_call")
+        rows.append({"op": "gemm_bias_act", "n": n, "k": ke,
+                     "dtype": dtype.name, "context": ctx_desc,
+                     "seconds_per_call": t, **ms.row_fields(),
+                     "model_residual": model_residual(
+                         chain.fused_time if res_f.fused
+                         else chain.unfused_time, t),
+                     "fused": bool(res_f.fused),
+                     "modeled_hbm_bytes": (chain.fused_hbm_bytes if res_f.fused
+                                           else chain.unfused_hbm_bytes),
+                     "modeled_hbm_bytes_unfused": chain.unfused_hbm_bytes,
+                     "hbm_bytes_saved": chain.hbm_bytes_saved,
+                     "resolution": {"for_op": "gemm+epilogue",
+                                    **res_f.describe()},
+                     **arch.bench_metrics(2 * n * n * ke / t / 1e9)})
+
+        # fused-chain pricing rows (modeled, never timed - the regression
+        # gate skips them): one shape the default machine's chain model
+        # fuses, one where cpu-host's small VMEM forces the chain apart
+        for expect, mach_, (cm, cn, ck) in (
+                ("win", None, (256, 256, 32)),
+                ("lose", arch.get("cpu-host"), (2048, 2048, 64))):
+            ch = plan_fused_chain("trsm+gemm", cm, cn, ck,
+                                  dtype_bytes=dtype.itemsize, form="syrk",
+                                  machine=mach_)
+            assert ch.fused_wins == (expect == "win"), \
+                f"chain model stopped pricing a fusion {expect} at " \
+                f"{cm}x{cn}x{ck}"
+            rows.append({"op": "fused_chain", "modeled_only": True,
+                         "kind": "trsm+gemm",
+                         "m": cm, "n": cn, "k": ck, "dtype": dtype.name,
+                         "machine": arch.resolve_machine(mach_).name,
+                         "expect": expect, "fused_wins": ch.fused_wins,
+                         "fits_vmem": ch.fits_vmem,
+                         "modeled_hbm_bytes": ch.fused_hbm_bytes,
+                         "modeled_hbm_bytes_unfused": ch.unfused_hbm_bytes,
+                         "hbm_bytes_saved": ch.hbm_bytes_saved,
+                         "modeled_time_fused": ch.fused_time,
+                         "modeled_time_unfused": ch.unfused_time})
+
         nd = 1 << (16 if fast else 20)
         x = jnp.asarray(rng.normal(size=nd).astype(np.float32))
         y = jnp.asarray(rng.normal(size=nd).astype(np.float32))
@@ -97,13 +153,26 @@ def run(emit, policy: str = "reference", dtype=jnp.float32,
                                jnp.float32, policy=policy).describe()
             fact_model_s = modeled_factorization_time(
                 nf, kind=kind, block=block, dtype=jnp.float32)
-            rows.append({"op": name, "n": nf, "block": block,
-                         "dtype": "float32", "context": ctx_desc,
-                         "seconds_per_call": t, **ms.row_fields(),
-                         "model_residual": model_residual(fact_model_s, t),
-                         "resolution": {"for_op": name, **res},
-                         **arch.bench_metrics(
-                             FACTOR_FLOP_COEFF[kind] * nf ** 3 / t / 1e9)})
+            row = {"op": name, "n": nf, "block": block,
+                   "dtype": "float32", "context": ctx_desc,
+                   "seconds_per_call": t, **ms.row_fields(),
+                   "model_residual": model_residual(fact_model_s, t),
+                   "resolution": {"for_op": name, **res},
+                   **arch.bench_metrics(
+                       FACTOR_FLOP_COEFF[kind] * nf ** 3 / t / 1e9)}
+            if name in ("lu", "cholesky"):
+                # the trailing updates route through the trsm+gemm chain;
+                # record the resolved fuse decision for the widest step
+                form = "lu" if name == "lu" else "syrk"
+                res_c = tune.resolve("trsm+gemm",
+                                     (nf - block, nf - block, block),
+                                     jnp.float32, policy=policy, form=form)
+                row["fused"] = bool(res_c.fused)
+                if res_c.chain is not None:
+                    row["modeled_hbm_bytes"] = res_c.chain.fused_hbm_bytes \
+                        if res_c.fused else res_c.chain.unfused_hbm_bytes
+                    row["hbm_bytes_saved"] = res_c.chain.hbm_bytes_saved
+            rows.append(row)
 
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:

@@ -60,7 +60,7 @@ def sweep(batches=(1, 8, 32), sizes=(32, 64, 128), blocks=(8, 16, 32, None),
                               plan_factorization(n, kind=kind).block)
                     model_s = modeled_factorization_time(
                         n, kind=kind, block=nb_eff, batch=b, dtype=dtype)
-                    rows.append({
+                    row = {
                         "kind": kind, "batch": b, "n": n,
                         "block": nb_eff,
                         "planned": block is None,
@@ -71,7 +71,22 @@ def sweep(batches=(1, 8, 32), sizes=(32, 64, 128), blocks=(8, 16, 32, None),
                         "seconds_per_call": t, **ms.row_fields(),
                         "model_residual": model_residual(model_s, t),
                         **arch.bench_metrics(flops / t / 1e9),
-                    })
+                    }
+                    if kind in ("potrf", "getrf") and n > nb_eff:
+                        # the per-item trailing updates route through the
+                        # trsm+gemm chain; record its resolved fuse verdict
+                        # and modeled HBM traffic for the widest step
+                        form = "syrk" if kind == "potrf" else "lu"
+                        res_c = tune.resolve(
+                            "trsm+gemm", (n - nb_eff, n - nb_eff, nb_eff),
+                            dtype, policy=policy, form=form)
+                        row["fused"] = bool(res_c.fused)
+                        if res_c.chain is not None:
+                            ch = res_c.chain
+                            row["modeled_hbm_bytes"] = ch.fused_hbm_bytes \
+                                if res_c.fused else ch.unfused_hbm_bytes
+                            row["hbm_bytes_saved"] = ch.hbm_bytes_saved
+                    rows.append(row)
     return rows
 
 

@@ -20,7 +20,7 @@ EXPECTED_ALL = [
     # BLAS level 2
     "gemv", "ger", "trsv",
     # BLAS level 3
-    "gemm", "syrk", "trsm",
+    "gemm", "gemm_bias_act", "syrk", "trsm",
     # LAPACK
     "cholesky", "lu", "qr", "solve", "lstsq",
     # batched LAPACK
@@ -45,8 +45,9 @@ EXPECTED_PARAMS = {
     "rot": {"x", "y", "c", "s", "dtype", "context"},
     "ger": {"alpha", "x", "y", "a", "dtype", "context"},
     "trsv": {"a", "b", "lower", "unit_diag", "dtype", "context"},
-    "cholesky": {"a", "block", "dtype", "context"},
-    "lu": {"a", "block", "dtype", "context"},
+    "gemm_bias_act": {"a", "b", "bias", "epilogue", "dtype", "context"},
+    "cholesky": {"a", "block", "dtype", "context", "fuse"},
+    "lu": {"a", "block", "dtype", "context", "fuse"},
     "qr": {"a", "block", "dtype", "context"},
     "solve": {"a", "b", "block", "dtype", "context"},
     "lstsq": {"a", "b", "block", "dtype", "context"},
@@ -131,6 +132,58 @@ EXPECTED_COUNTERS = {
     "registry.load", "registry.missing_fallback", "registry.corrupt_fallback",
     "kernel.launch", "collective.hops", "collective.bytes",
 }
+
+
+# the streaming-fusion surface (docs/fusion.md): kernel exports, the
+# registry op strings dispatch resolves, the chain planner signature, and
+# the FusedChainPlan record the benches/tests consume
+EXPECTED_FUSED_KERNELS = ["EPILOGUES", "apply_epilogue", "fused_span",
+                          "gemm_bias_act", "trsm_gemm"]
+EXPECTED_EPILOGUES = ("none", "relu", "gelu")
+EXPECTED_FUSED_OPS = ("gemm+epilogue", "trsm+gemm")
+EXPECTED_FUSED_CHAIN_PARAMS = {"kind", "m", "n", "k", "dtype_bytes", "dtype",
+                               "epilogue", "has_bias", "form", "machine"}
+EXPECTED_FUSED_CHAIN_FIELDS = {"kind", "form", "gemm", "block", "vmem_bytes",
+                               "fits_vmem", "unfused_hbm_bytes",
+                               "fused_hbm_bytes", "unfused_time",
+                               "fused_time"}
+
+
+def check_fusion(errors) -> None:
+    import dataclasses
+
+    from repro import tune
+    from repro.core import codesign as cd
+    from repro.kernels import fused as fk
+    from repro.tune import dispatch as td
+
+    for name in EXPECTED_FUSED_KERNELS:
+        if not hasattr(fk, name):
+            errors.append(f"repro.kernels.fused lost {name}")
+    if tuple(getattr(fk, "EPILOGUES", ())) != EXPECTED_EPILOGUES:
+        errors.append(f"kernels.fused.EPILOGUES drifted: "
+                      f"{getattr(fk, 'EPILOGUES', None)} "
+                      f"!= {EXPECTED_EPILOGUES}")
+    if tuple(getattr(td, "FUSED_OPS", ())) != EXPECTED_FUSED_OPS:
+        errors.append(f"dispatch.FUSED_OPS drifted: "
+                      f"{getattr(td, 'FUSED_OPS', None)} "
+                      f"!= {EXPECTED_FUSED_OPS}")
+    if not set(EXPECTED_FUSED_OPS) <= set(td.OPS):
+        errors.append("fused registry ops missing from dispatch.OPS: "
+                      f"{sorted(set(EXPECTED_FUSED_OPS) - set(td.OPS))}")
+    if tuple(getattr(cd, "FUSED_CHAIN_KINDS", ())) != EXPECTED_FUSED_OPS:
+        errors.append("codesign.FUSED_CHAIN_KINDS must match the dispatch "
+                      "registry op strings")
+    params = set(inspect.signature(cd.plan_fused_chain).parameters)
+    lost = EXPECTED_FUSED_CHAIN_PARAMS - params
+    if lost:
+        errors.append(f"plan_fused_chain: lost parameters {sorted(lost)}")
+    fields = {f.name for f in dataclasses.fields(cd.FusedChainPlan)}
+    if fields != EXPECTED_FUSED_CHAIN_FIELDS:
+        errors.append(f"FusedChainPlan fields drifted: {sorted(fields)} "
+                      f"!= {sorted(EXPECTED_FUSED_CHAIN_FIELDS)}")
+    if "tune_fused_gemm" not in tune.__all__:
+        errors.append("repro.tune.__all__ lost tune_fused_gemm")
 
 
 def check_arch(errors) -> None:
@@ -244,6 +297,7 @@ def main() -> int:
     check_arch(errors)
     check_measure(errors)
     check_obs(errors)
+    check_fusion(errors)
     got_all = list(linalg.__all__)
     if got_all != EXPECTED_ALL:
         missing = set(EXPECTED_ALL) - set(got_all)
@@ -277,11 +331,12 @@ def main() -> int:
         for e in errors:
             print(f"  - {e}")
         return 1
-    print(f"repro.linalg + repro.arch + repro.tune.measure + repro.obs API "
-          f"surface OK ({len(EXPECTED_PARAMS)} routines, "
+    print(f"repro.linalg + repro.arch + repro.tune.measure + repro.obs + "
+          f"fusion API surface OK ({len(EXPECTED_PARAMS)} routines, "
           f"{len(EXPECTED_ALL)} linalg + {len(EXPECTED_ARCH_ALL)} arch + "
           f"{len(EXPECTED_OBS_ALL)} obs exported names, "
-          f"{len(EXPECTED_TUNE_MEASURE)} measurement names)")
+          f"{len(EXPECTED_TUNE_MEASURE)} measurement names, "
+          f"{len(EXPECTED_FUSED_KERNELS)} fused-kernel names)")
     return 0
 
 

@@ -24,6 +24,14 @@ GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 GEMM_SHAPES = [(128, 128, 128), (300, 300, 300), (512, 512, 512),
                (1024, 1024, 1024), (4096, 4096, 4096), (8, 8192, 8192)]
 TRSM_SHAPES = [(64, 1), (512, 8), (2048, 32)]
+# (kind, form-or-epilogue, m, n, k); covers both fused chains, a clear
+# fusion win (256-square panel) and a deliberate VMEM-pressure case
+FUSED_CHAINS = [("gemm+epilogue", "none", 256, 256, 64),
+                ("gemm+epilogue", "relu", 256, 256, 64),
+                ("gemm+epilogue", "gelu", 512, 512, 128),
+                ("trsm+gemm", "syrk", 256, 256, 32),
+                ("trsm+gemm", "lu", 256, 256, 32),
+                ("trsm+gemm", "syrk", 2048, 2048, 64)]
 FACTOR_NS = [64, 256, 2048]
 PDGEMM_MESHES = [(1, 1), (2, 2), (4, 2)]
 DTYPE_BYTES = [2, 4, 8]
@@ -40,7 +48,8 @@ def compute():
         "VREG_BUDGET": cd.VREG_BUDGET, "ACC_OVERHEAD": cd.ACC_OVERHEAD,
         "PIPELINE_FILL_S": cd.PIPELINE_FILL_S, "MXU_CLOCK": cd.MXU_CLOCK,
         "VPU_FLOPS": cd.VPU_FLOPS,
-    }, "gemm": {}, "trsm": {}, "factorization": {}, "pdgemm": {}}
+    }, "gemm": {}, "trsm": {}, "factorization": {}, "pdgemm": {},
+        "fused": {}}
     for m, n, k in GEMM_SHAPES:
         for db in DTYPE_BYTES:
             p = cd.plan_gemm(m, n, k, dtype_bytes=db)
@@ -64,6 +73,24 @@ def compute():
                     "block": f.block, "panel_time": f.panel_time,
                     "trailing_time": f.trailing_time,
                     "gemm": [f.gemm.bm, f.gemm.bn, f.gemm.bk]}
+    for kind, variant, m, n, k in FUSED_CHAINS:
+        for db in DTYPE_BYTES:
+            if kind == "gemm+epilogue":
+                c = cd.plan_fused_chain(kind, m, n, k, dtype_bytes=db,
+                                        epilogue=variant)
+            else:
+                c = cd.plan_fused_chain(kind, m, n, k, dtype_bytes=db,
+                                        form=variant)
+            out["fused"][f"{kind}|{variant}|{m}x{n}x{k}|{db}"] = {
+                "block": c.block, "vmem_bytes": c.vmem_bytes,
+                "fits_vmem": c.fits_vmem,
+                "unfused_hbm_bytes": c.unfused_hbm_bytes,
+                "fused_hbm_bytes": c.fused_hbm_bytes,
+                "hbm_bytes_saved": c.hbm_bytes_saved,
+                "unfused_time": c.unfused_time,
+                "fused_time": c.fused_time,
+                "fused_wins": c.fused_wins,
+                "gemm": [c.gemm.bm, c.gemm.bn, c.gemm.bk]}
     for px, py in PDGEMM_MESHES:
         for db in DTYPE_BYTES:
             p = cd.plan_pdgemm(4096, 4096, 4096, px, py, dtype_bytes=db)

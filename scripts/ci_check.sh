@@ -110,6 +110,51 @@ print(f"traced bench smoke OK -> {path} ({len(tr.events)} events)")
 PY
 python scripts/trace_report.py --validate "$PERF_TMP/trace_ci.json"
 
+echo "== fused smoke (fused cholesky trace + sweep vs tuner choice) =="
+python - "$PERF_TMP" <<'PY'
+import os, sys, tempfile
+import numpy as np
+import jax.numpy as jnp
+from repro import linalg, obs, tune
+
+# a tiny blocked cholesky with fusion forced on must agree with the staged
+# chain and leave a fused span carrying positive modeled HBM savings
+rng = np.random.default_rng(0)
+g = rng.standard_normal((96, 96)).astype(np.float32)
+s = jnp.asarray(g @ g.T + 96 * np.eye(96, dtype=np.float32))
+with obs.trace("fused-smoke") as tr:
+    with linalg.use(policy="model"):
+        l_fused = linalg.cholesky(s, block=32, fuse=True)
+with linalg.use(policy="model"):
+    l_staged = linalg.cholesky(s, block=32, fuse=False)
+err = float(jnp.max(jnp.abs(l_fused - l_staged)))
+assert err < 1e-4, f"fused vs staged cholesky drifted: {err}"
+spans = tr.spans(cat="fused")
+assert spans, "no fused spans in the fused cholesky trace"
+assert any(sp.attrs.get("hbm_bytes_saved", 0) > 0 for sp in spans), \
+    "fused spans carry no positive hbm_bytes_saved"
+path = os.path.join(sys.argv[1], "trace_fused.json")
+obs.save_chrome_trace(tr, path)
+
+# the measured sweep must land in the registry, and the tuner's resolved
+# fuse/no-fuse choice must match the measured winner
+with tempfile.TemporaryDirectory() as d:
+    reg = tune.Registry(os.path.join(d, "reg.json"))
+    sw = tune.tune_fused_gemm(64, 64, 64, epilogue="relu", registry=reg,
+                              reps=1)
+    res = tune.resolve("gemm+epilogue", (64, 64, 64), jnp.float32,
+                       policy="tuned", registry=reg, epilogue="relu")
+    assert res.source == "registry", f"fused sweep missed: {res.source}"
+    want = bool(sw.best.params["fused"]) and res.chain.fits_vmem
+    assert res.fused == want, \
+        f"tuned fuse choice {res.fused} != measured winner {want}"
+print(f"fused smoke OK: {len(spans)} fused spans, sweep winner "
+      f"fused={bool(sw.best.params['fused'])} -> {path}")
+PY
+python scripts/trace_report.py "$PERF_TMP/trace_fused.json" \
+    --require-span fused --require-attr hbm_bytes_saved
+python scripts/trace_report.py --validate "$PERF_TMP/trace_fused.json"
+
 echo "== calibration smoke (fit -> register -> round-trip) =="
 python - <<'PY'
 import os, tempfile

@@ -4,6 +4,10 @@
 Usage:
     python scripts/trace_report.py TRACE.json            # text summary
     python scripts/trace_report.py TRACE.json --validate # schema gate
+    python scripts/trace_report.py TRACE.json \
+        --require-span fused --require-attr hbm_bytes_saved
+        # gate: >= 1 span whose name or cat contains "fused" AND whose
+        # attrs carry hbm_bytes_saved > 0 (the fused-smoke CI step)
 
 Reads both exporter formats (auto-detected): the Chrome ``trace_event``
 object written by ``obs.save_chrome_trace`` (also what
@@ -106,6 +110,32 @@ def validate(fmt: str, meta: Dict, events: List[Dict]) -> List[str]:
     return problems
 
 
+def _event_attrs(e: Dict) -> Dict:
+    """Attr dict regardless of format (chrome ``args`` vs jsonl ``attrs``)."""
+    return e.get("args") or e.get("attrs") or {}
+
+
+def require_span(events: List[Dict], substr: str,
+                 attr: str = None) -> List[str]:
+    """Gate: at least one event whose name or cat contains ``substr``;
+    with ``attr``, at least one such event must also carry ``attrs[attr]``
+    as a number > 0. Returns problems (empty = pass)."""
+    matched = [e for e in events
+               if substr in str(e.get("name", ""))
+               or substr in str(e.get("cat", ""))]
+    if not matched:
+        return [f"no span matching {substr!r} "
+                f"(trace has {len(events)} events)"]
+    if attr is None:
+        return []
+    for e in matched:
+        v = _event_attrs(e).get(attr)
+        if isinstance(v, (int, float)) and v > 0:
+            return []
+    return [f"{len(matched)} span(s) match {substr!r} but none carry "
+            f"attr {attr!r} > 0"]
+
+
 def summarize(meta: Dict, events: List[Dict]) -> str:
     groups: Dict = {}
     for e in events:
@@ -148,13 +178,33 @@ def main() -> int:
     ap.add_argument("trace", help="trace artifact (chrome-trace or jsonl)")
     ap.add_argument("--validate", action="store_true",
                     help="schema-gate the artifact instead of summarizing")
+    ap.add_argument("--require-span", metavar="SUBSTR",
+                    help="fail unless >= 1 span name/cat contains SUBSTR")
+    ap.add_argument("--require-attr", metavar="KEY",
+                    help="with --require-span: a matching span must carry "
+                         "attr KEY with a numeric value > 0")
     args = ap.parse_args()
+    if args.require_attr and not args.require_span:
+        ap.error("--require-attr needs --require-span")
 
     try:
         fmt, meta, events = load(args.trace)
     except (OSError, ValueError, json.JSONDecodeError) as e:
         print(f"unreadable trace {args.trace}: {e}", file=sys.stderr)
         return 1
+    if args.require_span:
+        problems = require_span(events, args.require_span, args.require_attr)
+        if problems:
+            print(f"trace {args.trace} FAILED span requirement:")
+            for p in problems:
+                print(f"  - {p}")
+            return 1
+        print(f"trace OK: {args.trace} has span matching "
+              f"{args.require_span!r}"
+              + (f" with {args.require_attr} > 0" if args.require_attr
+                 else ""))
+        if not args.validate:
+            return 0
     if args.validate:
         problems = validate(fmt, meta, events)
         if problems:

@@ -71,6 +71,39 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, c: Optional[jnp.ndarray] = None,
     return out
 
 
+def gemm_bias_act(a: jnp.ndarray, b: jnp.ndarray,
+                  bias: Optional[jnp.ndarray] = None, epilogue: str = "none",
+                  policy: Optional[str] = None,
+                  use_kernel: Optional[bool] = None, interpret: bool = True,
+                  registry=None) -> jnp.ndarray:
+    """C = act(A @ B + bias) - the fused-epilogue GEMM core.
+
+    Parameters
+    ----------
+    a, b : (m, k) and (k, n) matrices (any supported float dtype).
+    bias : length-n vector broadcast over rows, optional.
+    epilogue : one of :data:`repro.kernels.fused.EPILOGUES`
+        (``"none"`` / ``"relu"`` / ``"gelu"``).
+    policy : {"reference", "model", "tuned"}, optional
+        ``reference`` applies the epilogue to plain ``a @ b``; the kernel
+        policies resolve the ``"gemm+epilogue"`` chain through
+        :func:`repro.tune.dispatch.resolve`, which streams the epilogue
+        inside the Pallas GEMM when
+        :func:`repro.core.codesign.plan_fused_chain` says fusing wins
+        (else the staged kernel + epilogue pass).
+
+    Notes
+    -----
+    Public front-end: :func:`repro.linalg.gemm_bias_act`. Differential
+    oracle: ``tests/test_fusion.py``.
+    """
+    from repro.tune import dispatch as _tune
+    return _tune.dispatch("gemm+epilogue", a, b, bias=bias,
+                          epilogue=epilogue, policy=policy,
+                          use_kernel=use_kernel, interpret=interpret,
+                          registry=registry)
+
+
 def syrk(a: jnp.ndarray, c: Optional[jnp.ndarray] = None, alpha=1.0,
          beta=0.0, lower: bool = True, trans: bool = False,
          policy: Optional[str] = None, use_kernel: Optional[bool] = None,

@@ -519,6 +519,131 @@ def plan_trsm(n: int, nrhs: int = 1, dtype_bytes: Optional[int] = None,
     return best
 
 
+# ------------------------------- fused chains -------------------------------
+# FBLAS-style streaming composition (1907.07929): when consecutive tile
+# stages share an intermediate, keeping it resident in VMEM deletes its HBM
+# round trip. The chain plan prices both executions - staged (each stage
+# pays its own reads/writes plus a pipeline fill) vs. streamed (one fused
+# kernel, the intermediate never leaves VMEM) - so the dispatcher can pick.
+
+FUSED_CHAIN_KINDS = ("gemm+epilogue", "trsm+gemm")
+
+# extra VPU flops per output element (the bias add is priced separately);
+# only the roofline term consumes these, so coarse integers suffice
+EPILOGUE_FLOP_COST = {"none": 0, "relu": 1, "gelu": 8}
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedChainPlan:
+    """Fused vs. staged pricing of one two-stage tile chain.
+
+    ``gemm+epilogue``: C = act(A B + bias); the staged path writes A B to
+    HBM and re-reads it for the epilogue pass. ``trsm+gemm``: the blocked
+    factorizations' trailing pair X = L11^{-1} AP then C -= B X (lu form)
+    or C -= X^T X (syrk form); the staged path round-trips X through HBM.
+    """
+
+    kind: str                     # one of FUSED_CHAIN_KINDS
+    form: str                     # epilogue name | "lu" | "syrk"
+    gemm: GemmPlan                # tiling of the GEMM stage
+    block: int                    # fused-kernel row-block height
+    vmem_bytes: int               # fused kernel's resident VMEM footprint
+    fits_vmem: bool               # vmem_bytes <= the machine budget
+    unfused_hbm_bytes: int        # modeled HBM traffic, staged execution
+    fused_hbm_bytes: int          # modeled HBM traffic, streamed execution
+    unfused_time: float           # roofline seconds, staged (2 fills)
+    fused_time: float             # roofline seconds, streamed (1 fill)
+
+    @property
+    def hbm_bytes_saved(self) -> int:
+        return max(self.unfused_hbm_bytes - self.fused_hbm_bytes, 0)
+
+    @property
+    def fused_wins(self) -> bool:
+        """Fuse iff the streamed kernel fits VMEM and the model says it is
+        no slower - the streaming analogue of eq. 3's p_opt decision."""
+        return self.fits_vmem and self.fused_time <= self.unfused_time
+
+
+def _stage_time(flops: float, bytes_moved: float, mach: MachineSpec) -> float:
+    """Roofline seconds of one kernel stage (compute vs. HBM stream max)."""
+    return max(flops / mach.pe.peak_flops,
+               bytes_moved / mach.memory.hbm_bw)
+
+
+def plan_fused_chain(kind: str, m: int, n: int, k: int,
+                     dtype_bytes: Optional[int] = None, dtype=None,
+                     epilogue: str = "none", has_bias: bool = True,
+                     form: str = "lu",
+                     machine: Optional[MachineSpec] = None) -> FusedChainPlan:
+    """Price a two-stage tile chain fused vs. staged.
+
+    ``kind="gemm+epilogue"``: (m, n, k) is the GEMM problem; ``epilogue``
+    / ``has_bias`` shape the second stage. ``kind="trsm+gemm"``: the
+    trailing update C[m, n] consuming X = L11^{-1} AP with panel width k
+    (the LAPACK NB); ``form="lu"`` reads a separate B[m, k] (getrf),
+    ``form="syrk"`` reuses X as both GEMM operands (potrf, m == n).
+    The GEMM-stage tiling reuses :func:`plan_gemm`; the solve-stage time
+    reuses :func:`plan_trsm` - both at the chain's machine and dtype.
+    """
+    if kind not in FUSED_CHAIN_KINDS:
+        raise ValueError(f"unknown fused chain {kind!r}; "
+                         f"expected one of {FUSED_CHAIN_KINDS}")
+    mach = _machine(machine)
+    db = resolve_dtype_bytes(dtype, dtype_bytes, mach)
+    fill = mach.memory.pipeline_fill_s
+    budget = mach.memory.vmem_bytes
+    m, n, k = max(int(m), 1), max(int(n), 1), max(int(k), 1)
+    g = plan_gemm(m, n, k, dtype_bytes=db, machine=mach)
+    if kind == "gemm+epilogue":
+        if epilogue not in EPILOGUE_FLOP_COST:
+            raise ValueError(f"unknown epilogue {epilogue!r}; expected one "
+                             f"of {tuple(EPILOGUE_FLOP_COST)}")
+        bias_bytes = n * db if has_bias else 0
+        gemm_bytes = (m * k + k * n + m * n) * db
+        epi_flops = (EPILOGUE_FLOP_COST[epilogue]
+                     + (1 if has_bias else 0)) * m * n
+        epi_bytes = 2 * m * n * db + bias_bytes    # re-read + re-write C
+        unfused_b = gemm_bytes + epi_bytes
+        fused_b = gemm_bytes + bias_bytes          # C written exactly once
+        unfused_t = _stage_time(2.0 * m * n * k, gemm_bytes, mach) \
+            + _stage_time(epi_flops, epi_bytes, mach) + 2 * fill
+        fused_t = _stage_time(2.0 * m * n * k + epi_flops, fused_b, mach) \
+            + fill
+        # the epilogue streams one bias block alongside the GEMM's blocks
+        vmem = g.vmem_bytes + g.bn * db
+        return FusedChainPlan(kind, epilogue, g, g.bm, int(vmem),
+                              vmem <= budget, int(unfused_b), int(fused_b),
+                              unfused_t, fused_t)
+    # trsm+gemm
+    if form not in ("lu", "syrk"):
+        raise ValueError(f"unknown trsm+gemm form {form!r}; "
+                         f"expected 'lu' or 'syrk'")
+    t = plan_trsm(k, n, dtype_bytes=db, machine=mach)
+    x_bytes = k * n * db
+    solve_bytes = k * k * db + k * n * db + x_bytes   # L11 + AP in, X out
+    b_bytes = 0 if form == "syrk" else m * k * db
+    x_reread = 2 * x_bytes if form == "syrk" else x_bytes
+    gemm_flops = 2.0 * m * n * k
+    unfused_gemm_b = x_reread + b_bytes + 2 * m * n * db
+    fused_gemm_b = b_bytes + 2 * m * n * db           # X stays in VMEM
+    solve_t = t.modeled_time
+    unfused_t = solve_t + _stage_time(gemm_flops, unfused_gemm_b, mach) \
+        + 2 * fill
+    fused_t = solve_t + _stage_time(gemm_flops, fused_gemm_b, mach) + fill
+    # fused-kernel residency: L11 + AP + X (operand and accumulator-width
+    # copies, full n width - the solve cannot be column-tiled) plus one
+    # C/O row block (and the B row block for the lu form)
+    bm = min(g.bm, _round_up(m, max(mach.pe.sublane, 1)))
+    acc = _acc_bytes(db)
+    vmem = (k * k + k * n) * db + k * n * acc + k * n * db \
+        + bm * n * (db + acc) + (bm * k * db if form == "lu" else 0)
+    return FusedChainPlan(kind, form, g, bm, int(vmem), vmem <= budget,
+                          int(solve_bytes + unfused_gemm_b),
+                          int(solve_bytes + fused_gemm_b),
+                          unfused_t, fused_t)
+
+
 @dataclasses.dataclass(frozen=True)
 class AttentionPlan:
     """Flash-attention tiling: KV blocks stream through VMEM; the online

@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
 gemm (MXU DOT4 generalization), dotp (codesigned level-1 reduce),
-flash_attention (streaming softmax), ssd_scan (Mamba-2 chunked scan).
+flash_attention (streaming softmax), ssd_scan (Mamba-2 chunked scan),
+fused (FBLAS-style streaming stage chains: gemm_bias_act, trsm_gemm).
 Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatching API.
 """
-from repro.kernels import ops, ref
+from repro.kernels import fused, ops, ref

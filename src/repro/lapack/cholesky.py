@@ -18,7 +18,6 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import obs as _obs
-from repro.blas.level3 import gemm, trsm
 
 
 def default_block(n: int, kind: str, dtype=None) -> int:
@@ -68,7 +67,8 @@ def potrf_unblocked(a: jnp.ndarray) -> jnp.ndarray:
 
 def potrf(a: jnp.ndarray, block: Optional[int] = None,
           policy: Optional[str] = None, use_kernel: Optional[bool] = None,
-          interpret: bool = True, registry=None) -> jnp.ndarray:
+          interpret: bool = True, registry=None,
+          fuse: Optional[bool] = None) -> jnp.ndarray:
     """Blocked right-looking POTRF: panel = hazards, trailing = GEMM.
 
     Parameters
@@ -85,6 +85,12 @@ def potrf(a: jnp.ndarray, block: Optional[int] = None,
         deprecated alias (True == "model").
     registry : tuned-config registry forwarded to every trailing update
         (``None`` = the process default).
+    fuse : stream each trailing TRSM->SYRK pair through the fused
+        ``trsm+gemm`` kernel (:mod:`repro.kernels.fused`)? ``None``
+        (default) defers to :func:`repro.core.codesign.plan_fused_chain`
+        under the kernel policies; ``False`` forces the staged path
+        (bitwise the historical trailing update), ``True`` forces fusion
+        whenever the policy reaches the kernel at all.
 
     Returns
     -------
@@ -94,8 +100,10 @@ def potrf(a: jnp.ndarray, block: Optional[int] = None,
     -----
     Oracle: ``tests/test_lapack.py`` (round-trip vs
     ``np.linalg.cholesky``); kernel-path agreement in
-    ``tests/test_lapack_batched.py`` and ``tests/test_tune.py``.
+    ``tests/test_lapack_batched.py`` and ``tests/test_tune.py``;
+    fused-vs-staged agreement in ``tests/test_fusion.py``.
     """
+    from repro.tune import dispatch as _tune
     from repro.tune.policy import resolve_policy
     pol = resolve_policy(policy, use_kernel)
     n = a.shape[0]
@@ -114,13 +122,15 @@ def potrf(a: jnp.ndarray, block: Optional[int] = None,
             with _obs.span("potrf.trailing", cat="trailing", j0=j0, nb=nb,
                            flops=nb * nb * r + 2 * r * r * nb):
                 l11 = a[j0:j0 + nb, j0:j0 + nb]
-                # L21 = A21 L11^{-T}
-                l21 = trsm(l11, a[j0 + nb:, j0:j0 + nb].T, lower=True,
-                           unit_diag=False, left=True, policy=pol,
-                           interpret=interpret, registry=registry).T
-                a = a.at[j0 + nb:, j0:j0 + nb].set(l21)
-                # trailing SYRK: A22 -= L21 L21^T (the GEMM hot path)
-                a = a.at[j0 + nb:, j0 + nb:].add(
-                    -gemm(l21, l21, transb=True, policy=pol,
-                          interpret=interpret, registry=registry))
+                # X = L11^{-1} A21^T then A22 -= X^T X (L21 = X^T): the
+                # trsm+gemm chain keeps X resident in VMEM when its plan
+                # says streaming wins; otherwise it runs the staged
+                # TRSM + SYRK-shaped GEMM exactly as before
+                x, c_out = _tune.dispatch(
+                    "trsm+gemm", l11, a[j0 + nb:, j0:j0 + nb].T, None,
+                    a[j0 + nb:, j0 + nb:], form="syrk", unit_diag=False,
+                    fuse=fuse, policy=pol, interpret=interpret,
+                    registry=registry)
+                a = a.at[j0 + nb:, j0:j0 + nb].set(x.T)
+                a = a.at[j0 + nb:, j0 + nb:].set(c_out)
     return jnp.tril(a)

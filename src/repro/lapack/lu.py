@@ -12,7 +12,6 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro import obs as _obs
-from repro.blas.level3 import gemm, trsm
 from repro.lapack.cholesky import default_block
 
 
@@ -59,8 +58,8 @@ def getrf_unblocked(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 def getrf(a: jnp.ndarray, block: Optional[int] = None,
           policy: Optional[str] = None, use_kernel: Optional[bool] = None,
-          interpret: bool = True,
-          registry=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+          interpret: bool = True, registry=None,
+          fuse: Optional[bool] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Blocked right-looking LU with partial pivoting (LAPACK DGETRF).
 
     Parameters
@@ -75,6 +74,12 @@ def getrf(a: jnp.ndarray, block: Optional[int] = None,
         :mod:`repro.blas.level3`, resolved by :mod:`repro.tune.dispatch`:
         ``"model"`` (deprecated ``use_kernel=True``) reaches the Pallas
         MXU kernel, ``"tuned"`` the registry config.
+    fuse : stream each trailing TRSM->GEMM pair through the fused
+        ``trsm+gemm`` kernel? ``None`` defers to
+        :func:`repro.core.codesign.plan_fused_chain` under the kernel
+        policies; ``False`` forces the staged path (bitwise the
+        historical trailing update), ``True`` forces fusion whenever the
+        policy reaches the kernel at all.
 
     Returns
     -------
@@ -87,8 +92,10 @@ def getrf(a: jnp.ndarray, block: Optional[int] = None,
     Oracle: ``tests/test_lapack.py`` and
     ``tests/test_lapack_batched.py`` (reconstruction round-trip,
     non-square and ill-conditioned cases); per-policy agreement in
-    ``tests/test_tune.py``.
+    ``tests/test_tune.py``; fused-vs-staged agreement in
+    ``tests/test_fusion.py``.
     """
+    from repro.tune import dispatch as _tune
     from repro.tune.policy import resolve_policy
     pol = resolve_policy(policy, use_kernel)
     n, nc = a.shape
@@ -130,15 +137,18 @@ def getrf(a: jnp.ndarray, block: Optional[int] = None,
             mr, ncr = n - j0 - nb, nc - j0 - nb     # trailing block dims
             with _obs.span("getrf.trailing", cat="trailing", j0=j0, nb=nb,
                            flops=nb * nb * ncr + 2 * mr * ncr * nb):
-                # U12 = L11^{-1} A12 ; A22 -= L21 U12  (trsm + GEMM)
+                # U12 = L11^{-1} A12 ; A22 -= L21 U12: the trsm+gemm
+                # chain streams U12 through VMEM when its plan says
+                # fusing wins; otherwise the staged TRSM + GEMM pair runs
+                # exactly as before
                 l11 = a[j0:j0 + nb, j0:j0 + nb]
-                u12 = trsm(l11, a[j0:j0 + nb, j0 + nb:], lower=True,
-                           unit_diag=True, left=True, policy=pol,
-                           interpret=interpret, registry=registry)
+                u12, c_out = _tune.dispatch(
+                    "trsm+gemm", l11, a[j0:j0 + nb, j0 + nb:],
+                    a[j0 + nb:, j0:j0 + nb], a[j0 + nb:, j0 + nb:],
+                    form="lu", unit_diag=True, fuse=fuse, policy=pol,
+                    interpret=interpret, registry=registry)
                 a = a.at[j0:j0 + nb, j0 + nb:].set(u12)
-                a = a.at[j0 + nb:, j0 + nb:].add(
-                    -gemm(a[j0 + nb:, j0:j0 + nb], u12, policy=pol,
-                          interpret=interpret, registry=registry))
+                a = a.at[j0 + nb:, j0 + nb:].set(c_out)
     return a, jnp.concatenate(pivs)
 
 

@@ -36,8 +36,9 @@ deprecation shims that forward here (see ``docs/migration.md``).
 from repro.lapack.batched import FactorizationResult
 from repro.linalg.context import (UNSET, ExecutionContext, get_context,
                                   reset_context, set_context, use)
-from repro.linalg.blas import (asum, axpy, dot, gemm, gemv, ger, iamax,
-                               nrm2, rot, scal, syrk, trsm, trsv)
+from repro.linalg.blas import (asum, axpy, dot, gemm, gemm_bias_act, gemv,
+                               ger, iamax, nrm2, rot, scal, syrk, trsm,
+                               trsv)
 from repro.linalg.lapack import (batched_cholesky, batched_lu, batched_qr,
                                  batched_solve, cholesky, lstsq, lu, qr,
                                  solve)
@@ -50,7 +51,7 @@ __all__ = [
     # BLAS level 2
     "gemv", "ger", "trsv",
     # BLAS level 3
-    "gemm", "syrk", "trsm",
+    "gemm", "gemm_bias_act", "syrk", "trsm",
     # LAPACK
     "cholesky", "lu", "qr", "solve", "lstsq",
     # batched LAPACK

@@ -134,6 +134,17 @@ def _gemm_info(a, b, c=None, alpha=1.0, beta=0.0, transa=False, transb=False,
             "bytes": _nbytes(a, b, c) + batch * m * n * out_itemsize}
 
 
+def _gemm_bias_act_info(a, b, bias=None, epilogue="none", **kw):
+    sa, sb = _shape(a), _shape(b)
+    batch = sa[0] if len(sa) == 3 else 1
+    m, k, n = sa[-2], sa[-1], sb[-1]
+    out_itemsize = jnp.dtype(jnp.result_type(a, b)).itemsize
+    return {"shape": ([m, n, k] if batch == 1 else [batch, m, n, k]),
+            "dtype": _dtype_name(a, b), "epilogue": epilogue,
+            "flops": 2 * batch * m * n * k + batch * m * n,
+            "bytes": _nbytes(a, b, bias) + batch * m * n * out_itemsize}
+
+
 def _syrk_info(a, c=None, alpha=1.0, beta=0.0, lower=True, trans=False, **kw):
     sa = _shape(a)
     batch = sa[0] if len(sa) == 3 else 1
@@ -259,6 +270,30 @@ def gemm(a, b, c=None, alpha=1.0, beta=0.0, transa: bool = False,
         return _cast(out, store)
     out = _l3.gemm(a_, b_, c=c_, alpha=alpha, beta=beta, transa=transa,
                    transb=transb, **_kw(ctx))
+    return _cast(out, store)
+
+
+@_routine("gemm_bias_act", _gemm_bias_act_info)
+def gemm_bias_act(a, b, bias=None, epilogue: str = "none", dtype=None,
+                  context=None) -> jnp.ndarray:
+    """C = act(A B + bias): GEMM with a streamed bias/activation epilogue.
+
+    Under the kernel policies the whole chain resolves as the
+    ``"gemm+epilogue"`` op: one fused Pallas launch when
+    :func:`repro.core.codesign.plan_fused_chain` says streaming wins,
+    else the staged kernel + epilogue pass. Always local (no mesh
+    backend); 3-D operands vmap the local path with a shared ``bias``.
+    Oracle: ``tests/test_fusion.py``.
+    """
+    ctx = current(context)
+    store, comp = _dtypes(ctx, dtype, a, b, bias)
+    a_, b_, bias_ = _cast(a, comp), _cast(b, comp), _cast(bias, comp)
+    kw = _kw(ctx)
+    if a_.ndim == 3:
+        f = lambda x, y: _l3.gemm_bias_act(x, y, bias=bias_,
+                                           epilogue=epilogue, **kw)
+        return _cast(jax.vmap(f)(a_, b_), store)
+    out = _l3.gemm_bias_act(a_, b_, bias=bias_, epilogue=epilogue, **kw)
     return _cast(out, store)
 
 

@@ -106,12 +106,16 @@ def _cast_result(res: FactorizationResult, store) -> FactorizationResult:
 
 @_routine("cholesky", _factor_info(lambda m, n: _potrf_flops(n)))
 def cholesky(a, block: Optional[int] = None, dtype=None,
-             context=None) -> jnp.ndarray:
+             context=None, fuse: Optional[bool] = None) -> jnp.ndarray:
     """Lower-triangular Cholesky factor of an SPD matrix (or batch).
 
     2-D input returns L with A = L L^T; 3-D input returns the (B, n, n)
-    factor batch (via :func:`batched_cholesky`, mesh-routed). Non-SPD
-    input produces NaNs, LAPACK-style. Oracle: ``tests/test_linalg.py``.
+    factor batch (via :func:`batched_cholesky`, mesh-routed; ``fuse``
+    applies to the 2-D driver only). ``fuse`` controls the fused
+    trsm+gemm trailing chain: ``None`` defers to the chain plan under the
+    kernel policies, ``False`` forces the staged path, ``True`` forces
+    fusion. Non-SPD input produces NaNs, LAPACK-style. Oracle:
+    ``tests/test_linalg.py``; fused-vs-staged: ``tests/test_fusion.py``.
     """
     ctx = current(context)
     store, comp = _dtypes(ctx, dtype, a)
@@ -119,17 +123,20 @@ def cholesky(a, block: Optional[int] = None, dtype=None,
     if a_.ndim == 3:
         return _cast(batched_cholesky(a_, block=block, context=ctx).factors,
                      store)
-    out = _chol.potrf(a_, block=block, **_kw(ctx))
+    out = _chol.potrf(a_, block=block, fuse=fuse, **_kw(ctx))
     return _cast(out, store)
 
 
 @_routine("lu", _factor_info(_getrf_flops))
 def lu(a, block: Optional[int] = None, dtype=None,
-       context=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+       context=None,
+       fuse: Optional[bool] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """LU with partial pivoting: (packed L\\U, int32 ipiv).
 
     3-D input factorizes the batch (mesh-routed) and returns
-    ((B, m, n) packed, (B, k) ipiv).
+    ((B, m, n) packed, (B, k) ipiv); ``fuse`` applies to the 2-D driver
+    only and controls the fused trsm+gemm trailing chain (``None`` =
+    defer to the chain plan, ``False`` = staged, ``True`` = force).
     """
     ctx = current(context)
     store, comp = _dtypes(ctx, dtype, a)
@@ -137,7 +144,7 @@ def lu(a, block: Optional[int] = None, dtype=None,
     if a_.ndim == 3:
         res = batched_lu(a_, block=block, context=ctx)
         return _cast(res.factors, store), res.pivots
-    packed, piv = _lu.getrf(a_, block=block, **_kw(ctx))
+    packed, piv = _lu.getrf(a_, block=block, fuse=fuse, **_kw(ctx))
     return _cast(packed, store), piv
 
 

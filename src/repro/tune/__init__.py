@@ -81,14 +81,14 @@ from repro.tune.measure import measure as measure_op  # noqa: F401 (alias:
 # tune.measure.measure / tune.measure_op)
 from repro.tune.policy import POLICIES, default_policy, resolve_policy
 from repro.tune.registry import KernelConfig, Registry, default_registry
-from repro.tune.search import (seed_registry_from_model, tune_gemm,
-                               tune_trsm)
+from repro.tune.search import (seed_registry_from_model, tune_fused_gemm,
+                               tune_gemm, tune_trsm)
 
 __all__ = [
     "POLICIES", "KernelConfig", "Measurement", "Registry", "Resolution",
     "default_policy", "default_registry", "dispatch", "dispatch_op",
     "measure", "measure_op", "measure_wall_time", "model_residual",
     "policy", "registry", "repetition_controller", "resolve",
-    "resolve_policy", "search", "seed_registry_from_model", "tune_gemm",
-    "tune_trsm",
+    "resolve_policy", "search", "seed_registry_from_model",
+    "tune_fused_gemm", "tune_gemm", "tune_trsm",
 ]

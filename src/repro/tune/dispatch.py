@@ -28,14 +28,17 @@ import jax.numpy as jnp
 from repro import arch as _arch
 from repro import obs as _obs
 from repro.arch import MachineSpec
-from repro.core.codesign import (GemmPlan, plan_from_blocks, plan_gemm,
-                                 plan_pdgemm, plan_trsm)
+from repro.core.codesign import (FusedChainPlan, GemmPlan, plan_from_blocks,
+                                 plan_fused_chain, plan_gemm, plan_pdgemm,
+                                 plan_trsm)
 from repro.obs import counters as _counters
 from repro.tune.policy import resolve_policy, uses_kernel
 from repro.tune.registry import Registry, default_registry
 
 
-OPS = ("gemm", "gemv", "trsm", "syrk", "pdgemm")
+OPS = ("gemm", "gemv", "trsm", "syrk", "pdgemm", "gemm+epilogue",
+       "trsm+gemm")
+FUSED_OPS = ("gemm+epilogue", "trsm+gemm")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +54,8 @@ class Resolution:
     block: Optional[int] = None   # trsm diagonal width
     mesh: Optional[str] = None    # registry mesh component (pdgemm)
     machine: Optional[str] = None   # machine the call resolved under
+    fused: bool = False           # run the streaming fused kernel?
+    chain: Optional[FusedChainPlan] = None   # fused-vs-staged pricing
 
     def describe(self) -> dict:
         """JSON-able summary - benchmarks attach this to every record so
@@ -64,6 +69,10 @@ class Resolution:
             d.setdefault("config", {})["block"] = self.block
         if self.mesh is not None:
             d["mesh"] = self.mesh
+        if self.op in FUSED_OPS:
+            d["fused"] = self.fused
+            if self.chain is not None:
+                d["hbm_bytes_saved"] = self.chain.hbm_bytes_saved
         return d
 
 
@@ -86,7 +95,9 @@ def resolve(op: str, shape: Tuple[int, ...], dtype,
             registry: Optional[Registry] = None,
             backend: Optional[str] = None,
             mesh: Optional[Tuple[int, int]] = None,
-            machine: Optional[MachineSpec] = None) -> Resolution:
+            machine: Optional[MachineSpec] = None,
+            epilogue: str = "none", form: str = "lu",
+            has_bias: bool = True) -> Resolution:
     """Resolve one call's config. shape is (m, n, k) for gemm/syrk/pdgemm
     (pdgemm: the *global* problem), (m, n) for gemv, (n, nrhs) for trsm.
     ``mesh`` is the (px, py) device mesh for pdgemm; its registry entries
@@ -95,6 +106,15 @@ def resolve(op: str, shape: Tuple[int, ...], dtype,
     suffixes the registry key; ``None`` resolves the ambient
     :func:`repro.arch.current_machine` - which is what
     ``repro.linalg.use(machine=...)`` scopes for its routines.
+
+    The fused chain ops take shape (m, n, k): ``"gemm+epilogue"`` is the
+    GEMM problem (``epilogue``/``has_bias`` price the second stage),
+    ``"trsm+gemm"`` the trailing update C[m, n] fed by a width-k panel
+    solve (``form`` = "lu" | "syrk"). Their ``fused`` flag comes from
+    :func:`repro.core.codesign.plan_fused_chain` under the kernel
+    policies (a tuned registry hit stores the measured winner, still
+    vetoed when the streamed kernel no longer fits the ambient machine's
+    VMEM).
     """
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
@@ -144,6 +164,24 @@ def resolve(op: str, shape: Tuple[int, ...], dtype,
             local = pplan.local
         return _observed(Resolution(op, pol, source, True, gemm_plan=local,
                           mesh=mesh_str, machine=mach.name))
+    if op in FUSED_OPS:
+        m, n, k = shape
+        chain = plan_fused_chain(op, m, n, k, dtype_bytes=dtype.itemsize,
+                                 epilogue=epilogue, form=form,
+                                 has_bias=has_bias, machine=mach)
+        if cfg is not None:
+            plan = plan_from_blocks(m, n, k, cfg.params["bm"],
+                                    cfg.params["bn"], cfg.params["bk"],
+                                    dtype_bytes=dtype.itemsize, machine=mach)
+            # the registry stores the *measured* winner; the ambient
+            # machine's VMEM budget still vetoes it
+            fused = bool(cfg.params.get("fused", 1)) and chain.fits_vmem
+        else:
+            plan = chain.gemm
+            fused = chain.fused_wins
+        return _observed(Resolution(op, pol, source, True, gemm_plan=plan,
+                          block=chain.block, machine=mach.name, fused=fused,
+                          chain=chain))
     if op in ("gemm", "syrk"):
         m, n, k = shape
         if cfg is not None:
@@ -175,7 +213,9 @@ def resolve(op: str, shape: Tuple[int, ...], dtype,
 
 
 def _gemm_exec(a, b, res: Resolution, interpret: bool):
-    if not res.use_pallas:
+    if not res.use_pallas or 0 in a.shape or 0 in b.shape:
+        # degenerate operands (e.g. a wide-LU trailing block with no rows
+        # left) cannot tile a Pallas grid; plain jnp handles empties
         return a @ b
     _counters.inc("kernel.launch")
     from repro.kernels import ops                   # lazy: kernels optional
@@ -196,6 +236,14 @@ def dispatch(op: str, *args, policy: Optional[str] = None,
     dispatch("syrk", a, trans=False)   -> a a^T / a^T a (by policy)
     dispatch("gemv", a, x, trans=...)  -> op(a) x (by policy)
     dispatch("trsm", a, b, lower=..., unit_diag=..., left=..., block=...)
+    dispatch("gemm+epilogue", a, b, bias=..., epilogue=...)
+                                       -> act(a @ b + bias); streamed in one
+                                          fused kernel when the chain plan
+                                          says fusing wins
+    dispatch("trsm+gemm", l11, ap, bl, c, form=..., unit_diag=..., fuse=...)
+                                       -> (x, c - bl x) / (x, c - x^T x);
+                                          fuse=None defers to the chain
+                                          plan, True/False forces
 
     alpha/beta epilogues stay in :mod:`repro.blas`; this layer only
     resolves and runs the kernel-shaped core of each op. An explicit
@@ -239,4 +287,65 @@ def dispatch(op: str, *args, policy: Optional[str] = None,
         return distributed.pdgemm(a, b, policy=policy, use_kernel=use_kernel,
                                   interpret=interpret, registry=registry,
                                   **kw)
+    if op == "gemm+epilogue":
+        a, b = args
+        bias = kw.pop("bias", None)
+        epilogue = kw.pop("epilogue", "none")
+        res = resolve("gemm+epilogue", (a.shape[0], b.shape[1], a.shape[1]),
+                      a.dtype, policy, use_kernel, registry,
+                      epilogue=epilogue, has_bias=bias is not None)
+        from repro.kernels import fused as _fk      # lazy: kernels optional
+        if not res.use_pallas:
+            return _fk.apply_epilogue(a @ b, epilogue, bias)
+        _counters.inc("kernel.launch")
+        if res.fused:
+            with _fk.fused_span("gemm_bias_act", res.chain,
+                                epilogue=epilogue,
+                                flops=2 * a.shape[0] * b.shape[1]
+                                * a.shape[1],
+                                bytes=res.chain.fused_hbm_bytes):
+                return _fk.gemm_bias_act(a, b, bias=bias, epilogue=epilogue,
+                                         plan=res.gemm_plan,
+                                         interpret=interpret)
+        # staged: the dispatcher GEMM kernel, then the epilogue as a
+        # second pass over the HBM-resident product
+        from repro.kernels import ops
+        out = ops.gemm(a, b, plan=res.gemm_plan, use_pallas=True,
+                       interpret=interpret)
+        return _fk.apply_epilogue(out, epilogue, bias)
+    if op == "trsm+gemm":
+        l11, a_panel, b_left, c = args
+        form = kw.pop("form", "lu")
+        unit_diag = kw.pop("unit_diag", False)
+        fuse = kw.pop("fuse", None)
+        res = resolve("trsm+gemm", (c.shape[0], c.shape[1], l11.shape[0]),
+                      c.dtype, policy, use_kernel, registry, form=form)
+        do_fuse = res.fused if fuse is None \
+            else (bool(fuse) and res.use_pallas)
+        if c.shape[0] == 0:
+            # degenerate wide-LU trailing block (columns remain, rows do
+            # not): the staged chain handles the empty GEMM
+            do_fuse = False
+        if do_fuse:
+            from repro.kernels import fused as _fk
+            _counters.inc("kernel.launch")
+            m, n, nb = c.shape[0], c.shape[1], l11.shape[0]
+            with _fk.fused_span("trsm_gemm", res.chain, form=form,
+                                flops=nb * nb * n + 2 * m * n * nb,
+                                bytes=res.chain.fused_hbm_bytes):
+                return _fk.trsm_gemm(l11, a_panel, b_left, c, form=form,
+                                     unit_diag=unit_diag,
+                                     row_block=res.block,
+                                     interpret=interpret)
+        # staged dispatcher chain: TRSM then GEMM, X round-tripping HBM -
+        # operation-for-operation the blocked drivers' historical trailing
+        # update, so fuse=False keeps their numerics bitwise
+        from repro.blas import level3               # lazy: avoid import cycle
+        x = level3.trsm(l11, a_panel, lower=True, unit_diag=unit_diag,
+                        left=True, policy=res.policy, interpret=interpret,
+                        registry=registry)
+        bl = x.T if form == "syrk" else b_left
+        upd = dispatch("gemm", bl, x, policy=res.policy, interpret=interpret,
+                       registry=registry)
+        return x, c - upd
     raise ValueError(f"unknown op {op!r}; expected one of {OPS}")

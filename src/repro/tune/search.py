@@ -28,8 +28,8 @@ import numpy as np
 from repro import arch as _arch
 from repro.arch import MachineSpec
 from repro.core import pipeline_model
-from repro.core.codesign import (GemmPlan, plan_from_blocks, plan_gemm,
-                                 plan_trsm)
+from repro.core.codesign import (GemmPlan, plan_from_blocks, plan_fused_chain,
+                                 plan_gemm, plan_trsm)
 from repro.tune import measure as _measure
 from repro.tune.registry import KernelConfig, Registry, default_registry
 
@@ -171,6 +171,71 @@ def tune_gemm(m: int, n: int, k: int, dtype=jnp.float32,
                        tuple(measured), cfg,
                        {"bm": model_pick.bm, "bn": model_pick.bn,
                         "bk": model_pick.bk})
+
+
+def tune_fused_gemm(m: int, n: int, k: int, epilogue: str = "relu",
+                    dtype=jnp.float32, has_bias: bool = True,
+                    registry: Optional[Registry] = None, reps: int = 2,
+                    interpret: Optional[bool] = None, seed: int = 0,
+                    machine: Optional[MachineSpec] = None) -> SweepResult:
+    """Measure the fused GEMM+epilogue kernel against the staged chain
+    (Pallas GEMM, then the epilogue as a separate jnp pass) at the chain
+    plan's tiling, and record the measured winner under ``gemm+epilogue``.
+
+    The registry entry carries the tiling plus a ``fused`` flag (0/1):
+    dispatch honors the flag when resolving ``policy="tuned"``, so the
+    sweep decides *whether* to fuse on this machine, not just how to
+    tile. The chain model's ``fused_wins`` verdict is reported alongside
+    as ``model_params`` for the trajectory record.
+    """
+    from repro.kernels import fused as _fk          # lazy: kernels optional
+    from repro.kernels import ops                   # lazy: kernels optional
+    mach = _mach(machine)
+    reg = registry if registry is not None else default_registry()
+    backend = jax.default_backend()
+    interp = (backend != "tpu") if interpret is None else interpret
+    dtype = jnp.dtype(dtype)
+    chain = plan_fused_chain("gemm+epilogue", m, n, k,
+                             dtype_bytes=dtype.itemsize, epilogue=epilogue,
+                             has_bias=has_bias, machine=mach)
+    plan = chain.gemm
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)).astype(dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32)).astype(dtype)
+    bias = (jnp.asarray(rng.normal(size=(n,)).astype(np.float32)).astype(dtype)
+            if has_bias else None)
+
+    def staged(x, y, bb):
+        c = ops.gemm(x, y, plan=plan, use_pallas=True, interpret=interp)
+        return _fk.apply_epilogue(c, epilogue, bb)
+
+    def fused_fn(x, y, bb):
+        return _fk.gemm_bias_act(x, y, bias=bb, epilogue=epilogue,
+                                 plan=plan, interpret=interp)
+
+    measured = []
+    best_i, best_t = 0, None
+    for i, (name, fn) in enumerate((("staged", staged), ("fused", fused_fn))):
+        f = jax.jit(fn)
+        ms = _measure.measure(f, a, b, bias, min_reps=reps, max_reps=2 * reps)
+        t = ms.seconds_median
+        measured.append({"variant": name, "fused": int(name == "fused"),
+                         "bm": plan.bm, "bn": plan.bn, "bk": plan.bk,
+                         "seconds": t, **ms.row_fields(),
+                         "model_s": (chain.fused_time if name == "fused"
+                                     else chain.unfused_time)})
+        if best_t is None or t < best_t:
+            best_i, best_t = i, t
+    fused_won = int(measured[best_i]["fused"])
+    cfg = reg.record("gemm+epilogue", (m, n, k), dtype, backend,
+                     {"bm": plan.bm, "bn": plan.bn, "bk": plan.bk,
+                      "fused": fused_won},
+                     source="sweep", measured_s=best_t,
+                     machine=_mach_key(mach))
+    return SweepResult("gemm+epilogue", (m, n, k), dtype.name, backend,
+                       tuple(measured), cfg,
+                       {"bm": plan.bm, "bn": plan.bn, "bk": plan.bk,
+                        "fused": int(chain.fused_wins)})
 
 
 def seed_registry_from_model(registry: Optional[Registry] = None,

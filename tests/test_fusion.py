@@ -1,0 +1,377 @@
+"""Fused-vs-unfused differential harness for the streaming Pallas chains.
+
+The fused kernels (``repro.kernels.fused``: GEMM+epilogue, TRSM->GEMM)
+must agree with the staged reference chain across the full
+shape x dtype x epilogue x policy grid; the float64 leg needs
+``JAX_ENABLE_X64`` (a process-level switch) and runs in one subprocess,
+pattern of ``tests/test_linalg.py``. The chain planner properties
+(VMEM-budget respect, fused bytes never exceeding the unfused chain) run
+across every registered machine. See ``docs/fusion.md``.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import LINALG_DTYPES as DTYPES
+from conftest import dtype_tolerances
+from repro import arch, linalg, obs, tune
+from repro.core import codesign as cd
+from repro.kernels import fused as fk
+from repro.tune import dispatch as td
+
+POLICIES = ("reference", "model", "tuned")
+MACHINES = ("tpu-like", "paper-pe", "cpu-host")
+# (m, n, k): aligned, ragged-every-axis, and k spanning multiple blocks
+CHAIN_SHAPES = [(16, 16, 16), (48, 56, 24), (130, 64, 40)]
+
+
+def _mk(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32)).astype(dtype)
+
+
+def _close(got, want, scale=1.0, msg=""):
+    rtol, atol = dtype_tolerances(np.asarray(got).dtype, scale)
+    np.testing.assert_allclose(np.asarray(got).astype(np.float64),
+                               np.asarray(want).astype(np.float64),
+                               rtol=rtol, atol=atol, err_msg=msg)
+
+
+# ------------------------- GEMM+epilogue kernel -----------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("epilogue", fk.EPILOGUES)
+def test_gemm_bias_act_grid(rng, dtype, epilogue):
+    """Fused kernel == staged reference chain over shapes x bias x policy.
+
+    The reference policy *is* the unfused chain (plain jnp then
+    apply_epilogue), so comparing policies against it is the fused-vs-
+    unfused differential, with the shared epilogue definition ruling out
+    two-copies-of-the-same-bug.
+    """
+    for m, n, k in CHAIN_SHAPES:
+        a, b = _mk(rng, (m, k), dtype), _mk(rng, (k, n), dtype)
+        for bias in (None, _mk(rng, (n,), dtype)):
+            want = fk.apply_epilogue(
+                jnp.asarray(np.asarray(a, np.float64)
+                            @ np.asarray(b, np.float64), jnp.float32),
+                epilogue, None if bias is None else bias.astype(jnp.float32))
+            for pol in POLICIES:
+                with linalg.use(policy=pol):
+                    got = linalg.gemm_bias_act(a, b, bias=bias,
+                                               epilogue=epilogue)
+                assert got.dtype == jnp.dtype(dtype)
+                _close(got, want, scale=8.0,
+                       msg=f"{m}x{n}x{k} {epilogue} bias={bias is not None} "
+                           f"policy={pol}")
+
+
+def test_gemm_bias_act_direct_kernel(rng):
+    """The kernel entry point itself (no dispatch) on a ragged shape."""
+    a, b = _mk(rng, (70, 33), np.float32), _mk(rng, (33, 129), np.float32)
+    bias = _mk(rng, (129,), np.float32)
+    got = fk.gemm_bias_act(a, b, bias=bias, epilogue="gelu")
+    want = fk.apply_epilogue(a @ b, "gelu", bias)
+    _close(got, want, scale=4.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(4, 40), n=st.integers(4, 40), k=st.integers(4, 40),
+       epilogue=st.sampled_from(fk.EPILOGUES), has_bias=st.booleans(),
+       seed=st.integers(0, 2 ** 16))
+def test_epilogue_composition_commutes(m, n, k, epilogue, has_bias, seed):
+    """Property: fusing the epilogue into the GEMM commutes with applying
+    it to the unfused product, within dtype tolerance."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    bias = (jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+            if has_bias else None)
+    fused = fk.gemm_bias_act(a, b, bias=bias, epilogue=epilogue)
+    staged = fk.apply_epilogue(a @ b, epilogue, bias)
+    _close(fused, staged, scale=4.0)
+
+
+# --------------------------- TRSM->GEMM kernel ------------------------------
+
+@pytest.mark.parametrize("form", ("lu", "syrk"))
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_trsm_gemm_vs_staged_oracle(rng, form, dtype):
+    """Fused panel chain == float64 staged oracle, both forms.
+
+    Diagonally dominant L keeps the solve well-conditioned so the dtype
+    tolerances (scaled for the blocked accumulation depth) apply.
+    """
+    nb, n, m = 24, 72, 40
+    l_np = np.tril(rng.normal(size=(nb, nb))).astype(np.float32) \
+        + 4.0 * np.eye(nb, dtype=np.float32)
+    ap_np = rng.normal(size=(nb, n)).astype(np.float32)
+    c_rows = nb if form == "syrk" else m
+    c_np = rng.normal(size=(c_rows if form == "lu" else n, n)).astype(np.float32)
+    l11 = jnp.asarray(l_np).astype(dtype)
+    ap = jnp.asarray(ap_np).astype(dtype)
+    unit = form == "lu"
+    lf = np.asarray(l_np, np.float64)
+    if unit:
+        lf = np.tril(lf, -1) + np.eye(nb)
+    import scipy.linalg
+    x64 = scipy.linalg.solve_triangular(lf, np.asarray(ap_np, np.float64),
+                                        lower=True, unit_diagonal=False)
+    if form == "lu":
+        bl_np = rng.normal(size=(m, nb)).astype(np.float32)
+        c_np = rng.normal(size=(m, n)).astype(np.float32)
+        bl = jnp.asarray(bl_np).astype(dtype)
+        c = jnp.asarray(c_np).astype(dtype)
+        x, c_out = fk.trsm_gemm(l11, ap, bl, c, form="lu", unit_diag=True)
+        # recompute the oracle with the unit diagonal the kernel uses
+        x64 = scipy.linalg.solve_triangular(
+            np.tril(np.asarray(l_np, np.float64), -1) + np.eye(nb),
+            np.asarray(ap_np, np.float64), lower=True)
+        want_c = np.asarray(c_np, np.float64) \
+            - np.asarray(bl_np, np.float64) @ x64
+    else:
+        c_np = rng.normal(size=(n, n)).astype(np.float32)
+        c = jnp.asarray(c_np).astype(dtype)
+        x, c_out = fk.trsm_gemm(l11, ap, None, c, form="syrk")
+        want_c = np.asarray(c_np, np.float64) - x64.T @ x64
+    # scale tolerances by the solve magnitude (relative, not absolute)
+    xmag = max(float(np.max(np.abs(x64))), 1.0)
+    _close(x, x64, scale=4.0 * xmag, msg=f"X {form}")
+    _close(c_out, want_c, scale=8.0 * xmag, msg=f"C {form}")
+
+
+# ----------------------- blocked drivers: fuse on/off -----------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_cholesky_fuse_grid(rng, policy):
+    n = 64
+    g = rng.normal(size=(n, n)).astype(np.float32)
+    s = jnp.asarray(g @ g.T + n * np.eye(n, dtype=np.float32))
+    want = np.linalg.cholesky(np.asarray(s, np.float64))
+    outs = {}
+    for fuse in (False, True, None):
+        with linalg.use(policy=policy):
+            outs[fuse] = linalg.cholesky(s, block=16, fuse=fuse)
+        _close(outs[fuse], want, scale=16.0,
+               msg=f"cholesky policy={policy} fuse={fuse}")
+    _close(outs[True], outs[False], scale=16.0,
+           msg=f"cholesky fused-vs-staged policy={policy}")
+    if policy == "reference":
+        # reference never fuses: fuse=True must be the staged path, bitwise
+        assert np.array_equal(np.asarray(outs[True]),
+                              np.asarray(outs[False]))
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_lu_fuse_grid(rng, policy):
+    for m, n in ((64, 64), (48, 72), (72, 48)):
+        a_np = rng.normal(size=(m, n)).astype(np.float32) \
+            + min(m, n) * np.eye(m, n, dtype=np.float32)
+        a = jnp.asarray(a_np)
+        res = {}
+        for fuse in (False, True):
+            with linalg.use(policy=policy):
+                res[fuse] = linalg.lu(a, block=16, fuse=fuse)
+        assert np.array_equal(np.asarray(res[True][1]),
+                              np.asarray(res[False][1])), \
+            f"pivots drifted {m}x{n} policy={policy}"
+        _close(res[True][0], np.asarray(res[False][0], np.float64),
+               scale=16.0, msg=f"lu fused-vs-staged {m}x{n} policy={policy}")
+        # reconstruction oracle: P A = L U in float64
+        packed, piv = res[True]
+        k = min(m, n)
+        pk = np.asarray(packed, np.float64)
+        l = np.tril(pk[:, :k], -1) + np.eye(m, k)
+        u = np.triu(pk[:k, :])
+        perm = np.arange(m)
+        for i, p in enumerate(np.asarray(piv)):
+            perm[[i, p]] = perm[[p, i]]
+        _close(jnp.asarray((l @ u).astype(np.float32)),
+               np.asarray(a_np, np.float64)[perm], scale=64.0,
+               msg=f"lu reconstruction {m}x{n} policy={policy}")
+
+
+def test_cold_start_tuned_is_model_bitwise(rng, tmp_path):
+    """The tuning contract extends to the fused ops: an empty registry
+    resolves tuned to exactly the model plan, so results are bitwise."""
+    reg = tune.Registry(str(tmp_path / "empty.json"))
+    a, b = _mk(rng, (48, 24), np.float32), _mk(rng, (24, 56), np.float32)
+    bias = _mk(rng, (56,), np.float32)
+    g = rng.normal(size=(64, 64)).astype(np.float32)
+    s = jnp.asarray(g @ g.T + 64 * np.eye(64, dtype=np.float32))
+    with linalg.use(policy="tuned", registry=reg):
+        got_t = linalg.gemm_bias_act(a, b, bias=bias, epilogue="relu")
+        chol_t = linalg.cholesky(s, block=16, fuse=True)
+    with linalg.use(policy="model"):
+        got_m = linalg.gemm_bias_act(a, b, bias=bias, epilogue="relu")
+        chol_m = linalg.cholesky(s, block=16, fuse=True)
+    assert np.array_equal(np.asarray(got_t), np.asarray(got_m))
+    assert np.array_equal(np.asarray(chol_t), np.asarray(chol_m))
+
+
+# ------------------------- chain planner properties -------------------------
+
+@pytest.mark.parametrize("machine", MACHINES)
+def test_planner_outputs_respect_vmem_budget(machine):
+    """Every planner's working set fits (or truthfully reports not
+    fitting) the ambient machine's VMEM budget."""
+    mach = arch.get(machine)
+    budget = mach.memory.vmem_bytes
+    for m, n, k in [(64, 64, 64), (512, 512, 128), (2048, 2048, 2048),
+                    (8, 8192, 64)]:
+        for db in (2, 4, 8):
+            p = cd.plan_gemm(m, n, k, dtype_bytes=db, machine=mach)
+            assert p.vmem_bytes <= budget, (machine, m, n, k, db)
+            for kind in cd.FUSED_CHAIN_KINDS:
+                ch = cd.plan_fused_chain(kind, m, n, k, dtype_bytes=db,
+                                         epilogue="gelu", machine=mach)
+                # the *verdict* must match the budget arithmetic, and the
+                # constituent GEMM plan must itself be feasible
+                assert ch.fits_vmem == (ch.vmem_bytes <= budget), \
+                    (machine, kind, m, n, k, db)
+                assert ch.gemm.vmem_bytes <= budget
+    att = cd.plan_attention(2048, 2048, 128, machine=mach)
+    assert att.vmem_bytes <= budget
+    ssd = cd.plan_ssd(4096, 8, 64, 64, machine=mach)
+    assert ssd.vmem_bytes <= budget
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(8, 4096), n=st.integers(8, 4096), k=st.integers(8, 512),
+       db=st.sampled_from([2, 4, 8]),
+       kind=st.sampled_from(cd.FUSED_CHAIN_KINDS),
+       epilogue=st.sampled_from(fk.EPILOGUES),
+       form=st.sampled_from(["lu", "syrk"]),
+       machine=st.sampled_from(MACHINES))
+def test_fused_never_models_more_hbm_bytes(m, n, k, db, kind, epilogue,
+                                           form, machine):
+    """Property: streaming can only *remove* HBM traffic - the fused plan
+    never prices more bytes than the unfused chain, on any machine."""
+    ch = cd.plan_fused_chain(kind, m, n, k, dtype_bytes=db,
+                             epilogue=epilogue, form=form,
+                             machine=arch.get(machine))
+    assert ch.fused_hbm_bytes <= ch.unfused_hbm_bytes
+    assert ch.hbm_bytes_saved == ch.unfused_hbm_bytes - ch.fused_hbm_bytes
+    if ch.fused_wins:
+        assert ch.fits_vmem
+
+
+def test_chain_model_prices_win_and_loss():
+    """The acceptance shapes: the default machine fuses a 256-square
+    trailing update; cpu-host's 2 MiB VMEM rejects the 2048 chain."""
+    win = cd.plan_fused_chain("trsm+gemm", 256, 256, 32, dtype_bytes=4,
+                              form="syrk")
+    assert win.fused_wins and win.hbm_bytes_saved > 0
+    lose = cd.plan_fused_chain("trsm+gemm", 2048, 2048, 64, dtype_bytes=4,
+                               form="syrk", machine=arch.get("cpu-host"))
+    assert not lose.fits_vmem and not lose.fused_wins
+
+
+# --------------------------- observability + tuner --------------------------
+
+def test_fused_span_records_saved_bytes(rng):
+    g = rng.normal(size=(96, 96)).astype(np.float32)
+    s = jnp.asarray(g @ g.T + 96 * np.eye(96, dtype=np.float32))
+    with obs.trace("fusion-test") as tr:
+        with linalg.use(policy="model"):
+            linalg.cholesky(s, block=32, fuse=True)
+    spans = tr.spans(cat="fused")
+    assert spans, "fused cholesky emitted no fused spans"
+    for sp in spans:
+        assert sp.attrs["hbm_bytes_saved"] >= 0
+        assert sp.attrs["fused_hbm_bytes"] + sp.attrs["hbm_bytes_saved"] \
+            == sp.attrs["unfused_hbm_bytes"]
+    assert any(sp.attrs["hbm_bytes_saved"] > 0 for sp in spans)
+    # the staged run must not emit fused spans
+    with obs.trace("staged") as tr2:
+        with linalg.use(policy="model"):
+            linalg.cholesky(s, block=32, fuse=False)
+    assert not tr2.spans(cat="fused")
+
+
+def test_resolve_describe_carries_fusion_fields():
+    res = tune.resolve("gemm+epilogue", (256, 256, 64), jnp.float32,
+                       policy="model", epilogue="relu")
+    d = res.describe()
+    assert d["fused"] is True and d["hbm_bytes_saved"] > 0
+    assert set(td.FUSED_OPS) <= set(td.OPS)
+    # reference policy never fuses
+    ref = tune.resolve("trsm+gemm", (64, 64, 16), jnp.float32,
+                       policy="reference", form="syrk")
+    assert not ref.fused and not ref.use_pallas
+
+
+def test_tune_fused_gemm_registry_roundtrip(tmp_path):
+    reg = tune.Registry(str(tmp_path / "reg.json"))
+    sw = tune.tune_fused_gemm(32, 32, 32, epilogue="relu", registry=reg,
+                              reps=1)
+    assert {r["variant"] for r in sw.measured} == {"staged", "fused"}
+    path = reg.save()
+    reloaded = tune.Registry(path)
+    res = tune.resolve("gemm+epilogue", (32, 32, 32), jnp.float32,
+                       policy="tuned", registry=reloaded, epilogue="relu")
+    assert res.source == "registry"
+    assert res.fused == (bool(sw.best.params["fused"]) and
+                         res.chain.fits_vmem)
+
+
+# ---------------------------- float64 leg (x64) -----------------------------
+
+_ENV = dict(os.environ, JAX_ENABLE_X64="1", PYTHONPATH="src")
+
+_PRELUDE = """
+import sys
+sys.path.insert(0, "tests")
+from conftest import dtype_tolerances
+import numpy as np
+import jax, jax.numpy as jnp
+from repro import linalg
+from repro.kernels import fused as fk
+
+def close(got, want, scale=1.0, msg=""):
+    rtol, atol = dtype_tolerances(np.asarray(got).dtype, scale)
+    np.testing.assert_allclose(np.asarray(got).astype(np.float64),
+                               np.asarray(want).astype(np.float64),
+                               rtol=rtol, atol=atol, err_msg=msg)
+"""
+
+
+def test_fusion_grid_float64():
+    """The float64 differential leg: fused chains at 1e-12-level
+    tolerances, all policies, in one x64 subprocess."""
+    code = _PRELUDE + textwrap.dedent("""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(48, 24)))
+    b = jnp.asarray(rng.normal(size=(24, 56)))
+    bias = jnp.asarray(rng.normal(size=(56,)))
+    assert a.dtype == jnp.float64
+    g = rng.normal(size=(64, 64))
+    s = jnp.asarray(g @ g.T + 64 * np.eye(64))
+    want_l = np.linalg.cholesky(np.asarray(s))
+    for pol in ("reference", "model", "tuned"):
+        for epi in fk.EPILOGUES:
+            with linalg.use(policy=pol):
+                got = linalg.gemm_bias_act(a, b, bias=bias, epilogue=epi)
+            assert got.dtype == jnp.float64
+            want = fk.apply_epilogue(a @ b, epi, bias)
+            close(got, want, scale=8.0, msg=f"{epi} policy={pol}")
+        outs = {}
+        for fuse in (False, True):
+            with linalg.use(policy=pol):
+                outs[fuse] = linalg.cholesky(s, block=16, fuse=fuse)
+            close(outs[fuse], want_l, scale=64.0,
+                  msg=f"cholesky f64 policy={pol} fuse={fuse}")
+        close(outs[True], outs[False], scale=64.0,
+              msg=f"cholesky f64 fused-vs-staged policy={pol}")
+    print("fusion float64 grid OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], env=_ENV,
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "fusion float64 grid OK" in r.stdout

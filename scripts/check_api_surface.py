@@ -133,6 +133,25 @@ EXPECTED_COUNTERS = {
     "kernel.launch", "collective.hops", "collective.bytes",
 }
 
+# the repro.analysis static-verification surface (docs/static_analysis.md):
+# exported names, the frozen rule-ID vocabulary (allowlists, docs, and
+# seeded-violation tests key on IDs and severities), and the report /
+# finding record layouts that CI artifacts serialize
+EXPECTED_ANALYSIS_ALL = [
+    "RULES", "Finding", "AnalysisReport",
+    "check", "check_routine", "check_surface", "surface_routines",
+    "merge_reports", "allow", "Allowlist", "load_allowlist",
+]
+EXPECTED_ANALYSIS_RULES = {
+    "KL001": "error", "KL002": "error", "KL003": "error", "KL004": "error",
+    "DF001": "error", "DF002": "error", "DF003": "warn", "DF004": "error",
+    "CM001": "error", "CM002": "warn", "CM003": "warn",
+}
+EXPECTED_REPORT_FIELDS = {"target", "cases", "findings", "suppressed",
+                          "schema_version"}
+EXPECTED_FINDING_FIELDS = {"rule", "severity", "routine", "message",
+                           "location", "case", "suppressed", "suppressed_by"}
+
 
 # the streaming-fusion surface (docs/fusion.md): kernel exports, the
 # registry op strings dispatch resolves, the chain planner signature, and
@@ -290,6 +309,39 @@ def check_obs(errors) -> None:
                       "singleton (dict-free disabled path)")
 
 
+def check_analysis(errors) -> None:
+    import dataclasses
+
+    from repro import analysis
+
+    got_all = list(analysis.__all__)
+    if got_all != EXPECTED_ANALYSIS_ALL:
+        missing = set(EXPECTED_ANALYSIS_ALL) - set(got_all)
+        extra = set(got_all) - set(EXPECTED_ANALYSIS_ALL)
+        errors.append(f"analysis.__all__ drifted: missing={sorted(missing)} "
+                      f"extra={sorted(extra)} (order matters too)")
+    got_rules = {r.id: r.severity for r in analysis.RULES.values()}
+    if got_rules != EXPECTED_ANALYSIS_RULES:
+        drifted = {rid for rid in set(got_rules) | set(EXPECTED_ANALYSIS_RULES)
+                   if got_rules.get(rid) != EXPECTED_ANALYSIS_RULES.get(rid)}
+        errors.append(f"analysis rule vocabulary drifted on {sorted(drifted)}"
+                      ": IDs are frozen - an ID may gain wording but never "
+                      "disappear or change severity silently")
+    for cls_name, want in (("AnalysisReport", EXPECTED_REPORT_FIELDS),
+                           ("Finding", EXPECTED_FINDING_FIELDS)):
+        cls = getattr(analysis, cls_name, None)
+        if cls is None:
+            errors.append(f"repro.analysis lost {cls_name}")
+            continue
+        fields = {f.name for f in dataclasses.fields(cls)}
+        if fields != want:
+            errors.append(f"analysis.{cls_name} fields drifted: "
+                          f"{sorted(fields)} != {sorted(want)} "
+                          "(CI artifacts serialize these)")
+    if analysis.check_surface.__defaults__ is None:
+        errors.append("analysis.check_surface lost its defaulted grid")
+
+
 def main() -> int:
     from repro import linalg
 
@@ -298,6 +350,7 @@ def main() -> int:
     check_measure(errors)
     check_obs(errors)
     check_fusion(errors)
+    check_analysis(errors)
     got_all = list(linalg.__all__)
     if got_all != EXPECTED_ALL:
         missing = set(EXPECTED_ALL) - set(got_all)
@@ -332,9 +385,12 @@ def main() -> int:
             print(f"  - {e}")
         return 1
     print(f"repro.linalg + repro.arch + repro.tune.measure + repro.obs + "
-          f"fusion API surface OK ({len(EXPECTED_PARAMS)} routines, "
+          f"fusion + analysis API surface OK ({len(EXPECTED_PARAMS)} "
+          f"routines, "
           f"{len(EXPECTED_ALL)} linalg + {len(EXPECTED_ARCH_ALL)} arch + "
-          f"{len(EXPECTED_OBS_ALL)} obs exported names, "
+          f"{len(EXPECTED_OBS_ALL)} obs + {len(EXPECTED_ANALYSIS_ALL)} "
+          f"analysis exported names, "
+          f"{len(EXPECTED_ANALYSIS_RULES)} frozen rule IDs, "
           f"{len(EXPECTED_TUNE_MEASURE)} measurement names, "
           f"{len(EXPECTED_FUSED_KERNELS)} fused-kernel names)")
     return 0

@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""CI gate: trace-time static analysis of the repro.linalg surface.
+
+Sweeps every public (arg-synthesizable) ``repro.linalg`` routine over the
+acceptance grid - policies x dtypes x {no mesh, mesh} - with
+``repro.analysis.check_surface`` and fails (exit 1) on any unsuppressed
+``error``-severity finding. Warnings print but do not fail. Nothing is
+executed: every case is a ``jax.make_jaxpr`` trace, so the sweep runs in
+seconds on the CI host with no accelerator.
+
+The mesh leg needs ``SURFACE_MESH`` (2x2 = 4) devices; this script forces
+8 host devices via XLA_FLAGS *before* importing jax (same idiom as
+``scripts/hillclimb.py`` / the distributed test step in
+``scripts/ci_check.sh``) so CI never records a skipped mesh case.
+
+Usage:
+    python scripts/check_static_analysis.py
+    python scripts/check_static_analysis.py --routines gemm,qr
+    python scripts/check_static_analysis.py --allowlist allow.json \
+        --out analysis_report.json
+
+See ``docs/static_analysis.md`` for the rule vocabulary and the
+allowlist format.
+"""
+import argparse
+import os
+import sys
+import time
+
+# force enough host devices for the mesh leg before jax is imported
+# anywhere in-process (XLA reads the flag at backend init)
+_FLAG = "--xla_force_host_platform_device_count=8"
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " " + _FLAG).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# importable from any cwd
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--routines", metavar="A,B,...",
+                    help="comma-separated subset (default: every "
+                         "checkable linalg.__all__ routine)")
+    ap.add_argument("--allowlist", metavar="PATH",
+                    help="JSON allowlist of suppressed findings "
+                         "(missing file = empty; corrupt warns + empty)")
+    ap.add_argument("--out", metavar="PATH",
+                    help="also save the merged AnalysisReport as JSON")
+    ap.add_argument("--no-mesh", action="store_true",
+                    help="skip the sharded (mesh) leg of the grid")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print every case as it is checked")
+    args = ap.parse_args()
+
+    from repro import analysis
+
+    routines = (args.routines.split(",") if args.routines
+                else analysis.surface_routines())
+    allowlist = analysis.load_allowlist(args.allowlist)
+    mesh = None if args.no_mesh else analysis.report.SURFACE_MESH
+
+    checked = [0]
+
+    def progress(case):
+        checked[0] += 1
+        if args.verbose:
+            print(f"  [{checked[0]:4d}] {case['routine']:>18s} "
+                  f"policy={case['policy']} dtype={case['dtype']} "
+                  f"mesh={case['mesh']}")
+
+    t0 = time.time()
+    rep = analysis.check_surface(routines=routines, mesh=mesh,
+                                 allowlist=allowlist, progress=progress)
+    dt = time.time() - t0
+    if args.out:
+        rep.save(args.out)
+        print(f"report -> {args.out}")
+
+    skipped = [c for c in rep.cases if "skipped" in c]
+    print(rep.summary())
+    print(f"static analysis: {len(rep.cases)} cases "
+          f"({len(skipped)} skipped) over {len(routines)} routines "
+          f"in {dt:.1f}s")
+    if skipped:
+        # the forced-device preamble should make this impossible in CI
+        print(f"  note: {len(skipped)} mesh case(s) skipped: "
+              f"{skipped[0].get('skipped')}")
+    if not rep.ok:
+        print(f"FAILED: {len(rep.errors)} unsuppressed error-severity "
+              "finding(s) (suppress via docs/static_analysis.md "
+              "allowlist workflow only with a reason)")
+        return 1
+    if rep.warnings:
+        print(f"passed with {len(rep.warnings)} warning(s)")
+    else:
+        print("static analysis OK: no findings")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,12 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 echo "== collection guard (zero import errors required) =="
 python -m pytest --collect-only -q
 
+echo "== static analysis gate (trace-time lint of the linalg surface) =="
+# trace-only: no kernel executes; fails on any unsuppressed error-severity
+# finding (rule vocabulary in docs/static_analysis.md). The script forces
+# 8 host devices itself so the mesh leg never skips.
+python scripts/check_static_analysis.py
+
 echo "== tuner smoke (tiny sweep -> tmpdir registry -> lookup must hit) =="
 python - <<'PY'
 import tempfile, os, sys

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import sys
 from typing import Dict, List, Tuple
@@ -64,6 +65,35 @@ def load(path: str) -> Tuple[str, Dict, List[Dict]]:
     return "jsonl", meta, events
 
 
+def _attr_problems(i: int, e: Dict) -> List[str]:
+    """Cross-check the roofline attrs a span may carry, either format.
+
+    ``flops``/``bytes`` feed the roofline annotation (span.close), so when
+    present they must be finite non-negative numbers, and a derived
+    ``fraction_of_modeled_peak`` must be a finite ratio >= 0 - a NaN/inf
+    (zero modeled peak) or negative value means the annotation math broke
+    upstream and would silently poison trace summaries and CI gates.
+    """
+    problems = []
+    attrs = _event_attrs(e)
+    for key in ("flops", "bytes"):
+        v = attrs.get(key)
+        if v is None:
+            continue
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            problems.append(f"event {i}: attr {key}={v!r} is not numeric")
+        elif not math.isfinite(v) or v < 0:
+            problems.append(f"event {i}: attr {key}={v!r} must be a "
+                            "finite value >= 0")
+    frac = attrs.get("fraction_of_modeled_peak")
+    if frac is not None:
+        if isinstance(frac, bool) or not isinstance(frac, (int, float)) \
+                or not math.isfinite(frac) or frac < 0:
+            problems.append(f"event {i}: fraction_of_modeled_peak="
+                            f"{frac!r} must be a finite value >= 0")
+    return problems
+
+
 def validate(fmt: str, meta: Dict, events: List[Dict]) -> List[str]:
     """Schema check; returns a list of human-readable problems."""
     problems = []
@@ -94,6 +124,7 @@ def validate(fmt: str, meta: Dict, events: List[Dict]) -> List[str]:
                 last_ts = e["ts"]
             if "id" not in e.get("args", {}):
                 problems.append(f"event {i}: args missing event id")
+            problems += _attr_problems(i, e)
     else:
         want = set(EVENT_FIELDS)
         last_ts = None
@@ -107,6 +138,7 @@ def validate(fmt: str, meta: Dict, events: List[Dict]) -> List[str]:
             if last_ts is not None and ts < last_ts:
                 problems.append(f"event {i}: t_start not monotonic")
             last_ts = ts
+            problems += _attr_problems(i, e)
     return problems
 
 

@@ -1,0 +1,57 @@
+"""repro.analysis - trace-time static verification of the linalg stack.
+
+The paper's core claim is that performance (and correctness hazards) are
+readable off static structure; this package enforces the repo's own half
+of that bargain. ``check`` traces any routine from the ``repro.linalg``
+surface with ``jax.make_jaxpr`` - no execution, no devices needed - and
+verifies a frozen, ID'd rule vocabulary over the result:
+
+======  =====================  ========================================
+family  rules                  contract
+======  =====================  ========================================
+KL      KL001 KL002 KL003      Pallas launch geometry: block
+        KL004                  divisibility, VMEM budget (the
+                               FusedChainPlan veto), int32 index
+                               dtypes under x64, zero-dim -> jnp
+                               fallback routing
+DF      DF001 DF002 DF003      dtype flow: no silent f64, f64
+        DF004                  accumulators for f64 operands, no
+                               narrowing convert round-trips, no host
+                               transfers
+CM      CM001 CM002 CM003      cost-model drift: span flops/bytes
+                               annotations vs jaxpr_census counts
+                               within declared tolerance; retrace
+                               (jit cache key) stability
+======  =====================  ========================================
+
+Typical use::
+
+    from repro import analysis, linalg
+
+    rep = analysis.check(linalg.gemm, a, b)     # one routine
+    assert rep.ok, rep.summary()
+
+    rep = analysis.check_surface()              # full acceptance grid
+    rep.save("analysis_report.json")
+
+    with analysis.allow("CM002", routine="qr"):  # scoped suppression
+        rep = analysis.check(linalg.qr, a)
+
+CI runs ``scripts/check_static_analysis.py`` (wired into
+``scripts/ci_check.sh``), which sweeps ``linalg.__all__`` and fails on
+any unsuppressed ``error``. Rule IDs, ``AnalysisReport`` fields, and
+this module's ``__all__`` are frozen by ``scripts/check_api_surface.py``.
+See ``docs/static_analysis.md`` for the full vocabulary and suppression
+workflow.
+"""
+from repro.analysis.report import (AnalysisReport, check, check_routine,
+                                   check_surface, merge_reports,
+                                   surface_routines)
+from repro.analysis.rules import (RULES, Allowlist, Finding, allow,
+                                  load_allowlist)
+
+__all__ = [
+    "RULES", "Finding", "AnalysisReport",
+    "check", "check_routine", "check_surface", "surface_routines",
+    "merge_reports", "allow", "Allowlist", "load_allowlist",
+]

@@ -1,0 +1,165 @@
+"""Kernel-launch lint (rules KL001/KL002/KL004) over traced Pallas calls
+and recorded dispatch resolutions.
+
+Two complementary views of the same launch contract:
+
+* **jaxpr view** - every ``pallas_call`` eqn found in the trace exposes
+  its ``grid_mapping`` (grid + per-operand block shapes) and kernel body;
+  block divisibility, the modeled VMEM working set, and zero-dim grids
+  are checked against the *actual* launch geometry the tracer saw.
+* **plan view** - :func:`repro.tune.dispatch.record_resolutions` captures
+  every :class:`Resolution` the dispatcher produced while tracing; the
+  resolved :class:`GemmPlan` tiles and fused-chain verdicts are checked
+  against the ambient machine budget *before* any kernel exists, which
+  catches a poisoned registry entry (e.g. hand-edited ``bm``) that the
+  kernels would happily pad around.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_lint import _source_location, iter_eqns
+from repro.analysis.rules import Finding, make_finding
+
+
+def _block_dims(block_shape) -> List[Optional[int]]:
+    """Block shape entries as ints (None for squeezed/element dims)."""
+    dims: List[Optional[int]] = []
+    for d in block_shape:
+        if isinstance(d, int):
+            dims.append(d)
+        else:
+            # pl.Squeezed / Blocked wrappers on newer Pallas versions
+            inner = getattr(d, "block_size", None)
+            dims.append(int(inner) if isinstance(inner, int) else None)
+    return dims
+
+
+def _aval_bytes(aval) -> int:
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n * jnp.dtype(dtype).itemsize
+
+
+def _pallas_calls(closed_jaxpr):
+    for eqn, in_pallas in iter_eqns(closed_jaxpr.jaxpr):
+        if eqn.primitive.name == "pallas_call" and not in_pallas:
+            yield eqn
+
+
+def lint_pallas_eqn(eqn, machine, routine: Optional[str] = None
+                    ) -> List[Finding]:
+    """KL001/KL002/KL004 for one traced ``pallas_call`` equation."""
+    findings: List[Finding] = []
+    loc = _source_location(eqn)
+    gm = eqn.params.get("grid_mapping")
+    if gm is None:                       # unknown Pallas internals: skip
+        return findings
+    grid = tuple(int(g) for g in getattr(gm, "grid", ())
+                 if isinstance(g, int))
+    if any(g == 0 for g in grid):
+        findings.append(make_finding(
+            "KL004", f"Pallas launch with a zero-length grid {grid} "
+            "(empty operand reached the kernel path)",
+            routine=routine, location=loc))
+    operands = [v.aval for v in list(eqn.invars) + list(eqn.outvars)
+                if hasattr(v, "aval")]
+    mappings = list(getattr(gm, "block_mappings", ()))
+    vmem = 0
+    for i, bm in enumerate(mappings):
+        block = _block_dims(getattr(bm, "block_shape", ()))
+        aval = operands[i] if i < len(operands) else None
+        if aval is None or not hasattr(aval, "shape"):
+            continue
+        # trailing-aligned: block ndim can be < operand ndim (squeezed
+        # leading grid axes); compare the dims the block actually tiles
+        shape = list(aval.shape)[-len(block):] if block else []
+        for bd, ad in zip(block, shape):
+            if bd is None:
+                continue
+            if bd == 0 or ad == 0:
+                findings.append(make_finding(
+                    "KL004", f"zero-dim block/operand pair (block {bd}, "
+                    f"dim {ad}) in Pallas operand {i} of {aval.shape}",
+                    routine=routine, location=loc))
+            elif ad % bd != 0:
+                findings.append(make_finding(
+                    "KL001", f"block dim {bd} does not divide padded "
+                    f"operand dim {ad} (operand {i}, shape "
+                    f"{tuple(aval.shape)}, block {tuple(block)})",
+                    routine=routine, location=loc))
+        blk_elems = 1
+        for bd, ad in zip(block, shape):
+            blk_elems *= bd if bd is not None else 1
+        dtype = getattr(aval, "dtype", None)
+        if dtype is not None:
+            # double-buffered streaming blocks, the plan_gemm accounting
+            vmem += 2 * blk_elems * jnp.dtype(dtype).itemsize
+    # scratch refs: kernel jaxpr invars beyond the mapped operands
+    kernel_jaxpr = eqn.params.get("jaxpr")
+    if kernel_jaxpr is not None and len(kernel_jaxpr.invars) > len(mappings):
+        for v in kernel_jaxpr.invars[len(mappings):]:
+            aval = getattr(v, "aval", None)
+            vmem += _aval_bytes(getattr(aval, "inner_aval", aval))
+    budget = machine.memory.vmem_bytes
+    if vmem > budget:
+        findings.append(make_finding(
+            "KL002", f"modeled VMEM working set {vmem} B exceeds "
+            f"machine budget {budget} B ({machine.name})",
+            routine=routine, location=loc))
+    return findings
+
+
+def lint_kernel_launches(closed_jaxpr, machine,
+                         routine: Optional[str] = None,
+                         zero_dim_inputs: bool = False) -> List[Finding]:
+    """All pallas_call eqns in a trace; with ``zero_dim_inputs`` any
+    launch at all is a KL004 (the routine must have taken the jnp
+    fallback)."""
+    findings: List[Finding] = []
+    for eqn in _pallas_calls(closed_jaxpr):
+        if zero_dim_inputs:
+            findings.append(make_finding(
+                "KL004", "Pallas launch reached with a zero-dim operand "
+                "(must route to the jnp fallback)", routine=routine,
+                location=_source_location(eqn)))
+        findings.extend(lint_pallas_eqn(eqn, machine, routine=routine))
+    return findings
+
+
+def lint_resolutions(resolutions: Sequence, machine,
+                     routine: Optional[str] = None) -> List[Finding]:
+    """KL001/KL002 over recorded dispatch Resolutions (the plan view)."""
+    findings: List[Finding] = []
+    sublane = machine.pe.sublane
+    budget = machine.memory.vmem_bytes
+    for res in resolutions:
+        plan = getattr(res, "gemm_plan", None)
+        if plan is not None:
+            bad = [b for b in (plan.bm, plan.bn, plan.bk)
+                   if b % sublane != 0]
+            if bad:
+                findings.append(make_finding(
+                    "KL001", f"resolved {res.op} plan tile "
+                    f"(bm={plan.bm}, bn={plan.bn}, bk={plan.bk}) not "
+                    f"aligned to sublane {sublane} (source={res.source})",
+                    routine=routine))
+            if plan.vmem_bytes > budget:
+                findings.append(make_finding(
+                    "KL002", f"resolved {res.op} plan VMEM "
+                    f"{plan.vmem_bytes} B exceeds budget {budget} B "
+                    f"(source={res.source})", routine=routine))
+        chain = getattr(res, "chain", None)
+        if getattr(res, "fused", False) and chain is not None \
+                and not chain.fits_vmem:
+            findings.append(make_finding(
+                "KL002", f"fused {res.op} chosen although the chain does "
+                f"not fit VMEM ({chain.vmem_bytes} B)", routine=routine))
+    return findings

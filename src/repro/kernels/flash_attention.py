@@ -86,6 +86,12 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
               block_q: Optional[int] = None, block_k: Optional[int] = None,
               interpret: bool = True) -> jnp.ndarray:
     """Flash attention; see module docstring for layout. Returns q-shaped."""
+    if 0 in q.shape or 0 in k.shape or 0 in v.shape:
+        # zero-dim operands cannot tile a Pallas grid (rule KL004): an
+        # empty batch/head/query/feature axis makes the output empty, and
+        # an empty KV axis leaves every denominator at the kernel's
+        # safe-divide zero - jnp zeros of q's shape is exact either way
+        return jnp.zeros(q.shape, q.dtype)
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     group = hq // hkv

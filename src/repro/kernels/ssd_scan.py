@@ -66,6 +66,12 @@ def ssd_scan(x: jnp.ndarray, a_log: jnp.ndarray, B: jnp.ndarray,
              C: jnp.ndarray, chunk: int | None = None,
              interpret: bool = True) -> jnp.ndarray:
     """Chunked SSD over (B, H, L, ...) layout; returns y (B, H, L, P)."""
+    if 0 in x.shape or 0 in a_log.shape or 0 in B.shape or 0 in C.shape:
+        # zero-dim operands cannot tile a Pallas grid (rule KL004): empty
+        # batch/head/length/feature axes make y empty, and an empty state
+        # axis N zeroes every contribution - jnp zeros of x's shape is
+        # the exact answer either way
+        return jnp.zeros(x.shape, x.dtype)
     bsz, h, L, p = x.shape
     n = B.shape[-1]
     if chunk is None:

@@ -39,7 +39,10 @@ def getrf_unblocked(a: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     def body(k, carry):
         A, piv = carry
         col = jnp.where(rows >= k, jnp.abs(A[:, k]), -jnp.inf)
-        p = jnp.argmax(col)
+        # pin to int32 (LAPACK ipiv width): under JAX_ENABLE_X64 argmax
+        # yields int64, and scattering that into the int32 piv buffer is
+        # a dtype-mismatch error in future JAX (analysis rule DF family)
+        p = jnp.argmax(col).astype(jnp.int32)
         piv = piv.at[k].set(p)
         rk, rp = A[k], A[p]
         A = A.at[k].set(rp).at[p].set(rk)
@@ -114,7 +117,7 @@ def getrf(a: jnp.ndarray, block: Optional[int] = None,
             A, piv = carry
             k = j0 + kk
             col = jnp.where(rows >= k, jnp.abs(A[:, k]), -jnp.inf)
-            p = jnp.argmax(col)
+            p = jnp.argmax(col).astype(jnp.int32)   # ipiv stays int32 (x64)
             piv = piv.at[kk].set(p)
             rk, rp = A[k], A[p]
             A = A.at[k].set(rp).at[p].set(rk)

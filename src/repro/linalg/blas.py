@@ -89,6 +89,11 @@ def _routine(op, info=None):
                     except Exception:
                         pass
                 return fn(*args, context=ctx, **kw)
+        # the static analyzer's drift oracle: repro.analysis.check reads
+        # the routine name and its flops/bytes annotation fn off the
+        # wrapper to compare against jaxpr_census-derived counts (CM001/2)
+        wrapper._analysis_op = op
+        wrapper._analysis_info = info
         return wrapper
     return deco
 

@@ -19,8 +19,10 @@ to ``model``: both execute the same kernel with the same plan.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Optional, Tuple
+from contextvars import ContextVar
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -76,11 +78,33 @@ class Resolution:
         return d
 
 
+# scoped Resolution capture for the static analyzer: resolve() runs in
+# Python at trace time, so every plan a jax.make_jaxpr trace produces can
+# be recorded without executing anything (repro.analysis.kernel_lint
+# checks the recorded plans against the ambient machine budget)
+_RECORD: "ContextVar[Optional[List[Resolution]]]" = ContextVar(
+    "dispatch_resolution_record", default=None)
+
+
+@contextlib.contextmanager
+def record_resolutions():
+    """Collect every Resolution produced inside the scope (trace-safe)."""
+    rec: List[Resolution] = []
+    token = _RECORD.set(rec)
+    try:
+        yield rec
+    finally:
+        _RECORD.reset(token)
+
+
 def _observed(res: "Resolution") -> "Resolution":
     """Resolution accounting: counters always, a provenance event when a
     trace is capturing (``obs.event("tune.resolve", ...)`` carrying
     :meth:`Resolution.describe` - the registry-hit / model-seeded /
     reference provenance every traced call records)."""
+    rec = _RECORD.get()
+    if rec is not None:
+        rec.append(res)
     _counters.inc("dispatch.resolve")
     if res.policy == "tuned":
         _counters.inc("dispatch.registry_hit" if res.source == "registry"

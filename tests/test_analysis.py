@@ -1,0 +1,344 @@
+"""repro.analysis: seeded violations, clean sweep, suppression fallbacks.
+
+Four contracts under test:
+
+1. **Every frozen rule ID is live**: one deliberately-bad kernel or
+   routine per rule (KL001-KL004, DF001-DF004, CM001-CM003) that *must*
+   fire - a rule that cannot fire is dead weight the allowlist would
+   happily "suppress" forever.
+2. **The real surface is clean**: a no-mesh ``check_surface`` sweep of
+   ``linalg.__all__`` produces zero findings (errors *and* warnings);
+   the full policy x dtype x mesh grid is CI's job
+   (``scripts/check_static_analysis.py``).
+3. **Suppression records, never deletes**: ``allow()`` and allowlist
+   hits land in ``report.suppressed`` with their suppressor tagged;
+   a corrupt allowlist warns once per path and re-fires its findings
+   (the registry convention); a missing one is silently empty.
+4. **The PR 9 kernel fixes hold**: zero-dim operands route
+   ``flash_attention.attention`` / ``ssd_scan.ssd_scan`` to the jnp
+   fallback - no Pallas launch in the trace, exact zeros at runtime.
+"""
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro import analysis, linalg
+from repro.analysis import rules as _rules
+
+
+def _f32(*shape, seed=0):
+    return np.random.default_rng(seed).standard_normal(shape).astype(
+        np.float32)
+
+
+def _rule_ids(report):
+    return sorted({f.rule for f in report.findings})
+
+
+# --------------------------- frozen vocabulary ------------------------------
+
+def test_rule_vocabulary_frozen():
+    expect = {"KL001": "error", "KL002": "error", "KL003": "error",
+              "KL004": "error", "DF001": "error", "DF002": "error",
+              "DF003": "warn", "DF004": "error", "CM001": "error",
+              "CM002": "warn", "CM003": "warn"}
+    assert {r.id: r.severity for r in analysis.RULES.values()} == expect
+    # IDs are the dict keys, in family order
+    assert list(analysis.RULES) == list(expect)
+
+
+# ------------------------ seeded kernel-launch bugs -------------------------
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def test_kl001_block_does_not_divide():
+    def bad_block(x):
+        return pl.pallas_call(
+            _copy_kernel, grid=(3,),
+            in_specs=[pl.BlockSpec((16, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((16, 128), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=True)(x)
+
+    rep = analysis.check(bad_block, _f32(40, 128))   # 16 does not divide 40
+    assert "KL001" in _rule_ids(rep) and not rep.ok
+
+
+def test_kl002_vmem_budget_exceeded():
+    def vmem_hog(x):                       # full-array blocks: 2 operands
+        n = x.shape[0]                     # x 2 x 64 MB = 256 MB > 96 MB
+        return pl.pallas_call(
+            _copy_kernel, grid=(1,),
+            in_specs=[pl.BlockSpec((n, n), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=True)(x)
+
+    rep = analysis.check(vmem_hog,
+                         jax.ShapeDtypeStruct((4096, 4096), jnp.float32))
+    assert "KL002" in _rule_ids(rep) and not rep.ok
+
+
+def test_kl003_int64_index_inside_kernel():
+    def i64_kernel(x_ref, o_ref):
+        idx = lax.broadcasted_iota(jnp.int64, x_ref.shape, 0)
+        o_ref[...] = x_ref[...] + idx.astype(x_ref.dtype)
+
+    def launch(x):
+        return pl.pallas_call(
+            i64_kernel,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=True)(x)
+
+    rep = analysis.check(launch, _f32(8, 128))
+    assert "KL003" in _rule_ids(rep) and not rep.ok
+
+
+def test_kl004_zero_dim_reaches_kernel():
+    def no_fallback(x):                    # the PR 8 _gemm_exec bug class
+        return pl.pallas_call(
+            _copy_kernel,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=True)(x)
+
+    rep = analysis.check(no_fallback, np.zeros((0, 8), np.float32))
+    assert "KL004" in _rule_ids(rep) and not rep.ok
+
+
+# --------------------- seeded plan-view (registry) bugs ---------------------
+
+def _poisoned_registry(tmp_path, params):
+    from repro.tune.registry import Registry
+    reg = Registry(path=str(tmp_path / "reg.json"))
+    # surface gemm: a (48, 32) @ b (32, 64) -> lookup shape (m, n, k)
+    reg.record("gemm", (48, 64, 32), jnp.float32, jax.default_backend(),
+               params, source="test")
+    return reg
+
+
+def test_kl001_plan_tile_misaligned(tmp_path):
+    reg = _poisoned_registry(tmp_path, {"bm": 100, "bn": 128, "bk": 128})
+    with linalg.use(policy="tuned", registry=reg):
+        rep = analysis.check(linalg.gemm, _f32(48, 32), _f32(32, 64),
+                             drift=False, retrace=False)
+    assert "KL001" in _rule_ids(rep)       # 100 % sublane(8) != 0
+
+
+def test_kl002_plan_vmem_exceeded(tmp_path):
+    reg = _poisoned_registry(tmp_path,
+                             {"bm": 4096, "bn": 4096, "bk": 4096})
+    with linalg.use(policy="tuned", registry=reg):
+        rep = analysis.check(linalg.gemm, _f32(48, 32), _f32(32, 64),
+                             drift=False, retrace=False)
+    assert "KL002" in _rule_ids(rep)       # ~335 MB plan vs 96 MB budget
+
+
+# -------------------------- seeded dtype-flow bugs --------------------------
+
+def test_df001_silent_f64_promotion():
+    def silent_f64(x):                     # jnp.zeros defaults to f64
+        return x + jnp.zeros(x.shape)      # under the x64 lint mode
+
+    rep = analysis.check(silent_f64, _f32(8, 8))
+    assert "DF001" in _rule_ids(rep) and not rep.ok
+
+
+def test_df002_narrow_accumulator_for_f64():
+    def narrow_accum(a, b):
+        return lax.dot(a, b, preferred_element_type=jnp.float32)
+
+    a = np.zeros((8, 8), np.float64)
+    rep = analysis.check(narrow_accum, a, a)
+    assert "DF002" in _rule_ids(rep) and not rep.ok
+
+
+def test_df003_convert_roundtrip():
+    def roundtrip(x):
+        return x.astype(jnp.bfloat16).astype(jnp.float32) * 2.0
+
+    rep = analysis.check(roundtrip, _f32(8, 8))
+    assert "DF003" in _rule_ids(rep)
+    assert rep.ok                          # warn severity: gate still green
+
+
+def test_df004_host_callback():
+    def host_call(x):
+        return jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+    rep = analysis.check(host_call, _f32(4, 4))
+    assert "DF004" in _rule_ids(rep) and not rep.ok
+
+
+# ------------------------- seeded cost-model drift --------------------------
+
+def test_cm001_cm002_annotation_drift():
+    rep = analysis.check(lambda a, b: a @ b, _f32(32, 32), _f32(32, 32),
+                         info=lambda a, b: {"flops": 1, "bytes": 1},
+                         retrace=False)
+    ids = _rule_ids(rep)
+    assert "CM001" in ids and "CM002" in ids
+    assert not rep.ok                      # CM001 is an error
+
+
+def test_cm003_retrace_instability():
+    state = {"n": 0}
+
+    def unstable(x):                       # new constant baked per trace
+        state["n"] += 1
+        return x * float(state["n"])
+
+    rep = analysis.check(unstable, _f32(8,), drift=False)
+    assert "CM003" in _rule_ids(rep)
+    assert rep.ok                          # warn severity
+
+
+# ------------------------------- clean sweep --------------------------------
+
+def test_surface_sweep_is_silent():
+    rep = analysis.check_surface(dtypes=("float32",), mesh=None)
+    assert rep.findings == [], rep.summary()
+    assert rep.suppressed == []
+    # every public routine with synthesizable args was actually traced
+    assert {c["routine"] for c in rep.cases} == set(
+        analysis.surface_routines())
+    assert len(rep.cases) == 3 * len(analysis.surface_routines())
+
+
+def test_surface_mesh_leg_records_skip():
+    rep = analysis.check_surface(routines=["gemm"],
+                                 policies=("reference",),
+                                 dtypes=("float32",), mesh=(64, 64))
+    skips = [c for c in rep.cases if "skipped" in c]
+    assert skips and "4096 devices" in skips[0]["skipped"]
+    assert rep.ok
+
+
+# ----------------------- suppression and allowlists -------------------------
+
+def _host_call(x):
+    return jax.pure_callback(
+        lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+
+def test_allow_roundtrip_records_suppression():
+    with analysis.allow("DF004"):
+        rep = analysis.check(_host_call, _f32(4, 4))
+    assert rep.ok and rep.findings == []
+    assert [f.rule for f in rep.suppressed] == ["DF004"]
+    assert rep.suppressed[0].suppressed
+    assert rep.suppressed[0].suppressed_by == "allow()"
+    # serialized form carries the suppression provenance
+    blob = rep.to_json()
+    assert blob["suppressed"][0]["suppressed_by"] == "allow()"
+
+
+def test_allow_is_routine_scoped():
+    with analysis.allow("DF004", routine="some_other_routine"):
+        rep = analysis.check(_host_call, _f32(4, 4))
+    assert not rep.ok and _rule_ids(rep) == ["DF004"]
+
+
+def test_allow_rejects_unknown_rule_id():
+    with pytest.raises(KeyError, match="XX999"):
+        with analysis.allow("XX999"):
+            pass
+
+
+def test_allowlist_file_roundtrip(tmp_path):
+    path = tmp_path / "allow.json"
+    path.write_text(json.dumps({
+        "schema_version": 1,
+        "allow": [{"rule": "DF004", "reason": "seeded fixture"}]}))
+    al = analysis.load_allowlist(str(path))
+    rep = analysis.check(_host_call, _f32(4, 4), allowlist=al)
+    assert rep.ok and rep.findings == []
+    assert rep.suppressed[0].suppressed_by == f"allowlist:{path}"
+
+
+def test_allowlist_missing_file_is_silently_empty(tmp_path):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        al = analysis.load_allowlist(str(tmp_path / "absent.json"))
+    assert al.entries == ()
+
+
+def test_allowlist_corrupt_warns_once_and_refires(tmp_path):
+    path = tmp_path / "corrupt.json"
+    path.write_text("{not json")
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        al = analysis.load_allowlist(str(path))
+    assert al.entries == ()
+    with warnings.catch_warnings():        # once per path, registry-style
+        warnings.simplefilter("error")
+        analysis.load_allowlist(str(path))
+    # a broken allowlist must re-fire, never hide, its findings
+    rep = analysis.check(_host_call, _f32(4, 4), allowlist=al)
+    assert not rep.ok and _rule_ids(rep) == ["DF004"]
+
+
+def test_allowlist_unknown_rule_is_corrupt(tmp_path):
+    path = tmp_path / "unknown_rule.json"
+    path.write_text(json.dumps({
+        "schema_version": 1, "allow": [{"rule": "ZZ123"}]}))
+    with pytest.warns(RuntimeWarning, match="ZZ123"):
+        al = analysis.load_allowlist(str(path))
+    assert al.entries == ()
+
+
+# --------------------------- report serialization ---------------------------
+
+def test_report_json_schema(tmp_path):
+    rep = analysis.check(_host_call, _f32(4, 4))
+    blob = rep.to_json()
+    assert set(blob) == {"schema_version", "target", "cases", "findings",
+                         "suppressed"}
+    assert blob["schema_version"] == _rules.SCHEMA_VERSION
+    f = blob["findings"][0]
+    assert f["rule"] == "DF004" and f["severity"] == "error"
+    assert not f["suppressed"]
+    out = tmp_path / "report.json"
+    rep.save(str(out))
+    assert json.loads(out.read_text())["target"] == rep.target
+
+
+# ---------------------- PR 9 kernel zero-dim guards -------------------------
+
+def test_attention_zero_dim_routes_to_fallback():
+    from repro.kernels.flash_attention import attention
+    q = jnp.zeros((2, 2, 0, 16), jnp.float32)
+    kv = jnp.zeros((2, 2, 0, 16), jnp.float32)
+    rep = analysis.check(attention, q, kv, kv)
+    assert rep.ok and rep.findings == [], rep.summary()
+    out = attention(q, kv, kv)
+    assert out.shape == q.shape
+
+
+def test_attention_zero_kv_axis_is_exact_zeros():
+    from repro.kernels.flash_attention import attention
+    q = jnp.asarray(_f32(1, 1, 8, 16))
+    kv = jnp.zeros((1, 1, 0, 16), jnp.float32)
+    rep = analysis.check(attention, q, kv, kv)
+    assert rep.ok and rep.findings == [], rep.summary()
+    out = attention(q, kv, kv)             # empty KV: safe-divide zeros
+    assert out.shape == q.shape
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_ssd_scan_zero_dim_routes_to_fallback():
+    from repro.kernels.ssd_scan import ssd_scan
+    x = jnp.zeros((2, 2, 0, 4), jnp.float32)
+    a_log = jnp.zeros((2, 2, 0), jnp.float32)
+    bc = jnp.zeros((2, 2, 0, 4), jnp.float32)
+    rep = analysis.check(ssd_scan, x, a_log, bc, bc)
+    assert rep.ok and rep.findings == [], rep.summary()
+    out = ssd_scan(x, a_log, bc, bc)
+    assert out.shape == x.shape

@@ -263,6 +263,47 @@ def test_trace_report_validates_both_formats(rng, tmp_path):
     assert r.returncode == 1
 
 
+def test_trace_report_rejects_malformed_roofline_attrs(rng, tmp_path):
+    """PR 9 satellite: --validate cross-checks span flops/bytes against
+    the schema types and rejects non-finite / negative
+    fraction_of_modeled_peak in either exporter format."""
+    tr = _small_trace(rng)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    script = os.path.join(root, "scripts", "trace_report.py")
+    chrome = str(tmp_path / "t.json")
+    obs.save_chrome_trace(tr, chrome)
+    for poison, needle in (({"flops": -5}, "flops"),
+                           ({"bytes": "many"}, "bytes"),
+                           ({"fraction_of_modeled_peak": float("nan")},
+                            "fraction_of_modeled_peak"),
+                           ({"fraction_of_modeled_peak": -0.25},
+                            "fraction_of_modeled_peak")):
+        blob = json.loads(open(chrome).read())
+        spans = [e for e in blob["traceEvents"] if e.get("ph") == "X"]
+        spans[0]["args"].update(poison)
+        # python json writes/reads NaN/Infinity literals (allow_nan)
+        bad = str(tmp_path / "bad_attr.json")
+        with open(bad, "w") as f:
+            json.dump(blob, f)
+        r = subprocess.run([sys.executable, script, "--validate", bad],
+                           capture_output=True, text=True)
+        assert r.returncode == 1, f"{poison} passed validation"
+        assert needle in r.stdout
+    # jsonl leg: same rejection through the attrs dict
+    jsonl = str(tmp_path / "t.jsonl")
+    obs.save_jsonl(tr, jsonl)
+    lines = open(jsonl).read().splitlines()
+    recs = [json.loads(l) for l in lines]
+    ev = next(r for r in recs if r["kind"] == "event")
+    ev["attrs"]["flops"] = float("inf")
+    bad = str(tmp_path / "bad.jsonl")
+    with open(bad, "w") as f:
+        f.write("\n".join(json.dumps(r) for r in recs))
+    r = subprocess.run([sys.executable, script, "--validate", bad],
+                       capture_output=True, text=True)
+    assert r.returncode == 1 and "flops" in r.stdout
+
+
 def test_summary_mentions_routines(rng):
     tr = _small_trace(rng)
     text = obs.summary(tr)

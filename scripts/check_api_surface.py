@@ -139,14 +139,25 @@ EXPECTED_COUNTERS = {
 # finding record layouts that CI artifacts serialize
 EXPECTED_ANALYSIS_ALL = [
     "RULES", "Finding", "AnalysisReport",
-    "check", "check_routine", "check_surface", "surface_routines",
-    "merge_reports", "allow", "Allowlist", "load_allowlist",
+    "check", "check_routine", "check_surface", "check_distributed",
+    "surface_routines", "merge_reports", "allow", "Allowlist",
+    "load_allowlist",
+    "lint_bypass", "collect_bypass_sites", "load_bypass_allowlist",
 ]
 EXPECTED_ANALYSIS_RULES = {
     "KL001": "error", "KL002": "error", "KL003": "error", "KL004": "error",
     "DF001": "error", "DF002": "error", "DF003": "warn", "DF004": "error",
     "CM001": "error", "CM002": "warn", "CM003": "warn",
+    "CC001": "error", "CC002": "error", "CC003": "error",
+    "SH001": "error", "SH002": "error", "SH003": "warn",
+    "BY001": "error",
 }
+# trace-time collective metadata record (spmd_lint's record view): the
+# analyzer, obs counters, and plan_pdgemm all key on these field names
+EXPECTED_COLLECTIVE_RECORD_FIELDS = {"kind", "axis", "size", "src", "hops",
+                                     "per_hop_bytes", "wire_bytes", "info"}
+# the distributed acceptance meshes CI sweeps (degenerate/square/rect)
+EXPECTED_SURFACE_MESHES = ((1, 1), (2, 2), (4, 2))
 EXPECTED_REPORT_FIELDS = {"target", "cases", "findings", "suppressed",
                           "schema_version"}
 EXPECTED_FINDING_FIELDS = {"rule", "severity", "routine", "message",
@@ -340,6 +351,28 @@ def check_analysis(errors) -> None:
                           "(CI artifacts serialize these)")
     if analysis.check_surface.__defaults__ is None:
         errors.append("analysis.check_surface lost its defaulted grid")
+    from repro.analysis import report as _report
+    if tuple(getattr(_report, "SURFACE_MESHES", ())) != \
+            EXPECTED_SURFACE_MESHES:
+        errors.append(f"analysis SURFACE_MESHES drifted: "
+                      f"{getattr(_report, 'SURFACE_MESHES', None)} "
+                      f"!= {EXPECTED_SURFACE_MESHES}")
+    from repro.distributed import collectives as _coll
+    rec = getattr(_coll, "CollectiveRecord", None)
+    if rec is None or not hasattr(_coll, "record_collectives"):
+        errors.append("repro.distributed.collectives lost the "
+                      "CollectiveRecord / record_collectives surface")
+    else:
+        fields = {f.name for f in dataclasses.fields(rec)}
+        if fields != EXPECTED_COLLECTIVE_RECORD_FIELDS:
+            errors.append(f"CollectiveRecord fields drifted: "
+                          f"{sorted(fields)} != "
+                          f"{sorted(EXPECTED_COLLECTIVE_RECORD_FIELDS)}")
+    from repro.tune import dispatch as _td
+    dm = getattr(_td, "DISPATCHED_MODULES", ())
+    if not (isinstance(dm, tuple) and dm):
+        errors.append("tune.dispatch.DISPATCHED_MODULES must stay a "
+                      "non-empty tuple (BY001 provenance)")
 
 
 def main() -> int:

@@ -2,32 +2,36 @@
 """CI gate: trace-time static analysis of the repro.linalg surface.
 
 Sweeps every public (arg-synthesizable) ``repro.linalg`` routine over the
-acceptance grid - policies x dtypes x {no mesh, mesh} - with
-``repro.analysis.check_surface`` and fails (exit 1) on any unsuppressed
+acceptance grid - policies x dtypes x {no mesh, SURFACE_MESHES} plus the
+direct ``pdgemm``/``pdtrsm`` distributed entry points and the BY001
+dispatcher-bypass lint - with ``repro.analysis.check_surface`` /
+``lint_bypass`` and fails (exit 1) on any unsuppressed
 ``error``-severity finding. Warnings print but do not fail. Nothing is
 executed: every case is a ``jax.make_jaxpr`` trace, so the sweep runs in
 seconds on the CI host with no accelerator.
 
-The mesh leg needs ``SURFACE_MESH`` (2x2 = 4) devices; this script forces
-8 host devices via XLA_FLAGS *before* importing jax (same idiom as
+The mesh legs need up to 8 (4x2) devices; this script forces 8 host
+devices via XLA_FLAGS *before* importing jax (same idiom as
 ``scripts/hillclimb.py`` / the distributed test step in
 ``scripts/ci_check.sh``) so CI never records a skipped mesh case.
 
 Usage:
     python scripts/check_static_analysis.py
     python scripts/check_static_analysis.py --routines gemm,qr
-    python scripts/check_static_analysis.py --allowlist allow.json \
-        --out analysis_report.json
+    python scripts/check_static_analysis.py --no-mesh --no-bypass
+    python scripts/check_static_analysis.py --spmd-only
+    python scripts/check_static_analysis.py --write-bypass-allowlist \
+        src/repro/analysis/bypass_allowlist.json
 
-See ``docs/static_analysis.md`` for the rule vocabulary and the
-allowlist format.
+See ``docs/static_analysis.md`` for the rule vocabulary, the allowlist
+format, and the BY001 burn-down workflow.
 """
 import argparse
 import os
 import sys
 import time
 
-# force enough host devices for the mesh leg before jax is imported
+# force enough host devices for the mesh legs before jax is imported
 # anywhere in-process (XLA reads the flag at backend init)
 _FLAG = "--xla_force_host_platform_device_count=8"
 if "xla_force_host_platform_device_count" not in os.environ.get(
@@ -52,17 +56,39 @@ def main() -> int:
     ap.add_argument("--out", metavar="PATH",
                     help="also save the merged AnalysisReport as JSON")
     ap.add_argument("--no-mesh", action="store_true",
-                    help="skip the sharded (mesh) leg of the grid")
+                    help="skip the sharded (mesh + direct distributed) "
+                         "legs of the grid")
+    ap.add_argument("--spmd-only", action="store_true",
+                    help="run only the sharded legs: mesh sweeps over "
+                         "SURFACE_MESHES plus the direct pdgemm/pdtrsm "
+                         "entry points (no base legs, no bypass lint)")
+    ap.add_argument("--no-bypass", action="store_true",
+                    help="skip the BY001 dispatcher-bypass lint")
+    ap.add_argument("--write-bypass-allowlist", metavar="PATH",
+                    help="regenerate the BY001 burn-down allowlist from "
+                         "the current bypass set and exit")
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="print every case as it is checked")
     args = ap.parse_args()
 
     from repro import analysis
+    from repro.analysis import bypass_lint
+
+    if args.write_bypass_allowlist:
+        sites, cases = bypass_lint.collect_bypass_sites(
+            progress=(print if args.verbose else None))
+        path = bypass_lint.save_bypass_allowlist(
+            sites, args.write_bypass_allowlist)
+        broken = [c for c in cases if "error" in c]
+        for c in broken:
+            print(f"  entry {c['entry']} failed: {c['error']}")
+        print(f"bypass allowlist -> {path} ({len(sites)} site(s) from "
+              f"{len(cases) - len(broken)} entry point(s))")
+        return 1 if broken else 0
 
     routines = (args.routines.split(",") if args.routines
                 else analysis.surface_routines())
     allowlist = analysis.load_allowlist(args.allowlist)
-    mesh = None if args.no_mesh else analysis.report.SURFACE_MESH
 
     checked = [0]
 
@@ -71,21 +97,43 @@ def main() -> int:
         if args.verbose:
             print(f"  [{checked[0]:4d}] {case['routine']:>18s} "
                   f"policy={case['policy']} dtype={case['dtype']} "
-                  f"mesh={case['mesh']}")
+                  f"mesh={case['mesh']}"
+                  + (" direct" if case.get("entry") == "direct" else ""))
 
     t0 = time.time()
-    rep = analysis.check_surface(routines=routines, mesh=mesh,
-                                 allowlist=allowlist, progress=progress)
+    meshes = () if args.no_mesh else analysis.report.SURFACE_MESHES
+    rep = analysis.check_surface(
+        routines=None if args.routines is None else routines,
+        meshes=meshes, base_leg=not args.spmd_only,
+        distributed=bool(meshes) and (args.routines is None),
+        allowlist=allowlist, progress=progress)
+    reports = [rep]
+    if not (args.no_bypass or args.spmd_only):
+        reports.append(bypass_lint.lint_bypass())
+    rep = analysis.merge_reports(reports, target="static-analysis")
     dt = time.time() - t0
     if args.out:
         rep.save(args.out)
         print(f"report -> {args.out}")
 
     skipped = [c for c in rep.cases if "skipped" in c]
+    direct = [c for c in rep.cases if c.get("entry") == "direct"]
+    mesh_cases = [c for c in rep.cases if c.get("mesh")]
+    bypass_cases = [c for c in rep.cases if "bypasses" in c]
     print(rep.summary())
     print(f"static analysis: {len(rep.cases)} cases "
           f"({len(skipped)} skipped) over {len(routines)} routines "
           f"in {dt:.1f}s")
+    if mesh_cases:
+        n_meshes = len({tuple(c["mesh"]) for c in mesh_cases})
+        print(f"  distributed: {len(mesh_cases)} sharded case(s) over "
+              f"{n_meshes} mesh shape(s), {len(direct)} direct "
+              f"pdgemm/pdtrsm case(s)")
+    if bypass_cases:
+        n_by = sum(c.get("bypasses", 0) for c in bypass_cases)
+        print(f"  bypass lint: {len(bypass_cases)} entry point(s), "
+              f"{n_by} raw contraction(s) at "
+              f"{len(rep.suppressed)} allowlisted site(s)")
     if skipped:
         # the forced-device preamble should make this impossible in CI
         print(f"  note: {len(skipped)} mesh case(s) skipped: "

@@ -22,6 +22,22 @@ CM      CM001 CM002 CM003      cost-model drift: span flops/bytes
                                annotations vs jaxpr_census counts
                                within declared tolerance; retrace
                                (jit cache key) stability
+CC      CC001 CC002 CC003      collective schedules: ppermute perms are
+                               bijective single-cycle rings; ring
+                               hop counts are size - 1 and match the
+                               jaxpr census and obs counters; on-wire
+                               bytes agree with the counters and
+                               plan_pdgemm's collective term
+SH      SH001 SH002 SH003      sharding discipline: shard_map specs
+                               consistent with shapes and mesh; ragged
+                               batches identity-padded to device-count
+                               multiples; no replication collectives
+                               inside shard_map bodies
+BY      BY001                  dispatcher bypass: raw dot_general/conv
+                               contractions reachable from models,
+                               kernels, or serving that never pass
+                               tune.dispatch.resolve - burn-down
+                               allowlisted, new sites fail CI
 ======  =====================  ========================================
 
 Typical use::
@@ -44,14 +60,18 @@ this module's ``__all__`` are frozen by ``scripts/check_api_surface.py``.
 See ``docs/static_analysis.md`` for the full vocabulary and suppression
 workflow.
 """
-from repro.analysis.report import (AnalysisReport, check, check_routine,
-                                   check_surface, merge_reports,
-                                   surface_routines)
+from repro.analysis.bypass_lint import (collect_bypass_sites, lint_bypass,
+                                        load_bypass_allowlist)
+from repro.analysis.report import (AnalysisReport, check, check_distributed,
+                                   check_routine, check_surface,
+                                   merge_reports, surface_routines)
 from repro.analysis.rules import (RULES, Allowlist, Finding, allow,
                                   load_allowlist)
 
 __all__ = [
     "RULES", "Finding", "AnalysisReport",
-    "check", "check_routine", "check_surface", "surface_routines",
-    "merge_reports", "allow", "Allowlist", "load_allowlist",
+    "check", "check_routine", "check_surface", "check_distributed",
+    "surface_routines", "merge_reports", "allow", "Allowlist",
+    "load_allowlist",
+    "lint_bypass", "collect_bypass_sites", "load_bypass_allowlist",
 ]

@@ -12,12 +12,19 @@ trace produced, and runs the three rule families over the result:
 * dtype-flow lint over the jaxpr (:mod:`repro.analysis.jaxpr_lint`),
 * cost-model drift: the routine's ``_routine`` span annotation
   (``flops``/``bytes``) against jaxpr-derived counts, plus a double-trace
-  retrace-stability probe (CM003).
+  retrace-stability probe (CM003),
+* SPMD lint over the same trace (:mod:`repro.analysis.spmd_lint`):
+  ppermute ring discipline, shard_map spec/shape consistency, and the
+  recorded :class:`~repro.distributed.collectives.CollectiveRecord`
+  schedule cross-checked against the jaxpr hop/byte census, the ``obs``
+  collective counters, and ``plan_pdgemm``'s collective term.
 
 ``check_surface()`` sweeps every public ``repro.linalg`` routine over the
-acceptance grid (policies x dtypes x {no mesh, mesh}) with canonical
-small operands and merges the per-case reports; it is the engine behind
-``scripts/check_static_analysis.py``. See ``docs/static_analysis.md``.
+acceptance grid (policies x dtypes x {no mesh, meshes}) with canonical
+small operands and merges the per-case reports - the distributed leg now
+covers ``SURFACE_MESHES`` plus direct ``pdgemm``/``pdtrsm`` entry points;
+it is the engine behind ``scripts/check_static_analysis.py``. See
+``docs/static_analysis.md``.
 """
 from __future__ import annotations
 
@@ -32,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import arch as _arch
-from repro.analysis import kernel_lint, rules
+from repro.analysis import kernel_lint, rules, spmd_lint
 from repro.analysis.jaxpr_lint import iter_eqns, lint_dtype_flow
 from repro.analysis.rules import (Allowlist, Finding, apply_suppression,
                                   drift_tolerance, load_allowlist,
@@ -134,12 +141,20 @@ def _normalize_jaxpr_str(closed) -> str:
 
 
 def _trace(fn: Callable, args, kw):
-    """(closed_jaxpr, recorded_resolutions) under the canonical lint mode."""
+    """(closed_jaxpr, resolutions, collective_records, counter_delta)
+    under the canonical lint mode. The collective records and the
+    ``collective.*`` counter movement come from the *same* trace as the
+    jaxpr, so spmd_lint can diff declared schedule against traced
+    reality."""
+    from repro.distributed.collectives import record_collectives
+    from repro.obs import counters as _counters
     from repro.tune import dispatch
+    before = _counters.snapshot()
     with _x64():
-        with dispatch.record_resolutions() as rec:
+        with dispatch.record_resolutions() as rec, \
+                record_collectives() as coll:
             closed = jax.make_jaxpr(lambda *a: fn(*a, **kw))(*args)
-    return closed, list(rec)
+    return closed, list(rec), list(coll), _counters.delta(before)
 
 
 # --------------------------- cost-model drift (CM) --------------------------
@@ -275,7 +290,8 @@ def check(fn: Callable, *args, routine: Optional[str] = None,
     cases: List[Dict] = [dict(case or {}, routine=routine,
                               zero_dim=zero_dim)]
     try:
-        closed, resolutions = _trace(fn, args, kw)
+        closed, resolutions, coll_records, counter_delta = \
+            _trace(fn, args, kw)
     except Exception as exc:
         if zero_dim:
             # the PR 8 bug class: an empty operand crashed the kernel
@@ -292,8 +308,11 @@ def check(fn: Callable, *args, routine: Optional[str] = None,
         resolutions, mach, routine=routine))
     findings.extend(lint_dtype_flow(closed, routine=routine,
                                     accum_dtype=accum_dtype))
+    findings.extend(spmd_lint.lint_spmd(closed, coll_records,
+                                        counter_delta=counter_delta,
+                                        routine=routine))
     if retrace:
-        closed2, _ = _trace(fn, args, kw)
+        closed2, _, _, _ = _trace(fn, args, kw)
         if _normalize_jaxpr_str(closed) != _normalize_jaxpr_str(closed2):
             findings.append(make_finding(
                 "CM003", "two same-shape traces produced different "
@@ -398,6 +417,74 @@ def _cast_args(args, kw, dtype):
 SURFACE_POLICIES = ("reference", "model", "tuned")
 SURFACE_DTYPES = ("float32", "bfloat16", "float64")
 SURFACE_MESH = (2, 2)
+# the acceptance meshes of tests/test_distributed_blas.py: degenerate,
+# square, and rectangular - the shapes that exercise distinct SUMMA
+# schedules (0, 8, and 32 hops per pdgemm)
+SURFACE_MESHES = ((1, 1), (2, 2), (4, 2))
+# distributed entry points checked directly (not via the linalg context):
+# name -> callable(mesh, policy) applied to canonical operands
+DISTRIBUTED_ROUTINES = ("pdgemm", "pdtrsm")
+
+
+def _distributed_args(name: str) -> Tuple[tuple, dict]:
+    """Canonical float32 operands for one direct distributed entry."""
+    r = _rng()
+    if name == "pdgemm":
+        return (_mat(r, _M, _K), _mat(r, _K, _N)), {}
+    if name == "pdtrsm":
+        t = np.tril(_mat(r, _N, _N)) + _N * np.eye(_N, dtype=np.float32)
+        return (t.astype(np.float32), _mat(r, _N, _K)), {}
+    raise KeyError(name)
+
+
+def check_distributed(meshes: Sequence[Tuple[int, int]] = SURFACE_MESHES,
+                      policies: Sequence[str] = SURFACE_POLICIES,
+                      dtypes: Sequence[str] = SURFACE_DTYPES,
+                      allowlist: Optional[Allowlist] = None,
+                      machine=None, progress: Optional[Callable] = None
+                      ) -> AnalysisReport:
+    """Sweep the direct ``pdgemm``/``pdtrsm`` entry points.
+
+    Unlike the ``linalg.use(mesh=...)`` legs of :func:`check_surface`
+    (which route the *single-device* surface through the context), this
+    calls :mod:`repro.blas.distributed` directly with a real Mesh, so the
+    SUMMA schedule - ppermute rings, recorded hops/bytes, plan_pdgemm's
+    collective term - is on the traced path for the CC/SH rules. Meshes
+    needing more devices than the backend has record skipped cases.
+    """
+    import functools
+    from repro.blas import distributed as _dist
+    reports: List[AnalysisReport] = []
+    for mesh in meshes:
+        px, py = int(mesh[0]), int(mesh[1])
+        ndev = px * py
+        mesh_ok = len(jax.devices()) >= ndev
+        mesh_obj = _dist.make_blas_mesh(px, py) if mesh_ok else None
+        for name in DISTRIBUTED_ROUTINES:
+            base = _distributed_args(name)
+            fn = getattr(_dist, name)
+            for dtype in dtypes:
+                with _x64():
+                    args, kw = _cast_args(*base, jnp.dtype(dtype))
+                for policy in policies:
+                    case = {"routine": name, "policy": policy,
+                            "dtype": dtype, "mesh": [px, py],
+                            "entry": "direct"}
+                    if not mesh_ok:
+                        reports.append(AnalysisReport(
+                            name, [dict(case,
+                                        skipped=f"needs {ndev} devices")],
+                            [], []))
+                        continue
+                    if progress is not None:
+                        progress(case)
+                    call = functools.partial(fn, mesh=mesh_obj,
+                                             policy=policy)
+                    reports.append(check(
+                        call, *args, routine=name, machine=machine,
+                        allowlist=allowlist, drift=False, retrace=False,
+                        case=case, **kw))
+    return merge_reports(reports, target="distributed-surface")
 
 
 def surface_routines() -> List[str]:
@@ -411,21 +498,38 @@ def check_surface(routines: Optional[Sequence[str]] = None,
                   dtypes: Sequence[str] = SURFACE_DTYPES,
                   mesh: Optional[Tuple[int, int]] = SURFACE_MESH,
                   allowlist: Optional[Allowlist] = None,
-                  machine=None, progress: Optional[Callable] = None
-                  ) -> AnalysisReport:
+                  machine=None, progress: Optional[Callable] = None,
+                  meshes: Optional[Sequence[Tuple[int, int]]] = None,
+                  base_leg: bool = True,
+                  distributed: Optional[bool] = None) -> AnalysisReport:
     """Sweep the public surface over the acceptance grid and merge.
 
-    Grid: routines x policies x dtypes x {no mesh, mesh}. The mesh leg
-    needs ``mesh[0] * mesh[1]`` devices and records a skipped case when
-    the backend has fewer (``scripts/check_static_analysis.py`` re-execs
-    itself with forced host devices so CI never skips it). Drift and
-    retrace probes run on the no-mesh legs only: annotations are
+    Grid: routines x policies x dtypes x {no mesh, meshes}, plus (for a
+    full default sweep) the direct distributed entry points of
+    :func:`check_distributed`. ``mesh`` is the legacy single-mesh knob:
+    left at its default it expands to ``SURFACE_MESHES``; set explicitly
+    it pins exactly that mesh (``None`` = no mesh legs). ``meshes``
+    overrides both. A mesh leg needs ``px * py`` devices and records a
+    skipped case when the backend has fewer
+    (``scripts/check_static_analysis.py`` re-execs itself with forced
+    host devices so CI never skips it). ``base_leg=False`` drops the
+    no-mesh legs (the SPMD-only sweep); ``distributed`` defaults to True
+    exactly for unrestricted default-grid sweeps. Drift and retrace
+    probes run on the no-mesh legs only: annotations are
     mesh-independent, and the census does not descend into shard_map.
     """
     from repro import linalg
     names = list(routines) if routines is not None else surface_routines()
-    mesh_ok = mesh is not None and \
-        len(jax.devices()) >= int(np.prod(mesh))
+    if meshes is None:
+        if mesh is None:
+            meshes = ()
+        elif tuple(mesh) == SURFACE_MESH:
+            meshes = SURFACE_MESHES
+        else:
+            meshes = (tuple(mesh),)
+    meshes = tuple(tuple(m) for m in meshes)
+    if distributed is None:
+        distributed = routines is None and bool(meshes)
     reports: List[AnalysisReport] = []
     for name in names:
         base = _surface_args(name)
@@ -436,15 +540,16 @@ def check_surface(routines: Optional[Sequence[str]] = None,
             with _x64():
                 args, kw = _cast_args(*base, jnp.dtype(dtype))
             for policy in policies:
-                legs = [None] + ([mesh] if mesh is not None else [])
+                legs = ([None] if base_leg else []) + list(meshes)
                 for leg in legs:
                     case = {"routine": name, "policy": policy,
                             "dtype": dtype,
                             "mesh": None if leg is None else list(leg)}
-                    if leg is not None and not mesh_ok:
+                    if leg is not None and \
+                            len(jax.devices()) < int(np.prod(leg)):
                         reports.append(AnalysisReport(
                             name, [dict(case, skipped="needs "
-                                        f"{int(np.prod(mesh))} devices")],
+                                        f"{int(np.prod(leg))} devices")],
                             [], []))
                         continue
                     if progress is not None:
@@ -454,4 +559,8 @@ def check_surface(routines: Optional[Sequence[str]] = None,
                             fn, *args, machine=machine, allowlist=allowlist,
                             drift=(leg is None and policy == "reference"
                                    ), retrace=leg is None, case=case, **kw))
+    if distributed and meshes:
+        reports.append(check_distributed(
+            meshes=meshes, policies=policies, dtypes=dtypes,
+            allowlist=allowlist, machine=machine, progress=progress))
     return merge_reports(reports, target="linalg-surface")

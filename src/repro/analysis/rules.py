@@ -96,6 +96,42 @@ RULES: "OrderedDict[str, Rule]" = OrderedDict((r.id, r) for r in (
          "Tracing the same routine twice with identical shapes/dtypes "
          "must produce the same jaxpr - a drifting trace means an "
          "unstable jit cache key (retrace per call)."),
+    Rule("CC001", "collective-ring-permutation", ERROR,
+         "Every ppermute permutation must be a bijective single-cycle "
+         "ring over its mesh axis: a self-send, duplicate endpoint, "
+         "partial coverage, or multi-cycle perm deadlocks or drops "
+         "panels at runtime instead of failing a test."),
+    Rule("CC002", "collective-hop-count", ERROR,
+         "Ring-broadcast hop accounting must match the traced schedule: "
+         "every recorded ring_bcast performs exactly size - 1 ppermute "
+         "hops on its axis, and the jaxpr hop census must equal the "
+         "recorded and counter totals."),
+    Rule("CC003", "collective-bytes-drift", ERROR,
+         "Jaxpr-derived on-wire collective bytes must agree with the obs "
+         "collective counters and with plan_pdgemm's collective term "
+         "within the declared comm tolerance - the distributed sibling "
+         "of CM001."),
+    Rule("SH001", "shardmap-spec-shape", ERROR,
+         "shard_map in/out specs must be consistent with operand shapes "
+         "and the mesh: every named dim divisible by its mesh-axes "
+         "extent, every referenced axis present on the mesh, no spec "
+         "entry beyond the operand rank."),
+    Rule("SH002", "shardmap-pad-discipline", ERROR,
+         "Ragged batches sharded over a mesh must be identity-padded to "
+         "a device-count multiple (minimal pad, invertible filler) - the "
+         "lapack.distributed discipline that keeps every padded item "
+         "factorizable."),
+    Rule("SH003", "shardmap-replication", WARN,
+         "No unintended replication of sharded operands: an all_gather / "
+         "all_to_all inside a shard_map body materializes a sharded "
+         "operand on every device, defeating the sharding its specs "
+         "declared."),
+    Rule("BY001", "dispatcher-bypass", ERROR,
+         "Raw dot_general/conv contractions reachable from the model "
+         "zoo, the hand-rolled attention/SSD kernels, or the serving "
+         "path that never pass through tune.dispatch.resolve bypass the "
+         "dispatcher; every such site must be on the committed burn-down "
+         "allowlist (new sites fail CI)."),
 ))
 
 
@@ -134,6 +170,16 @@ DRIFT_BYTES_TOL: Dict[str, float] = {
     # syrk annotates A only, the boundary carries the n x n product
     # (0.60); qr's boundary carries Q and R (0.67)
     "syrk": 0.72, "qr": 0.78, "batched_qr": 0.72,
+}
+
+
+DRIFT_COMM_TOL: Dict[str, float] = {
+    # the three sides of CC003 (traced ppermute bytes, obs counters,
+    # plan_pdgemm's collective term) agree *exactly* on the direct pdgemm
+    # path today - measured drift 0.0 across meshes {(1,1),(2,2),(4,2)} x
+    # {f32,bf16,f64}. The band is slack for rounding in future
+    # overlap/2.5D schedules, not for today's code.
+    "default": 0.02,
 }
 
 

@@ -1,0 +1,369 @@
+"""SPMD lint over traced jaxprs and collective records (CC/SH rules).
+
+PR 9's rule families stop at the device boundary; this pass looks inside
+``shard_map``. Two complementary views, same pattern as
+:mod:`repro.analysis.kernel_lint`:
+
+* **jaxpr view** - walk the trace tracking the enclosing shard_map's
+  mesh axis sizes, and check every ``ppermute`` permutation is a
+  bijective single-cycle ring on its axis (CC001), every ``shard_map``
+  eqn's in/out names are consistent with operand shapes and the mesh
+  (SH001), and no collective inside a shard_map body re-replicates a
+  sharded operand (SH003 - ``all_gather``/``all_to_all``).
+* **record view** - the :class:`~repro.distributed.collectives
+  .CollectiveRecord` stream ``ring_bcast``/``pdgemm``/``_pad_batch``
+  emit at trace time, cross-checked against the jaxpr: hop census vs
+  recorded hops and the ``collective.hops`` counter (CC002), on-wire
+  bytes vs the ``collective.bytes`` counter *and* ``plan_pdgemm``'s
+  collective term (CC003 - comm-cost drift, the distributed sibling of
+  CM001), and ragged-batch identity-pad discipline (SH002).
+
+Everything is trace-only: the records are emitted while shard_map traces
+and the jaxpr census never executes, so the whole distributed leg of
+``check_surface`` runs on a CPU host with forced devices.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.analysis import rules
+from repro.analysis.jaxpr_lint import _source_location, _subjaxprs
+from repro.analysis.rules import Finding, make_finding
+
+# collectives that materialize a sharded operand on every participant
+REPLICATING_PRIMITIVES = ("all_gather", "all_to_all")
+
+
+def _aval_bytes(aval) -> int:
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    n = 1
+    for d in shape:
+        n *= int(d)
+    try:
+        return n * jnp.dtype(dtype).itemsize
+    except TypeError:
+        return 0
+
+
+def _mesh_axis_sizes(mesh) -> Dict[str, int]:
+    """{axis: size} from a Mesh (or any object with a .shape mapping)."""
+    try:
+        return {str(a): int(s) for a, s in dict(mesh.shape).items()}
+    except Exception:
+        return {}
+
+
+def iter_spmd_eqns(jaxpr, axis_env: Optional[Mapping[str, int]] = None,
+                   in_shard_map: bool = False
+                   ) -> Iterator[Tuple[object, Dict[str, int], bool]]:
+    """Yield (eqn, mesh-axis env, inside-shard_map) over all sub-jaxprs.
+
+    The axis env accumulates the ``mesh`` params of enclosing shard_map
+    eqns, so a ``ppermute`` deep inside pjit/scan bodies still knows the
+    size of the axis it permutes over."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)           # accept ClosedJaxpr
+    env = dict(axis_env or {})
+    for eqn in jaxpr.eqns:
+        yield eqn, env, in_shard_map
+        inner_env = env
+        inner_sm = in_shard_map
+        if eqn.primitive.name == "shard_map":
+            inner_sm = True
+            mesh = eqn.params.get("mesh")
+            if mesh is not None:
+                inner_env = dict(env)
+                inner_env.update(_mesh_axis_sizes(mesh))
+        for value in eqn.params.values():
+            for sub in _subjaxprs(value):
+                yield from iter_spmd_eqns(sub, inner_env, inner_sm)
+
+
+def _axis_names(eqn) -> Tuple[str, ...]:
+    axes = eqn.params.get("axis_name")
+    if axes is None:
+        return ()
+    if isinstance(axes, (tuple, list)):
+        return tuple(str(a) for a in axes)
+    return (str(axes),)
+
+
+def _axis_key(eqn) -> str:
+    return ",".join(_axis_names(eqn))
+
+
+# ------------------------------- CC001 --------------------------------------
+
+def lint_ppermute_eqn(eqn, axis_env: Mapping[str, int],
+                      routine: Optional[str] = None) -> List[Finding]:
+    """CC001: the permutation must be a bijective single-cycle ring."""
+    findings: List[Finding] = []
+    loc = _source_location(eqn)
+    axes = _axis_names(eqn)
+    size = 1
+    size_known = bool(axes)
+    for a in axes:
+        if a in axis_env:
+            size *= axis_env[a]
+        else:
+            size_known = False
+    try:
+        perm = [(int(s), int(d)) for s, d in eqn.params.get("perm", ())]
+    except Exception:
+        return findings                      # unknown param layout: skip
+
+    def hit(msg):
+        findings.append(make_finding(
+            "CC001", f"ppermute over axis {_axis_key(eqn)!r}: {msg} "
+            f"(perm={perm})", routine=routine, location=loc))
+
+    self_sends = [p for p in perm if p[0] == p[1]]
+    srcs = [s for s, _ in perm]
+    dsts = [d for _, d in perm]
+    if self_sends:
+        hit(f"self-send pair(s) {self_sends} - a device sending to "
+            "itself deadlocks the ring")
+        return findings
+    if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
+        hit("duplicate source or destination - not a bijection")
+        return findings
+    if size_known and size > 1 and (set(srcs) != set(range(size))
+                                    or set(dsts) != set(range(size))):
+        hit(f"covers {len(perm)} of {size} ring members - a device "
+            "outside the perm waits forever")
+        return findings
+    if perm:
+        # bijective and covering: must be ONE cycle, not several
+        nxt = dict(perm)
+        seen = {perm[0][0]}
+        cur = nxt[perm[0][0]]
+        while cur not in seen and cur in nxt:
+            seen.add(cur)
+            cur = nxt[cur]
+        if len(seen) != len(perm):
+            hit(f"decomposes into multiple cycles ({len(seen)} of "
+                f"{len(perm)} members reachable from {perm[0][0]})")
+    return findings
+
+
+# ------------------------------- SH001 --------------------------------------
+
+def _spec_entries(names) -> List[Tuple[int, Tuple[str, ...]]]:
+    """Normalize one shard_map in/out names entry ({dim: axes}) to a
+    [(dim, axes tuple)] list; unknown layouts come back empty."""
+    out: List[Tuple[int, Tuple[str, ...]]] = []
+    try:
+        for dim, axes in dict(names).items():
+            if isinstance(axes, (tuple, list)):
+                out.append((int(dim), tuple(str(a) for a in axes)))
+            else:
+                out.append((int(dim), (str(axes),)))
+    except Exception:
+        return []
+    return out
+
+
+def lint_shard_map_eqn(eqn, routine: Optional[str] = None) -> List[Finding]:
+    """SH001: in/out names consistent with operand shapes and the mesh."""
+    findings: List[Finding] = []
+    loc = _source_location(eqn)
+    mesh_sizes = _mesh_axis_sizes(eqn.params.get("mesh"))
+
+    def check_side(side: str, names_seq, vars_seq):
+        avals = [getattr(v, "aval", None) for v in vars_seq]
+        for i, names in enumerate(names_seq or ()):
+            aval = avals[i] if i < len(avals) else None
+            shape = getattr(aval, "shape", None)
+            for dim, axes in _spec_entries(names):
+                missing = [a for a in axes if a not in mesh_sizes]
+                if missing:
+                    findings.append(make_finding(
+                        "SH001", f"{side} spec of operand {i} names mesh "
+                        f"axes {missing} absent from the mesh "
+                        f"(axes={sorted(mesh_sizes)})",
+                        routine=routine, location=loc))
+                    continue
+                extent = 1
+                for a in axes:
+                    extent *= mesh_sizes[a]
+                if shape is None:
+                    continue
+                if dim >= len(shape):
+                    findings.append(make_finding(
+                        "SH001", f"{side} spec of operand {i} shards dim "
+                        f"{dim} of a rank-{len(shape)} operand "
+                        f"{tuple(shape)}", routine=routine, location=loc))
+                elif extent > 0 and int(shape[dim]) % extent != 0:
+                    findings.append(make_finding(
+                        "SH001", f"{side} spec of operand {i}: dim {dim} "
+                        f"({int(shape[dim])}) not divisible by mesh axes "
+                        f"{list(axes)} extent {extent} (shape "
+                        f"{tuple(shape)})", routine=routine, location=loc))
+
+    check_side("in", eqn.params.get("in_names"), eqn.invars)
+    check_side("out", eqn.params.get("out_names"), eqn.outvars)
+    return findings
+
+
+# --------------------------- jaxpr-view driver ------------------------------
+
+def lint_collective_jaxpr(closed_jaxpr, routine: Optional[str] = None
+                          ) -> List[Finding]:
+    """CC001 + SH001 + SH003 over one trace (and all nested jaxprs)."""
+    findings: List[Finding] = []
+    for eqn, env, in_sm in iter_spmd_eqns(closed_jaxpr):
+        name = eqn.primitive.name
+        if name == "shard_map":
+            findings.extend(lint_shard_map_eqn(eqn, routine=routine))
+        elif name == "ppermute":
+            findings.extend(lint_ppermute_eqn(eqn, env, routine=routine))
+        elif name in REPLICATING_PRIMITIVES and in_sm:
+            op_bytes = sum(_aval_bytes(getattr(v, "aval", None))
+                           for v in eqn.invars)
+            findings.append(make_finding(
+                "SH003", f"{name!r} over axis {_axis_key(eqn)!r} inside a "
+                f"shard_map body replicates a sharded operand "
+                f"({op_bytes} B per shard) onto every device",
+                routine=routine, location=_source_location(eqn)))
+    return findings
+
+
+# --------------------------- record-view driver -----------------------------
+
+def derived_comm(closed_jaxpr) -> Tuple[int, int, Dict[str, int]]:
+    """Jaxpr-side comm census: (total ppermute hops, total on-wire bytes,
+    per-axis hop counts). Each ppermute eqn is one hop carrying its input
+    aval bytes per link - exactly :func:`ring_bcast_bytes`' accounting."""
+    hops = 0
+    wire_bytes = 0
+    per_axis: Dict[str, int] = {}
+    for eqn, _, _ in iter_spmd_eqns(closed_jaxpr):
+        if eqn.primitive.name != "ppermute":
+            continue
+        hops += 1
+        wire_bytes += sum(_aval_bytes(getattr(v, "aval", None))
+                          for v in eqn.invars)
+        key = _axis_key(eqn)
+        per_axis[key] = per_axis.get(key, 0) + 1
+    return hops, wire_bytes, per_axis
+
+
+def _planned_bytes(record) -> Optional[int]:
+    """plan_pdgemm's collective term for one "pdgemm" schedule record."""
+    info = record.info or {}
+    try:
+        from repro.core.codesign import plan_pdgemm
+        plan = plan_pdgemm(info["m"], info["n"], info["k"],
+                           info["px"], info["py"],
+                           dtype_bytes=info["itemsize"])
+        return int(plan.collective_bytes)
+    except Exception:
+        return None
+
+
+def lint_collective_records(closed_jaxpr, records: Sequence,
+                            counter_delta: Optional[Mapping[str, int]] = None,
+                            routine: Optional[str] = None) -> List[Finding]:
+    """CC002/CC003/SH002 - recorded schedule vs traced jaxpr vs counters.
+
+    ``records`` is the :func:`repro.distributed.collectives
+    .record_collectives` capture of the same trace that produced
+    ``closed_jaxpr``; ``counter_delta`` the ``obs`` counter movement
+    across it (``collective.hops`` / ``collective.bytes``)."""
+    findings: List[Finding] = []
+    rings = [r for r in records if getattr(r, "kind", None) == "ring_bcast"]
+    scheds = [r for r in records if getattr(r, "kind", None) == "pdgemm"]
+    pads = [r for r in records if getattr(r, "kind", None) == "pad_batch"]
+
+    # SH002: every declared ragged-batch pad keeps the discipline
+    for p in pads:
+        info = p.info or {}
+        batch = int(info.get("batch", 0))
+        pad = int(info.get("pad", 0))
+        ndev = int(p.size)
+        if ndev > 0 and (batch + pad) % ndev != 0:
+            findings.append(make_finding(
+                "SH002", f"batch {batch} padded by {pad} is not a "
+                f"multiple of the {ndev}-device mesh", routine=routine))
+        elif pad >= ndev > 0:
+            findings.append(make_finding(
+                "SH002", f"pad {pad} is not minimal for batch {batch} "
+                f"over {ndev} devices", routine=routine))
+        if pad > 0 and not info.get("identity", False):
+            findings.append(make_finding(
+                "SH002", f"batch pad of {pad} items is not identity "
+                "filler - padded items are not safely factorizable",
+                routine=routine))
+
+    d_hops, d_bytes, per_axis = derived_comm(closed_jaxpr)
+
+    # CC002: per-record hop law, then per-axis and total census agreement
+    rec_hops = 0
+    rec_by_axis: Dict[str, int] = {}
+    for r in rings:
+        want = max(int(r.size) - 1, 0)
+        if int(r.hops) != want:
+            findings.append(make_finding(
+                "CC002", f"ring_bcast over axis {r.axis!r} (size "
+                f"{r.size}) recorded {r.hops} hops; a SUMMA ring step "
+                f"must take exactly size - 1 = {want}", routine=routine))
+        rec_hops += int(r.hops)
+        key = str(r.axis) if r.axis is not None else ""
+        rec_by_axis[key] = rec_by_axis.get(key, 0) + int(r.hops)
+    if rings or d_hops:
+        for axis in sorted(set(rec_by_axis) | set(per_axis)):
+            got, want = per_axis.get(axis, 0), rec_by_axis.get(axis, 0)
+            if got != want:
+                findings.append(make_finding(
+                    "CC002", f"axis {axis!r}: traced {got} ppermute "
+                    f"hop(s) but the recorded schedule declares {want}",
+                    routine=routine))
+    if counter_delta is not None and rec_hops != int(
+            counter_delta.get("collective.hops", 0)):
+        findings.append(make_finding(
+            "CC002", f"collective.hops counter moved "
+            f"{counter_delta.get('collective.hops', 0)} but the recorded "
+            f"schedule declares {rec_hops} hop(s)", routine=routine))
+
+    # CC003: three-way byte agreement (jaxpr vs counters vs plan_pdgemm)
+    tol = rules.drift_tolerance(rules.DRIFT_COMM_TOL, routine)
+
+    def _drift(a: float, b: float) -> float:
+        if a == b:
+            return 0.0
+        return abs(a - b) / max(abs(a), abs(b), 1.0)
+
+    if counter_delta is not None and (rings or d_bytes):
+        c_bytes = int(counter_delta.get("collective.bytes", 0))
+        if _drift(d_bytes, c_bytes) > tol:
+            findings.append(make_finding(
+                "CC003", f"traced on-wire bytes {d_bytes} vs "
+                f"collective.bytes counter {c_bytes}: drift "
+                f"{_drift(d_bytes, c_bytes):.2f} > declared tolerance "
+                f"{tol:.2f}", routine=routine))
+    if scheds:
+        planned = [_planned_bytes(r) for r in scheds]
+        if None not in planned:
+            total = sum(planned)
+            if _drift(d_bytes, total) > tol:
+                findings.append(make_finding(
+                    "CC003", f"traced on-wire bytes {d_bytes} vs "
+                    f"plan_pdgemm collective term {total}: drift "
+                    f"{_drift(d_bytes, total):.2f} > declared tolerance "
+                    f"{tol:.2f}", routine=routine))
+    return findings
+
+
+def lint_spmd(closed_jaxpr, records: Sequence = (),
+              counter_delta: Optional[Mapping[str, int]] = None,
+              routine: Optional[str] = None) -> List[Finding]:
+    """All CC/SH rules for one trace + its collective-record capture."""
+    findings = lint_collective_jaxpr(closed_jaxpr, routine=routine)
+    findings.extend(lint_collective_records(
+        closed_jaxpr, records, counter_delta=counter_delta,
+        routine=routine))
+    return findings

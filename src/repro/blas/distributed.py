@@ -35,7 +35,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.distributed.collectives import ring_bcast
+from repro.distributed.collectives import (CollectiveRecord, emit_record,
+                                           ring_bcast)
 
 MESH_AXES = ("x", "y")
 
@@ -127,6 +128,14 @@ def pdgemm(a: jnp.ndarray, b: jnp.ndarray, mesh: Mesh,
     kf = -(-max(k, 1) // steps)
     a_p = _pad2(a, px, steps * kf)
     b_p = _pad2(b, steps * kf, py)
+    # declare the whole schedule for the static analyzer: the geometry
+    # here is exactly what plan_pdgemm prices, so spmd_lint can re-derive
+    # the collective term and diff it against the traced ppermutes (CC003)
+    emit_record(CollectiveRecord(
+        kind="pdgemm", size=steps,
+        info={"m": m, "n": n, "k": k, "px": px, "py": py, "kf": kf,
+              "itemsize": jnp.dtype(a.dtype).itemsize,
+              "dtype": jnp.dtype(a.dtype).name}))
     inner = functools.partial(_summa_inner, px=px, py=py, kf=kf, res=res,
                               interpret=interpret)
     f = shard_map(inner, mesh=mesh,

@@ -18,8 +18,11 @@ Two shard_map-level building blocks the pjit path cannot express on its own:
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import functools
-from typing import Tuple
+from contextvars import ContextVar
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +34,64 @@ from repro import obs as _obs
 from repro.obs import counters as _counters
 
 Q_BLOCK = 256
+
+
+# ---------------------------------------------------------------------------
+# trace-time collective metadata (the spmd_lint "record view")
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveRecord:
+    """One trace-time communication/padding fact, kind-tagged.
+
+    The distributed sibling of :class:`repro.tune.dispatch.Resolution`:
+    everything here is computed in Python while shard_map traces, so a
+    ``jax.make_jaxpr`` pass captures the full declared schedule without
+    executing anything. ``repro.analysis.spmd_lint`` cross-checks these
+    declarations against the jaxpr it traced (rules CC002/CC003/SH002).
+
+    kinds: ``"ring_bcast"`` (one SUMMA panel movement - axis/size/src/
+    hops/bytes), ``"pdgemm"`` (one whole pdgemm schedule - the global
+    problem geometry ``info`` carries lets the analyzer re-price
+    ``plan_pdgemm``'s collective term), ``"pad_batch"`` (one ragged-batch
+    identity pad - ``info`` carries batch/pad/identity).
+    """
+
+    kind: str
+    axis: Optional[str] = None
+    size: int = 1
+    src: int = 0
+    hops: int = 0
+    per_hop_bytes: int = 0
+    wire_bytes: int = 0
+    info: Optional[Dict] = None
+
+
+_RECORD: "ContextVar[Optional[List[CollectiveRecord]]]" = ContextVar(
+    "collective_record", default=None)
+
+
+@contextlib.contextmanager
+def record_collectives():
+    """Collect every CollectiveRecord produced inside the scope.
+
+    Mirrors :func:`repro.tune.dispatch.record_resolutions`: the records
+    are emitted at trace time, so wrapping a ``jax.make_jaxpr`` call
+    captures the declared collective schedule with no execution."""
+    rec: List[CollectiveRecord] = []
+    token = _RECORD.set(rec)
+    try:
+        yield rec
+    finally:
+        _RECORD.reset(token)
+
+
+def emit_record(rec: CollectiveRecord) -> None:
+    """Append to the active record_collectives() scope, if any (no-op
+    otherwise - the hot path stays a single ContextVar read)."""
+    lst = _RECORD.get()
+    if lst is not None:
+        lst.append(rec)
 
 
 # ---------------------------------------------------------------------------
@@ -61,6 +122,9 @@ def ring_bcast(val: jnp.ndarray, axis_name: str, size: int,
     re-executions - see ``docs/observability.md``.
     """
     if size <= 1:
+        emit_record(CollectiveRecord(
+            kind="ring_bcast", axis=str(axis_name), size=int(size),
+            src=int(src)))
         return val
     hops = size - 1
     n_elems = 1
@@ -70,6 +134,12 @@ def ring_bcast(val: jnp.ndarray, axis_name: str, size: int,
     wire_bytes = ring_bcast_bytes(panel_bytes, size)
     _counters.inc("collective.hops", hops)
     _counters.inc("collective.bytes", wire_bytes)
+    emit_record(CollectiveRecord(
+        kind="ring_bcast", axis=str(axis_name), size=int(size),
+        src=int(src), hops=hops, per_hop_bytes=panel_bytes,
+        wire_bytes=wire_bytes,
+        info={"shape": list(val.shape),
+              "dtype": jnp.dtype(val.dtype).name}))
     if _obs.enabled():
         attrs = {"axis": axis_name, "size": size, "src": int(src),
                  "hops": hops, "per_hop_bytes": panel_bytes,

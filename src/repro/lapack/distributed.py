@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.distributed.collectives import CollectiveRecord, emit_record
 from repro.lapack import batched as _batched
 from repro.lapack.batched import FactorizationResult, _resolve_block
 from repro.tune.policy import resolve_policy
@@ -44,6 +45,11 @@ def _pad_batch(a: jnp.ndarray, ndev: int) -> Tuple[jnp.ndarray, int]:
     """Pad the (B, m, n) batch to a device-count multiple with identities."""
     b = a.shape[0]
     pad = (-b) % ndev
+    # declare the pad for spmd_lint's SH002 discipline check: identity
+    # filler (factorizable), minimal, and device-count divisible
+    emit_record(CollectiveRecord(
+        kind="pad_batch", size=ndev,
+        info={"batch": b, "pad": pad, "identity": True}))
     if pad == 0:
         return a, b
     eye = jnp.broadcast_to(jnp.eye(a.shape[1], a.shape[2], dtype=a.dtype),
@@ -177,6 +183,9 @@ def batched_solve(res: FactorizationResult, b: jnp.ndarray, mesh: Mesh,
     pad = (-b0) % ndev
     vec = b.ndim == 2
     rhs = b[:, :, None] if vec else b
+    emit_record(CollectiveRecord(
+        kind="pad_batch", size=ndev,
+        info={"batch": b0, "pad": pad, "identity": True}))
     if pad:
         m_f, n_f = res.factors.shape[1], res.factors.shape[2]
         eye = jnp.broadcast_to(

@@ -42,6 +42,22 @@ OPS = ("gemm", "gemv", "trsm", "syrk", "pdgemm", "gemm+epilogue",
        "trsm+gemm")
 FUSED_OPS = ("gemm+epilogue", "trsm+gemm")
 
+# Resolution provenance for the dispatcher-bypass lint (BY001,
+# repro.analysis.bypass_lint): every contraction traced from a source
+# file under one of these prefixes reached ``resolve()``/``dispatch()``
+# by construction - the BLAS/LAPACK drivers and the kernels this module
+# launches are the *governed* set. A raw dot_general/conv whose source
+# frame lies anywhere else (models/, launch/, the hand-rolled attention
+# and SSD kernels) bypassed the dispatcher and must be on the committed
+# burn-down allowlist. Frozen by scripts/check_api_surface.py.
+DISPATCHED_MODULES = (
+    "repro/blas/", "repro/lapack/", "repro/linalg/", "repro/tune/",
+    "repro/core/",
+    "repro/kernels/ops.py", "repro/kernels/ref.py", "repro/kernels/gemm.py",
+    "repro/kernels/fused.py", "repro/kernels/dotp.py",
+    "repro/kernels/compat.py",
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class Resolution:

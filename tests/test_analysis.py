@@ -47,7 +47,10 @@ def test_rule_vocabulary_frozen():
     expect = {"KL001": "error", "KL002": "error", "KL003": "error",
               "KL004": "error", "DF001": "error", "DF002": "error",
               "DF003": "warn", "DF004": "error", "CM001": "error",
-              "CM002": "warn", "CM003": "warn"}
+              "CM002": "warn", "CM003": "warn",
+              "CC001": "error", "CC002": "error", "CC003": "error",
+              "SH001": "error", "SH002": "error", "SH003": "warn",
+              "BY001": "error"}
     assert {r.id: r.severity for r in analysis.RULES.values()} == expect
     # IDs are the dict keys, in family order
     assert list(analysis.RULES) == list(expect)
